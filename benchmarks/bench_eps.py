@@ -1,0 +1,33 @@
+"""Paper Fig. 4(d)(e)(f): impact of eps, minpts and size fixed.
+
+Paper finding reproduced: tree methods are insensitive to eps; the
+G-DBSCAN-style adjacency baseline degrades as eps (and the edge count)
+grows.
+"""
+from __future__ import annotations
+
+from repro.data import pointclouds
+from .common import algorithms, emit, time_fn
+
+# paper: minpts = 500 / 50 / 100 for NGSIM / PortoTaxi / 3DRoad
+SETUPS = [
+    ("ngsim_like", 100, [0.0025, 0.005, 0.01, 0.02]),
+    ("portotaxi_like", 50, [0.005, 0.01, 0.02, 0.04]),
+    ("road3d_like", 100, [0.02, 0.04, 0.08, 0.16]),
+]
+
+
+def run(n: int = 4096, quick: bool = False):
+    setups = SETUPS[:1] if quick else SETUPS
+    for dset, minpts, eps_list in setups:
+        pts = pointclouds.load(dset, n)
+        for eps in (eps_list[:2] if quick else eps_list):
+            for name, fn in algorithms(include_gdbscan=(n <= 8192)).items():
+                dt, res = time_fn(fn, pts, eps, minpts,
+                                  warmup=1, repeat=1 if quick else 3)
+                emit(f"eps/{dset}/e{eps}/{name}", dt * 1e6,
+                     f"clusters={res.n_clusters}")
+
+
+if __name__ == "__main__":
+    run()

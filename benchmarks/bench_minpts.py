@@ -1,0 +1,34 @@
+"""Paper Fig. 4(a)(b)(c): impact of minpts, eps and size fixed.
+
+Datasets are the surrogate analogues of NGSIM / PortoTaxi / 3D Road
+(DESIGN.md §8.5); per-dataset eps matches the paper's choices.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data import pointclouds
+from .common import algorithms, emit, time_fn
+
+# paper: eps = 0.005 / 0.01 / 0.08 (NGSIM, PortoTaxi, 3DRoad), n = 16384
+SETUPS = [
+    ("ngsim_like", 0.005, [50, 100, 500, 1000]),
+    ("portotaxi_like", 0.01, [10, 50, 100, 500]),
+    ("road3d_like", 0.08, [10, 50, 100, 500]),
+]
+
+
+def run(n: int = 4096, quick: bool = False):
+    setups = SETUPS[:1] if quick else SETUPS
+    for dset, eps, minpts_list in setups:
+        pts = pointclouds.load(dset, n)
+        for minpts in (minpts_list[:2] if quick else minpts_list):
+            for name, fn in algorithms(include_gdbscan=(n <= 8192)).items():
+                dt, res = time_fn(fn, pts, eps, minpts,
+                                  warmup=1, repeat=1 if quick else 3)
+                emit(f"minpts/{dset}/mp{minpts}/{name}", dt * 1e6,
+                     f"clusters={res.n_clusters}")
+
+
+if __name__ == "__main__":
+    run()

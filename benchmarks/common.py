@@ -1,0 +1,40 @@
+"""Shared benchmark utilities: timing, CSV emission, algorithm registry."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_fn(fn, *args, warmup: int = 1, repeat: int = 3, **kw):
+    """Median wall time (s) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        r = fn(*args, **kw)
+        jax.block_until_ready(jax.tree.leaves(r))
+    times = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        r = fn(*args, **kw)
+        jax.block_until_ready(jax.tree.leaves(r))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times)), r
+
+
+def algorithms(include_gdbscan=True, include_tiled=True):
+    from repro.core import dbscan, gdbscan
+    from repro.kernels import dbscan_tiled
+    algos = {
+        "fdbscan": lambda p, e, m: dbscan(p, e, m, algorithm="fdbscan"),
+        "fdbscan-densebox":
+            lambda p, e, m: dbscan(p, e, m, algorithm="fdbscan-densebox"),
+    }
+    if include_tiled:
+        algos["tiled-mxu"] = lambda p, e, m: dbscan_tiled(p, e, m)
+    if include_gdbscan:
+        algos["gdbscan"] = gdbscan
+    return algos
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)

@@ -1,0 +1,87 @@
+"""Render the EXPERIMENTS.md roofline table from dry-run JSON records.
+
+  PYTHONPATH=src python -m benchmarks.roofline_report --dir results/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dirname):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b/2**30:.2f}"
+
+
+def table(recs):
+    hdr = ("| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | dominant "
+           "| useful/HLO flops | fit GiB/chip | multi-pod |")
+    sep = "|" + "---|" * 9
+    rows = [hdr, sep]
+    for r in recs:
+        a, s = r["arch"], r["shape"]
+        if r["status"] == "SKIP":
+            rows.append(f"| {a} | {s} | — | — | — | SKIP | — | — | — "
+                        f"<!-- {r['reason']} -->|")
+            continue
+        if r["status"] == "FAIL":
+            rows.append(f"| {a} | {s} | FAIL | | | | | | |")
+            continue
+        ro = r.get("roofline", {})
+        fit = r.get("fit", {}).get("memory", {})
+        temp = fit.get("temp_bytes")
+        arg = fit.get("argument_bytes") or 0
+        total = (temp or 0) + arg
+        mp = r.get("multi_pod", {}).get("status", "-")
+        rows.append(
+            f"| {a} | {s} | {ro.get('t_compute_s', 0):.4f} "
+            f"| {ro.get('t_memory_s', 0):.4f} "
+            f"| {ro.get('t_collective_s', 0):.4f} "
+            f"| {ro.get('dominant', '-')}"
+            f" | {ro.get('useful_flops_ratio') and f'{ro['useful_flops_ratio']:.2f}' or '-'}"
+            f" | {fmt_bytes(total)} | {mp} |")
+    return "\n".join(rows)
+
+
+def summary(recs):
+    ok = [r for r in recs if r["status"] == "OK" and "roofline" in r]
+    if not ok:
+        return "(no roofline records)"
+    def frac(r):
+        ro = r["roofline"]
+        return ro["t_compute_s"] / max(ro["bound_time_s"], 1e-12)
+    worst = sorted(ok, key=frac)[:5]
+    coll = sorted(ok, key=lambda r: -r["roofline"]["t_collective_s"])[:5]
+    lines = ["", "worst roofline fraction (compute/bound):"]
+    for r in worst:
+        lines.append(f"  {r['arch']}/{r['shape']}: frac={frac(r):.3f} "
+                     f"dominant={r['roofline']['dominant']}")
+    lines.append("most collective-bound:")
+    for r in coll:
+        lines.append(f"  {r['arch']}/{r['shape']}: "
+                     f"t_coll={r['roofline']['t_collective_s']:.3f}s "
+                     f"({r['roofline']['wire_bytes']/2**30:.1f} GiB wire)")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    print(table(recs))
+    print(summary(recs))
+
+
+if __name__ == "__main__":
+    main()

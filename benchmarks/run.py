@@ -1,0 +1,56 @@
+"""Benchmark harness: one module per paper table/figure.
+
+``python -m benchmarks.run``          — smoke sizes (CI-friendly)
+``python -m benchmarks.run --full``   — paper-scale sizes (n=16384 etc.)
+
+Output: ``name,us_per_call,derived`` CSV lines.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: minpts,eps,scaling,cosmo,memory,"
+                         "phase,kernels,dist_evals")
+    args = ap.parse_args()
+    quick = not args.full
+    only = set(args.only.split(",")) if args.only else None
+
+    from . import (bench_cosmo, bench_distance_evals, bench_eps,
+                   bench_kernels, bench_memory, bench_minpts,
+                   bench_phase_cost, bench_scaling)
+    suites = {
+        "minpts": lambda: bench_minpts.run(n=16384 if args.full else 2048,
+                                           quick=quick),
+        "eps": lambda: bench_eps.run(n=16384 if args.full else 2048,
+                                     quick=quick),
+        "scaling": lambda: bench_scaling.run(
+            sizes=(4096, 16384, 65536, 131072) if args.full
+            else (1024, 2048), quick=quick),
+        "cosmo": lambda: bench_cosmo.run(n=36000 if args.full else 4000,
+                                         quick=quick),
+        "memory": lambda: bench_memory.run(quick=quick),
+        "phase": lambda: bench_phase_cost.run(n=16384 if args.full else 2048,
+                                              quick=quick),
+        "kernels": lambda: bench_kernels.run(quick=quick),
+        "dist_evals": lambda: bench_distance_evals.run(
+            n=16384 if args.full else 2048, quick=quick),
+    }
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name, fn in suites.items():
+        if only and name not in only:
+            continue
+        print(f"# suite: {name}", flush=True)
+        fn()
+    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""End-to-end driver: train a ~100M-param LM with DBSCAN dedup inline.
+
+The paper's technique sits in the data pipeline: every batch is embedded
+(3-D bigram sketch), clustered with FDBSCAN-DenseBox, and near-duplicate
+documents are thinned before the gradient step. The run compares loss
+with/without dedup on a duplicate-heavy synthetic stream — dedup lifts the
+effective data diversity per step.
+
+Full scale (defaults): ~100M params (d_model=640, 10 layers, 50k vocab),
+a few hundred steps. ``--quick`` runs a reduced config for CI.
+
+    PYTHONPATH=src python examples/train_lm_dedup.py --steps 300
+    PYTHONPATH=src python examples/train_lm_dedup.py --quick
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get
+from repro.data.dedup import dedup_batch
+from repro.data.lm_data import SyntheticLM
+from repro.models import model
+from repro.train import step as step_lib
+from repro.train.optimizer import adamw_init
+
+
+def build_cfg(quick: bool):
+    base = get("deepseek-7b")  # llama-style family
+    if quick:
+        return dataclasses.replace(base.reduced(), name="lm-quick")
+    return dataclasses.replace(
+        base, name="lm-100m", n_layers=10, d_model=640, n_heads=10,
+        n_kv_heads=10, head_dim=64, d_ff=2560, vocab_size=50304)
+
+
+def run(cfg, steps, batch, seq, dedup, seed=0, log_every=20):
+    params = model.init_params(cfg, jax.random.PRNGKey(seed))
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    opt = adamw_init(params)
+    step_fn = jax.jit(step_lib.make_train_step(cfg, lr=1e-3))
+    data = SyntheticLM(cfg.vocab_size, seq, seed=seed, dup_frac=0.4)
+    print(f"[{cfg.name}] {n_params/1e6:.1f}M params, dedup={dedup}")
+    losses, kept = [], []
+    t0 = time.time()
+    for step in range(steps):
+        raw = data.batch(step, batch)
+        toks = raw["tokens"] % cfg.vocab_size
+        if dedup:
+            filtered, idx = dedup_batch({"tokens": toks}, pad_to=batch)
+            kept.append(len(np.unique(idx)) / batch)
+            toks = filtered["tokens"]
+        params, opt, metrics = step_fn(params, opt,
+                                       {"tokens": jnp.asarray(toks)})
+        losses.append(float(metrics["loss"]))
+        if step % log_every == 0 or step == steps - 1:
+            k = f" kept={np.mean(kept[-log_every:]):.2f}" if kept else ""
+            print(f"  step {step:4d} loss={losses[-1]:.4f}{k}", flush=True)
+    dt = time.time() - t0
+    print(f"  {steps} steps in {dt:.1f}s ({steps*batch*seq/dt:.0f} tok/s)")
+    return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--no-baseline", action="store_true")
+    args = ap.parse_args()
+    cfg = build_cfg(args.quick)
+    if args.quick:
+        args.steps, args.batch, args.seq = min(args.steps, 40), 8, 64
+
+    dedup_losses = run(cfg, args.steps, args.batch, args.seq, dedup=True)
+    if not args.no_baseline:
+        base_losses = run(cfg, args.steps, args.batch, args.seq, dedup=False)
+        n = max(1, args.steps // 5)
+        print(f"final-fifth mean loss: dedup={np.mean(dedup_losses[-n:]):.4f}"
+              f" baseline={np.mean(base_losses[-n:]):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""repro: tree-based DBSCAN (FDBSCAN / FDBSCAN-DenseBox) for TPU pods.
+
+JAX + Pallas reproduction and extension of Prokopenko, Lebrun-Grandie,
+Arndt: "Fast tree-based algorithms for DBSCAN for low-dimensional data on
+GPUs" (2021), embedded in a multi-pod training/serving framework.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,3 @@
+from .base import ArchConfig, get, names, REGISTRY
+
+__all__ = ["ArchConfig", "get", "names", "REGISTRY"]

@@ -1,0 +1,124 @@
+"""The 10 assigned architectures, exact published configurations.
+
+Sources are noted per entry ([hf] = HuggingFace config.json, [arXiv] = paper).
+DBSCAN applicability: the paper's technique lives in the data pipeline for
+every one of these (DESIGN.md §4); none has an architecture-level variant.
+"""
+from .base import ArchConfig, register
+
+# --- dense LMs ------------------------------------------------------------
+
+QWEN15_4B = register(ArchConfig(
+    name="qwen1.5-4b", family="dense",
+    n_layers=40, d_model=2560, n_heads=20, n_kv_heads=20, head_dim=128,
+    d_ff=6912, vocab_size=151936,
+    qkv_bias=True, rope_theta=5e6,
+    notes="[hf:Qwen/Qwen1.5-4B] MHA (kv=20) with QKV bias, large vocab.",
+))
+
+CHATGLM3_6B = register(ArchConfig(
+    name="chatglm3-6b", family="dense",
+    n_layers=28, d_model=4096, n_heads=32, n_kv_heads=2, head_dim=128,
+    d_ff=13696, vocab_size=65024,
+    rope_style="glm_partial",  # 2d RoPE: interleaved pairs on half the dims
+    qkv_bias=True,
+    notes="[arXiv:2406.12793] extreme GQA (kv=2), partial interleaved RoPE.",
+))
+
+DEEPSEEK_7B = register(ArchConfig(
+    name="deepseek-7b", family="dense",
+    n_layers=30, d_model=4096, n_heads=32, n_kv_heads=32, head_dim=128,
+    d_ff=11008, vocab_size=102400,
+    notes="[arXiv:2401.02954] llama architecture, MHA.",
+))
+
+GEMMA2_2B = register(ArchConfig(
+    name="gemma2-2b", family="dense",
+    n_layers=26, d_model=2304, n_heads=8, n_kv_heads=4, head_dim=256,
+    d_ff=9216, vocab_size=256000,
+    layer_pattern=("local", "attn"),  # alternating sliding/global
+    sliding_window=4096,
+    attn_softcap=50.0, final_softcap=30.0,
+    mlp_style="swiglu", mlp_act="gelu",  # GeGLU
+    post_norm=True, embed_scale=True, tie_embeddings=True,
+    notes="[arXiv:2408.00118] local+global alternation, logit softcaps, "
+          "sandwich norms, tied + scaled embeddings.",
+))
+
+# --- audio enc-dec ----------------------------------------------------------
+
+WHISPER_BASE = register(ArchConfig(
+    name="whisper-base", family="audio",
+    n_layers=6, d_model=512, n_heads=8, n_kv_heads=8, head_dim=64,
+    d_ff=2048, vocab_size=51865,
+    rope_style="none",  # sinusoidal absolute positions
+    mlp_style="gelu_mlp", norm_style="layernorm", tie_embeddings=True,
+    is_encdec=True, n_enc_layers=6, frontend="audio",
+    notes="[arXiv:2212.04356] enc-dec; conv frontend is a STUB — "
+          "input_specs() provides precomputed frame embeddings.",
+))
+
+# --- MoE -------------------------------------------------------------------
+
+MIXTRAL_8X7B = register(ArchConfig(
+    name="mixtral-8x7b", family="moe",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=14336, vocab_size=32000,
+    sliding_window=4096, layer_pattern=("local",),
+    n_experts=8, experts_per_token=2,
+    notes="[arXiv:2401.04088] 8 experts top-2, SWA 4096 on all layers.",
+))
+
+MOONSHOT_16B_A3B = register(ArchConfig(
+    name="moonshot-v1-16b-a3b", family="moe",
+    n_layers=48, d_model=2048, n_heads=16, n_kv_heads=16, head_dim=128,
+    d_ff=1408, vocab_size=163840,
+    n_experts=64, experts_per_token=6,
+    notes="[hf:moonshotai/Moonlight-16B-A3B] fine-grained MoE: 64 small "
+          "experts (d_ff=1408) top-6, ~3B active.",
+))
+
+# --- hybrid ----------------------------------------------------------------
+
+JAMBA_52B = register(ArchConfig(
+    name="jamba-v0.1-52b", family="hybrid",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=14336, vocab_size=65536,
+    # 1:7 attention:mamba, attention at position 4 of each 8-layer block
+    layer_pattern=("mamba", "mamba", "mamba", "mamba",
+                   "attn", "mamba", "mamba", "mamba"),
+    rope_style="none",  # Jamba uses no positional encoding in attn layers
+    n_experts=16, experts_per_token=2, moe_period=2,
+    ssm_state=16, ssm_conv=4, ssm_expand=2,
+    notes="[arXiv:2403.19887] Mamba+attn 1:7 interleave, MoE every 2nd "
+          "layer (16e top-2).",
+))
+
+# --- SSM / linear attention --------------------------------------------------
+
+RWKV6_1B6 = register(ArchConfig(
+    name="rwkv6-1.6b", family="ssm",
+    n_layers=24, d_model=2048, n_heads=0, n_kv_heads=0, head_dim=0,
+    d_ff=7168, vocab_size=65536,
+    layer_pattern=("rwkv",), rope_style="none",
+    mlp_style="rwkv_cmix", norm_style="layernorm",
+    rwkv_head_dim=64, rwkv_decay_lora=64,
+    notes="[arXiv:2404.05892] Finch: attention-free, data-dependent decay "
+          "(ddlerp token shift + decay LoRA), wkv head state 64x64.",
+))
+
+# --- VLM -------------------------------------------------------------------
+
+LLAVA_NEXT_MISTRAL_7B = register(ArchConfig(
+    name="llava-next-mistral-7b", family="vlm",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=14336, vocab_size=32000,
+    frontend="vision", n_frontend_tokens=576,
+    notes="[hf:llava-hf/llava-v1.6-mistral-7b-hf] Mistral-7B backbone; "
+          "anyres tiling frontend is a STUB — input_specs() provides "
+          "precomputed patch embeddings (projector is a trained param).",
+))
+
+ALL = [QWEN15_4B, CHATGLM3_6B, DEEPSEEK_7B, GEMMA2_2B, WHISPER_BASE,
+       MIXTRAL_8X7B, MOONSHOT_16B_A3B, JAMBA_52B, RWKV6_1B6,
+       LLAVA_NEXT_MISTRAL_7B]

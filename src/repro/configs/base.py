@@ -1,0 +1,179 @@
+"""Architecture config schema + registry.
+
+Every assigned architecture is a frozen ``ArchConfig`` (exact published
+hyperparameters) plus a ``reduced()`` derivation used by CPU smoke tests.
+The model graph is assembled from ``layer_pattern`` *superblocks*
+(models/model.py): the pattern repeats ``n_layers / len(pattern)`` times and
+is scanned over, so HLO size and compile time are independent of depth.
+
+DBSCAN applicability (DESIGN.md §4): the paper's technique operates in the
+data pipeline (embedding dedup — repro.data.dedup), not inside any model
+graph; no per-arch variant exists, which is noted here once for all archs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, replace
+from typing import Optional
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                  # dense | moe | hybrid | ssm | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    # attention flavor
+    layer_pattern: tuple = ("attn",)   # attn | local | mamba | rwkv
+    rope_style: str = "neox"           # neox | glm_partial | none
+    rope_theta: float = 1e4
+    qkv_bias: bool = False
+    attn_softcap: Optional[float] = None
+    final_softcap: Optional[float] = None
+    sliding_window: Optional[int] = None
+    # ffn
+    mlp_style: str = "swiglu"          # swiglu | gelu_mlp | rwkv_cmix
+    mlp_act: str = "silu"              # silu | gelu (gemma2 GeGLU)
+    # moe
+    n_experts: int = 0
+    experts_per_token: int = 0
+    moe_period: int = 1                # MoE every k-th layer (jamba: 2)
+    capacity_factor: float = 1.25
+    # ssm (mamba)
+    ssm_state: int = 16
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    # rwkv
+    rwkv_head_dim: int = 64
+    rwkv_decay_lora: int = 64
+    # enc-dec
+    is_encdec: bool = False
+    n_enc_layers: int = 0
+    # modality frontend stub: precomputed embeddings enter the backbone
+    frontend: Optional[str] = None     # audio | vision | None
+    n_frontend_tokens: int = 0         # e.g. llava anyres patch tokens
+    # misc
+    norm_style: str = "rmsnorm"        # rmsnorm | layernorm
+    post_norm: bool = False            # gemma2 sandwich norms
+    embed_scale: bool = False          # gemma scales embeddings by sqrt(d)
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    notes: str = ""
+
+    @property
+    def n_blocks(self) -> int:
+        assert self.n_layers % len(self.layer_pattern) == 0, self.name
+        return self.n_layers // len(self.layer_pattern)
+
+    @property
+    def d_inner(self) -> int:  # mamba inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def n_rwkv_heads(self) -> int:
+        return self.d_model // self.rwkv_head_dim
+
+    def moe_at(self, pattern_idx: int) -> bool:
+        """Is the FFN at this pattern position an MoE layer?"""
+        return self.n_experts > 0 and (pattern_idx % self.moe_period
+                                       == self.moe_period - 1)
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """Eligible for the 500k-token decode cell (SSM / hybrid /
+        all-windowed attention). Archs with *global* full-attention layers
+        (and the enc-dec audio arch) are skipped per the assignment."""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        if self.is_encdec:
+            return False
+        kinds = set(self.layer_pattern)
+        if "attn" in kinds:  # unwindowed global attention present
+            return False
+        return self.sliding_window is not None  # all-local (mixtral)
+
+    def params_per_token_active(self) -> int:
+        """~active params/token (MoE counts experts_per_token experts)."""
+        return _count_params(self, active_only=True)
+
+    def params_total(self) -> int:
+        return _count_params(self, active_only=False)
+
+    def reduced(self) -> "ArchConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        pat = self.layer_pattern
+        heads = min(self.n_heads, 4)
+        kv = max(1, min(self.n_kv_heads, heads))
+        return replace(
+            self,
+            name=self.name + "-reduced",
+            n_layers=2 * len(pat),
+            d_model=64, n_heads=heads, n_kv_heads=kv, head_dim=16,
+            d_ff=128, vocab_size=512,
+            sliding_window=None if self.sliding_window is None else 16,
+            n_experts=min(self.n_experts, 4) if self.n_experts else 0,
+            experts_per_token=min(self.experts_per_token, 2)
+            if self.experts_per_token else 0,
+            # drop-free capacity at smoke scale: capacity eviction is batch-
+            # order dependent (standard MoE behaviour) and would make the
+            # prefill<->decode and masking equalities only statistical
+            capacity_factor=4.0,
+            ssm_state=8, rwkv_head_dim=16, rwkv_decay_lora=8,
+            n_enc_layers=2 if self.is_encdec else 0,
+            n_frontend_tokens=min(self.n_frontend_tokens, 8),
+        )
+
+
+def _count_params(cfg: ArchConfig, active_only: bool) -> int:
+    d, f = cfg.d_model, cfg.d_ff
+    per_layer = {}
+    att = d * cfg.n_heads * cfg.head_dim * 2 + d * cfg.n_kv_heads * cfg.head_dim * 2
+    per_layer["attn"] = att
+    per_layer["local"] = att
+    dn = cfg.d_inner
+    per_layer["mamba"] = d * 2 * dn + dn * cfg.ssm_conv + \
+        dn * (cfg.ssm_state * 2 + dn // 16) + dn * cfg.ssm_state + dn * d
+    per_layer["rwkv"] = 6 * d * d + d * cfg.d_ff + cfg.d_ff * d
+    total = 0
+    n_blocks = cfg.n_layers // len(cfg.layer_pattern)
+    for i, kind in enumerate(cfg.layer_pattern):
+        total += per_layer[kind] * n_blocks
+        if kind == "rwkv":
+            continue  # rwkv_cmix counted in its entry
+        if cfg.moe_at(i):
+            e = cfg.experts_per_token if active_only else cfg.n_experts
+            total += (3 * d * f) * e * n_blocks + d * cfg.n_experts * n_blocks
+        else:
+            mult = 3 if cfg.mlp_style == "swiglu" else 2
+            total += mult * d * f * n_blocks
+    if cfg.is_encdec:
+        # encoder layers + cross attention
+        total += cfg.n_enc_layers * (att + 2 * d * f)
+        total += cfg.n_layers // len(cfg.layer_pattern) * att  # cross-attn
+    total += cfg.vocab_size * d * (1 if cfg.tie_embeddings else 2)
+    return total
+
+
+REGISTRY: dict[str, ArchConfig] = {}
+
+
+def register(cfg: ArchConfig) -> ArchConfig:
+    REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get(name: str) -> ArchConfig:
+    from . import all_archs  # noqa: F401  (populate registry)
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def names() -> list[str]:
+    from . import all_archs  # noqa: F401
+    return sorted(REGISTRY)

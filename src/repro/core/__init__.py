@@ -1,0 +1,7 @@
+"""Core library: the paper's tree-based DBSCAN algorithms on TPU/JAX."""
+from .fdbscan import DBSCANResult, dbscan
+from .baselines import dbscan_bruteforce_np, gdbscan
+from . import grid, lbvh, morton, traversal, unionfind, validate
+
+__all__ = ["DBSCANResult", "dbscan", "dbscan_bruteforce_np", "gdbscan",
+           "grid", "lbvh", "morton", "traversal", "unionfind", "validate"]

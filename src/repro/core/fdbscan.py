@@ -1,0 +1,168 @@
+"""FDBSCAN and FDBSCAN-DenseBox — the paper's two tree-based algorithms.
+
+Two bulk phases over a segment BVH (DESIGN.md §1, §3):
+
+  preprocessing: determine core points with an early-exit neighbor count
+      (``minpts`` neighbors suffice — the paper's "lightweight" approach);
+      entirely skipped when ``minpts == 2`` (every ε-pair is core-core) and,
+      for DenseBox, skipped for all points inside dense cells (all core).
+
+  main: min-label propagation sweeps fused into the traversal (hook) +
+      pointer jumping (DESIGN.md §3 explains why this replaces the GPU's
+      atomic-CAS union-find), iterated to a fixpoint. Border points are
+      assigned in one final gather and never propagate labels — this removes
+      the paper's critical section (no cluster bridging by construction).
+
+Memory is O(n + m): neighbor lists are never materialized.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import grid, lbvh, traversal, unionfind
+
+INT_MAX = traversal.INT_MAX
+
+
+class DBSCANResult(NamedTuple):
+    labels: jax.Array      # (n,) cluster id in [0, n_clusters) or -1 (noise)
+    core_mask: jax.Array   # (n,) point is a core point
+    n_clusters: int
+    n_sweeps: int          # main-phase sweeps until fixpoint
+
+
+def _unify_dense(labels, segs: grid.Segments):
+    """Equalize labels within dense segments (paper: one UNION per cell)."""
+    m = segs.n_segments
+    seg_min = jax.ops.segment_min(labels, segs.seg_of_point, num_segments=m)
+    dense_lab = seg_min[segs.seg_of_point]
+    return jnp.where(segs.dense_pt, jnp.minimum(labels, dense_lab), labels)
+
+
+@partial(jax.jit, static_argnames=("min_pts",))
+def _preprocess(tree, segs, eps, min_pts: int):
+    """Core-point determination with early exit at min_pts."""
+    # Dense members are core by construction; only loose points traverse.
+    counts = traversal.count_neighbors(tree, segs, eps, cap=min_pts,
+                                       query_active=~segs.dense_pt)
+    core = segs.dense_pt | (counts >= min_pts)
+    return core
+
+
+@jax.jit
+def _main_phase(tree, segs, eps, core):
+    """Hook+jump sweeps until the core-core components stabilize."""
+    n = segs.n_points
+    labels0 = jnp.where(core, jnp.arange(n, dtype=jnp.int32), jnp.int32(INT_MAX))
+    labels0 = jnp.where(core, _unify_dense(labels0, segs), labels0)
+
+    def cond(state):
+        _, changed, _ = state
+        return changed
+
+    def body(state):
+        labels, _, sweeps = state
+        gathered, _ = traversal.minlabel_sweep(tree, segs, eps, labels,
+                                               gather_mask=core,
+                                               query_active=core)
+        new = unionfind.hook(labels, gathered, mask=core)
+        new = _unify_dense(jnp.where(core, new, labels), segs)
+        new = jnp.where(core, unionfind.jump_to_fixpoint(
+            jnp.where(core, new, jnp.arange(n, dtype=jnp.int32))), new)
+        changed = jnp.any(new != labels)
+        return new, changed, sweeps + 1
+
+    labels, _, sweeps = lax.while_loop(cond, body,
+                                       (labels0, jnp.bool_(True), jnp.int32(0)))
+    return labels, sweeps
+
+
+@jax.jit
+def _assign_borders(tree, segs, eps, core, core_labels):
+    """Borders take the min adjacent core root; isolated non-core -> noise."""
+    n = segs.n_points
+    acc, _ = traversal.border_gather(tree, segs, eps, core_labels, core,
+                                     query_active=~core)
+    labels = jnp.where(core, core_labels, acc)
+    return jnp.where(labels == INT_MAX, jnp.int32(-1), labels)
+
+
+def _finalize(labels_sorted, order, n):
+    """Map sorted-space representative labels to compact original-order ids."""
+    out = jnp.full(n, -1, jnp.int32).at[order].set(labels_sorted)
+    # representative (sorted index) -> original index for determinism
+    rep_orig = jnp.where(out >= 0, order[jnp.clip(out, 0, n - 1)], -1)
+    uniq, inv = jnp.unique(rep_orig, return_inverse=True, size=n + 1,
+                           fill_value=-2)
+    has_noise = jnp.any(rep_orig == -1)
+    compact = inv - jnp.where(has_noise, 1, 0)
+    compact = jnp.where(rep_orig == -1, -1, compact)
+    n_clusters = int(jnp.sum(uniq >= 0))
+    return compact.astype(jnp.int32), n_clusters
+
+
+def dbscan(points, eps: float, min_pts: int, *, algorithm: str = "auto",
+           star: bool = False) -> DBSCANResult:
+    """DBSCAN via the paper's tree-based algorithms.
+
+    algorithm: "fdbscan" | "fdbscan-densebox" | "auto" (densebox for 2/3-D,
+    matching the paper's recommendation for dense low-dimensional data).
+    star=True implements DBSCAN* (no border points; non-core -> noise).
+    """
+    points = jnp.asarray(points)
+    n, d = points.shape
+    if algorithm == "auto":
+        algorithm = "fdbscan-densebox" if d in (2, 3) else "fdbscan"
+    if algorithm == "fdbscan-densebox":
+        segs = grid.build_segments_densebox(points, eps, min_pts)
+    elif algorithm == "fdbscan":
+        segs = grid.build_segments_fdbscan(points)
+    else:
+        raise ValueError(f"unknown algorithm {algorithm!r}")
+
+    if n == 1:
+        noise = min_pts > 1
+        return DBSCANResult(labels=jnp.array([-1 if noise else 0], jnp.int32),
+                            core_mask=jnp.array([not noise]),
+                            n_clusters=0 if noise else 1, n_sweeps=0)
+
+    m = segs.n_segments
+    if m == 1:
+        # Everything inside one dense cell: one cluster, all core, 0 sweeps.
+        labels = jnp.zeros(n, jnp.int32)
+        return DBSCANResult(labels=labels, core_mask=jnp.ones(n, bool),
+                            n_clusters=1, n_sweeps=0)
+
+    tree = lbvh.build_tree(segs.codes, segs.prim_lo, segs.prim_hi)
+
+    if min_pts == 2:
+        # Paper §3.2: preprocessing is skipped — any ε-pair is core-core.
+        # A point is core iff it has at least one other point within eps,
+        # which falls out of the sweep's matched-neighbor count.
+        n_idx = jnp.arange(n, dtype=jnp.int32)
+        all_mask = jnp.ones(n, bool)
+        _, cnt = traversal.minlabel_sweep(tree, segs, eps, n_idx,
+                                          gather_mask=all_mask,
+                                          query_active=all_mask)
+        core = cnt > 0
+        core = jnp.where(segs.dense_pt, True, core)
+    else:
+        core = _preprocess(tree, segs, eps, min_pts)
+
+    core_labels, sweeps = _main_phase(tree, segs, eps, core)
+
+    if star:
+        labels_sorted = jnp.where(core, core_labels, jnp.int32(INT_MAX))
+        labels_sorted = jnp.where(labels_sorted == INT_MAX, -1, labels_sorted)
+    else:
+        labels_sorted = _assign_borders(tree, segs, eps, core, core_labels)
+
+    labels, n_clusters = _finalize(labels_sorted, segs.order, n)
+    core_mask = jnp.zeros(n, bool).at[segs.order].set(core)
+    return DBSCANResult(labels=labels, core_mask=core_mask,
+                        n_clusters=n_clusters, n_sweeps=int(sweeps))

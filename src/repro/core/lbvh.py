@@ -1,0 +1,217 @@
+"""Linear bounding volume hierarchy (Karras 2012) in pure JAX.
+
+The paper uses ArborX's LBVH as the search index because of its fast fully
+parallel construction and low-divergence batched traversal. We reproduce the
+same construction:
+
+  * primitives are sorted by Morton code (``repro.core.morton``),
+  * every internal node's primitive range / split is found independently with
+    binary searches over the common-prefix-length function ``delta`` -> the
+    whole hierarchy is built in a single fully-vectorized pass (no recursion),
+  * bounding boxes are fitted bottom-up.
+
+GPU -> TPU adaptations (see DESIGN.md §3):
+  * Karras' bottom-up AABB fit uses per-node atomic flags (second child to
+    arrive continues upward). TPUs have no global atomics, so we fit AABBs
+    with *level-synchronous* bulk sweeps: a node becomes ready once both
+    children are ready; iterate until the root is ready. O(depth) vectorized
+    sweeps, deterministic.
+  * Traversal is stackless: we precompute *ropes* (miss links = next node in
+    DFS order when a subtree is skipped), so a traversal needs O(1) state per
+    query lane instead of a per-thread stack (VREG pressure).
+
+Node numbering: internal nodes are ``0 .. n-2`` (root = 0), leaf ``k`` is node
+``(n-1) + k``. ``n`` is the number of *primitives* (segments), which for plain
+FDBSCAN are single points and for FDBSCAN-DenseBox are mixed dense-cell boxes
+and singleton points (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# Enough doublings/halvings to cover any practical primitive count (2**30).
+_SEARCH_ITERS = 31
+
+
+class Tree(NamedTuple):
+    """Flat LBVH arrays. Internal nodes first, then leaves.
+
+    All index arrays are int32 over node ids in [0, 2n-1); -1 is the
+    "no node" sentinel (end of traversal).
+    """
+    left: jax.Array      # (n-1,) left child node id of internal node i
+    right: jax.Array     # (n-1,) right child node id
+    parent: jax.Array    # (2n-1,) parent node id (-1 for root)
+    miss: jax.Array      # (2n-1,) rope: node to visit when skipping this one
+    range_r: jax.Array   # (2n-1,) max leaf (primitive) index under this node
+    box_lo: jax.Array    # (2n-1, d) AABB lower corners
+    box_hi: jax.Array    # (2n-1, d) AABB upper corners
+
+    @property
+    def n_leaves(self) -> int:
+        return (self.parent.shape[0] + 1) // 2
+
+    def leaf_id(self, k):
+        return k + self.n_leaves - 1
+
+
+def _delta_fn(codes: jax.Array):
+    """Common-prefix length between sorted codes i and j, with the standard
+    Karras index tie-break (equal codes -> 32 + clz(i ^ j)); -1 outside."""
+    n = codes.shape[0]
+
+    def delta(i, j):
+        oob = (j < 0) | (j >= n)
+        j_safe = jnp.clip(j, 0, n - 1)
+        ci = codes[i]
+        cj = codes[j_safe]
+        x = ci ^ cj
+        same = x == 0
+        base = lax.clz(x)
+        tie = jnp.uint32(32) + lax.clz(i.astype(jnp.uint32) ^ j_safe.astype(jnp.uint32))
+        d = jnp.where(same, tie, base).astype(jnp.int32)
+        return jnp.where(oob, jnp.int32(-1), d)
+
+    return delta
+
+
+def _build_topology(codes: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Karras internal-node construction, vectorized over all internal nodes.
+
+    Returns (left, right, first, last): children node ids and the primitive
+    index range [first, last] covered by each internal node.
+    """
+    n = codes.shape[0]
+    delta = _delta_fn(codes)
+
+    def node(i):
+        i = i.astype(jnp.int32)
+        d = jnp.sign(delta(i, i + 1) - delta(i, i - 1)).astype(jnp.int32)
+        delta_min = delta(i, i - d)
+
+        # Exponential search for an upper bound on the range length. For
+        # sorted codes delta is non-increasing away from i, so the masked
+        # doubling below is monotone (once the test fails it stays false).
+        def dbl(_, lmax):
+            grow = delta(i, i + lmax * d) > delta_min
+            return jnp.where(grow, lmax * 2, lmax)
+
+        l_max = lax.fori_loop(0, _SEARCH_ITERS, dbl, jnp.int32(2))
+
+        # Binary search for the exact length; l_max is a power of two, so the
+        # halving sequence visits each power exactly once (t==0 is inert).
+        def bisect(k, carry):
+            l, t = carry
+            t = t // 2
+            ok = (t > 0) & (delta(i, i + (l + t) * d) > delta_min)
+            return jnp.where(ok, l + t, l), t
+
+        l, _ = lax.fori_loop(0, _SEARCH_ITERS, bisect, (jnp.int32(0), l_max))
+        j = i + l * d  # other end of the range
+
+        # Split search (ceil-halving with a done flag so t==1 fires once).
+        delta_node = delta(i, j)
+
+        def split_step(k, carry):
+            s, t, done = carry
+            t_new = (t + 1) // 2
+            ok = (~done) & (delta(i, i + (s + t_new) * d) > delta_node)
+            s = jnp.where(ok, s + t_new, s)
+            done = done | (t_new <= 1)
+            return s, t_new, done
+
+        s, _, _ = lax.fori_loop(0, _SEARCH_ITERS,
+                                split_step, (jnp.int32(0), l, jnp.bool_(False)))
+        gamma = i + s * d + jnp.minimum(d, 0)
+
+        first = jnp.minimum(i, j)
+        last = jnp.maximum(i, j)
+        leaf_off = jnp.int32(n - 1)
+        left = jnp.where(first == gamma, gamma + leaf_off, gamma)
+        right = jnp.where(last == gamma + 1, gamma + 1 + leaf_off, gamma + 1)
+        return left, right, first, last
+
+    return jax.vmap(node)(jnp.arange(n - 1, dtype=jnp.int32))
+
+
+def _fit_boxes(left, right, parent, prim_lo, prim_hi):
+    """Level-synchronous bottom-up AABB fit (no atomics; DESIGN.md §3)."""
+    n = prim_lo.shape[0]
+    n_int = n - 1
+    d = prim_lo.shape[1]
+    box_lo = jnp.concatenate([jnp.full((n_int, d), jnp.inf, prim_lo.dtype), prim_lo])
+    box_hi = jnp.concatenate([jnp.full((n_int, d), -jnp.inf, prim_hi.dtype), prim_hi])
+    ready = jnp.concatenate([jnp.zeros(n_int, bool), jnp.ones(n, bool)])
+
+    def cond(state):
+        _, _, ready = state
+        return ~ready[0]
+
+    def body(state):
+        box_lo, box_hi, ready = state
+        can = ready[left] & ready[right] & ~ready[:n_int]
+        new_lo = jnp.minimum(box_lo[left], box_lo[right])
+        new_hi = jnp.maximum(box_hi[left], box_hi[right])
+        box_lo = box_lo.at[:n_int].set(jnp.where(can[:, None], new_lo, box_lo[:n_int]))
+        box_hi = box_hi.at[:n_int].set(jnp.where(can[:, None], new_hi, box_hi[:n_int]))
+        ready = ready.at[:n_int].set(ready[:n_int] | can)
+        return box_lo, box_hi, ready
+
+    box_lo, box_hi, _ = lax.while_loop(cond, body, (box_lo, box_hi, ready))
+    return box_lo, box_hi
+
+
+def _compute_ropes(left, right, parent, n_nodes):
+    """miss[v] = right sibling if v is a left child, else miss[parent].
+
+    Resolved with bulk sweeps (value propagates one tree level per sweep).
+    """
+    n_int = left.shape[0]
+    is_left = jnp.zeros(n_nodes, bool).at[left].set(True)
+    sibling = jnp.full(n_nodes, -1, jnp.int32).at[left].set(right)
+    miss = jnp.where(is_left, sibling, jnp.int32(-1))
+    miss = miss.at[0].set(-1)  # root: end of traversal
+
+    def cond(state):
+        miss, done = state
+        return ~jnp.all(done)
+
+    def body(state):
+        miss, done = state
+        par = jnp.maximum(parent, 0)
+        new = jnp.where(done, miss, miss[par])
+        new_done = done | done[par]
+        new = new.at[0].set(-1)
+        return new, new_done.at[0].set(True)
+
+    done0 = is_left.at[0].set(True)
+    miss, _ = lax.while_loop(cond, body, (miss, done0))
+    return miss
+
+
+def build_tree(codes: jax.Array, prim_lo: jax.Array, prim_hi: jax.Array) -> Tree:
+    """Build the LBVH over primitives sorted by ``codes``.
+
+    ``prim_lo``/``prim_hi`` are (n, d) AABB corners of the (sorted)
+    primitives. n must be >= 2 (callers special-case n < 2).
+    """
+    n = codes.shape[0]
+    left, right, first, last = _build_topology(codes)
+    n_nodes = 2 * n - 1
+
+    parent = jnp.full(n_nodes, -1, jnp.int32)
+    parent = parent.at[left].set(jnp.arange(n - 1, dtype=jnp.int32))
+    parent = parent.at[right].set(jnp.arange(n - 1, dtype=jnp.int32))
+
+    # range_r: needed by the paper's "j > i" traversal mask (skip subtrees
+    # whose max primitive index is below the query's); leaves cover [k, k].
+    range_r = jnp.concatenate([last, jnp.arange(n, dtype=jnp.int32)])
+
+    miss = _compute_ropes(left, right, parent, n_nodes)
+    box_lo, box_hi = _fit_boxes(left, right, parent, prim_lo, prim_hi)
+    return Tree(left=left, right=right, parent=parent, miss=miss,
+                range_r=range_r, box_lo=box_lo, box_hi=box_hi)

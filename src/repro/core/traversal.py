@@ -1,0 +1,184 @@
+"""Batched stackless BVH traversal fused with DBSCAN epilogues.
+
+This is the heart of FDBSCAN: the tree walk and the clustering update are a
+single fused loop per query — neighbors are consumed *on the fly* and never
+materialized (the paper's O(n)-memory claim; DESIGN.md §3).
+
+GPU -> TPU mapping:
+  * one CUDA thread per query  ->  one vmap lane per query; the vmapped
+    ``lax.while_loop`` lowers to a single masked loop (lanes that finish go
+    inert), the TPU analogue of a warp of independent traversals;
+  * per-thread traversal stack  ->  precomputed ropes (``Tree.miss``), O(1)
+    state per lane;
+  * early exit (``count >= minpts``)  ->  loop-mask condition;
+  * the paper's "hide leaves j < i" mask  ->  a range test on
+    ``Tree.range_r`` (skip subtrees whose max primitive index is below the
+    query's own), used by the edge-once extraction mode.
+
+Each loop iteration performs exactly one unit of work — either one internal
+node test or one segment-member distance — so the fused kernel is uniform
+across lanes (low divergence in the paper's sense).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .lbvh import Tree
+from .grid import Segments
+
+INT_MAX = jnp.iinfo(jnp.int32).max
+
+
+def _box_dist2(q, lo, hi):
+    d = jnp.maximum(jnp.maximum(lo - q, q - hi), 0.0)
+    return jnp.sum(d * d)
+
+
+@partial(jax.jit, static_argnames=("mode", "use_range_mask"))
+def traverse(tree: Tree, segs: Segments, eps: float,
+             query_active: jax.Array,
+             point_vals: jax.Array,
+             point_mask: jax.Array,
+             cap: int | jax.Array = INT_MAX,
+             mode: str = "count",
+             use_range_mask: bool = False):
+    """Run one fused traversal for every (sorted-order) point.
+
+    mode="count":    acc = |N_eps(q)| saturated at ``cap`` (early exit).
+    mode="minlabel": acc = min(point_vals[j]) over neighbors j with
+                     point_mask[j]; entering a *dense* segment stops at the
+                     first member hit (all members share one label — the
+                     paper's dense-cell short-circuit). Also returns the
+                     found-any flag packed in the count output.
+
+    Returns (acc, count) where count is the number of matched neighbors
+    (mode minlabel counts matched neighbors excluding self).
+    """
+    n = segs.n_points
+    m = segs.n_segments
+    leaf_off = m - 1
+    eps2 = jnp.asarray(eps, segs.pts.dtype) ** 2
+    pts = segs.pts
+    root = jnp.int32(0 if m > 1 else leaf_off)  # m==1: the single leaf
+
+    def one_query(q_idx, active):
+        q = pts[q_idx]
+
+        def cond(state):
+            node, ptr, acc, cnt = state
+            live = node >= 0
+            if mode == "count":
+                live = live & (acc < cap)
+            return live
+
+        def body(state):
+            node, ptr, acc, cnt = state
+            is_member_step = ptr >= 0
+
+            # ---- member step: one distance test against sorted point ptr --
+            j = jnp.where(is_member_step, ptr, 0)
+            diff = q - pts[j]
+            d2 = jnp.sum(diff * diff)
+            hit = is_member_step & (d2 <= eps2)
+            hit_other = hit & (j != q_idx)
+            if mode == "count":
+                acc_new = acc + jnp.where(hit, 1, 0)
+                # cnt tracks distance evaluations (the paper's work metric)
+                cnt_new = cnt + jnp.where(is_member_step, 1, 0)
+                stop_seg = False
+            else:
+                ok = hit & point_mask[j]
+                acc_new = jnp.where(ok, jnp.minimum(acc, point_vals[j]), acc)
+                cnt_new = cnt + jnp.where(ok & (j != q_idx), 1, 0)
+                # dense segment: all members share one label & core status;
+                # the first hit tells us everything (paper §4.2).
+                seg_id = jnp.where(node >= leaf_off, node - leaf_off, 0)
+                stop_seg = ok & segs.dense_seg[seg_id]
+            seg_id = jnp.where(node >= leaf_off, node - leaf_off, 0)
+            seg_done = (ptr + 1 >= segs.seg_end[seg_id]) | stop_seg
+            member_next_node = jnp.where(seg_done, tree.miss[node], node)
+            member_next_ptr = jnp.where(seg_done, jnp.int32(-1), ptr + 1)
+
+            # ---- node step: descend / skip -------------------------------
+            is_leaf = node >= leaf_off
+            seg = jnp.where(is_leaf, node - leaf_off, 0)
+            bd2 = _box_dist2(q, tree.box_lo[node], tree.box_hi[node])
+            overlap = bd2 <= eps2
+            if use_range_mask:
+                overlap = overlap & (tree.range_r[node] >= segs.seg_of_point[q_idx])
+            # internal: go left on overlap else rope; leaf: enter members on
+            # overlap (empty segments skip straight to the rope).
+            child = jnp.where(node < leaf_off,
+                              jnp.where(overlap, tree_left(tree, node), tree.miss[node]),
+                              node)
+            enter_members = is_leaf & overlap & (segs.seg_start[seg] < segs.seg_end[seg])
+            node_next_node = jnp.where(is_leaf,
+                                       jnp.where(enter_members, node, tree.miss[node]),
+                                       child)
+            node_next_ptr = jnp.where(enter_members, segs.seg_start[seg], jnp.int32(-1))
+
+            node_out = jnp.where(is_member_step, member_next_node, node_next_node)
+            ptr_out = jnp.where(is_member_step, member_next_ptr, node_next_ptr)
+            acc_out = jnp.where(is_member_step, acc_new, acc)
+            cnt_out = jnp.where(is_member_step, cnt_new, cnt)
+            return node_out, ptr_out, acc_out, cnt_out
+
+        if mode == "count":
+            acc0 = jnp.int32(0)
+        else:
+            acc0 = point_vals[q_idx] if point_vals.ndim else jnp.int32(INT_MAX)
+        start = jnp.where(active, root, jnp.int32(-1))
+        node, ptr, acc, cnt = lax.while_loop(
+            cond, body, (start, jnp.int32(-1), acc0, jnp.int32(0)))
+        return acc, cnt
+
+    qs = jnp.arange(n, dtype=jnp.int32)
+    return jax.vmap(one_query)(qs, query_active)
+
+
+def tree_left(tree: Tree, node):
+    return tree.left[jnp.clip(node, 0, tree.left.shape[0] - 1)]
+
+
+def count_neighbors(tree: Tree, segs: Segments, eps: float, cap: int,
+                    query_active=None) -> jax.Array:
+    """|N_eps(x)| per sorted point, saturated at ``cap`` (early exit)."""
+    return count_neighbors_with_work(tree, segs, eps, cap, query_active)[0]
+
+
+def count_neighbors_with_work(tree: Tree, segs: Segments, eps: float,
+                              cap: int, query_active=None):
+    """(counts, distance_evaluations) — the paper's work metric."""
+    n = segs.n_points
+    if query_active is None:
+        query_active = jnp.ones(n, bool)
+    dummy = jnp.zeros((), jnp.int32)
+    return traverse(tree, segs, eps, query_active, dummy,
+                    jnp.ones(n, bool), cap=cap, mode="count")
+
+
+def minlabel_sweep(tree: Tree, segs: Segments, eps: float, labels: jax.Array,
+                   gather_mask: jax.Array, query_active: jax.Array):
+    """Per active query: min(label) over neighbors with gather_mask.
+
+    Returns (min_labels, matched_other_count). ``labels`` must already be
+    consistent within dense segments (the caller re-unifies after updates).
+    """
+    return traverse(tree, segs, eps, query_active, labels, gather_mask,
+                    mode="minlabel")
+
+
+def border_gather(tree: Tree, segs: Segments, eps: float, root_labels,
+                  core_mask, query_active):
+    """Min core-neighbor root label per non-core query; INT_MAX if none."""
+    sentinel = jnp.full_like(root_labels, INT_MAX)
+    vals = jnp.where(core_mask, root_labels, sentinel)
+    acc, cnt = traverse(tree, segs, eps, query_active, vals, core_mask,
+                        mode="minlabel")
+    # acc was initialized with vals[q]; for non-core queries that is INT_MAX,
+    # so acc == INT_MAX  <=>  no core neighbor (noise).
+    return acc, cnt

@@ -1,0 +1,45 @@
+"""Bulk-synchronous union-find (TPU adaptation of ECL-CC; DESIGN.md §3).
+
+The paper uses Jaiganesh & Burtscher's synchronization-free GPU union-find
+with *intermediate pointer jumping* (every FIND halves the path it walks,
+via atomic CAS hooks). XLA:TPU exposes no global atomics, so we realize the
+same disjoint-set semantics with deterministic bulk primitives:
+
+  * HOOK:  labels <- min(labels, candidate)  (elementwise / scatter-min),
+  * JUMP:  labels <- labels[labels]          (one gather doubles every path
+           compression step — the bulk analogue of intermediate pointer
+           jumping),
+
+iterated to a fixpoint. ``labels[i]`` always holds the index of some point
+known to be in i's cluster, is monotonically non-increasing, and converges
+to the minimum member index of the connected component (the canonical
+representative). The finalization phase of the paper (make every label point
+at the root) is ``jump_to_fixpoint``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def jump_once(labels: jax.Array) -> jax.Array:
+    return labels[labels]
+
+
+@jax.jit
+def jump_to_fixpoint(labels: jax.Array) -> jax.Array:
+    """Full path compression: every label points at its root."""
+
+    def cond(l):
+        return jnp.any(l != l[l])
+
+    return lax.while_loop(cond, jump_once, labels)
+
+
+def hook(labels: jax.Array, candidate: jax.Array, mask=None) -> jax.Array:
+    """labels <- min(labels, candidate) where mask (monotone hook)."""
+    new = jnp.minimum(labels, candidate)
+    if mask is not None:
+        new = jnp.where(mask, new, labels)
+    return new

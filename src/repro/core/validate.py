@@ -1,0 +1,87 @@
+"""DBSCAN-axiom checker: validates a labeling against first principles.
+
+Border points may legitimately belong to any adjacent cluster (the paper
+assigns "first encountered", we assign min-representative), so label arrays
+cannot be compared naively. This checker accepts exactly the set of valid
+DBSCAN labelings:
+
+  A1  core_mask is correct: |N_eps(x)| >= minpts  <=>  core.
+  A2  density-connected core points share a label (same component of the
+      core-core eps-graph).
+  A3  core points in different components have different labels.
+  A4  a border point (non-core with >= 1 core neighbor) carries the label of
+      at least one core neighbor.
+  A5  noise (non-core, no core neighbor) is labeled -1; nothing else is.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def check_dbscan(points, eps: float, min_pts: int, labels, core_mask) -> None:
+    pts = np.asarray(points, np.float64)
+    labels = np.asarray(labels)
+    core = np.asarray(core_mask)
+    n = pts.shape[0]
+    d2 = ((pts[:, None, :] - pts[None, :, :]) ** 2).sum(-1)
+    adj = d2 <= eps * eps
+
+    counts = adj.sum(1)
+    ref_core = counts >= min_pts
+    assert (core == ref_core).all(), (
+        f"A1 core mask mismatch at {np.nonzero(core != ref_core)[0][:10]}")
+
+    # components of the core-core graph (union-find, NumPy)
+    parent = np.arange(n)
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    ci = np.nonzero(ref_core)[0]
+    for i in ci:
+        for j in np.nonzero(adj[i] & ref_core)[0]:
+            ri, rj = find(i), find(int(j))
+            if ri != rj:
+                parent[max(ri, rj)] = min(ri, rj)
+    comp = np.array([find(i) for i in range(n)])
+
+    for i in ci:
+        assert labels[i] >= 0, f"A2 core point {i} labeled noise"
+    # A2/A3: label partition == component partition on core points
+    for rep in np.unique(comp[ref_core]):
+        ls = np.unique(labels[ref_core & (comp == rep)])
+        assert len(ls) == 1, f"A2 component {rep} split into labels {ls}"
+    by_label = {}
+    for i in ci:
+        by_label.setdefault(int(labels[i]), set()).add(int(comp[i]))
+    for l, comps in by_label.items():
+        assert len(comps) == 1, f"A3 label {l} merges components {comps}"
+
+    for i in np.nonzero(~ref_core)[0]:
+        core_nbrs = np.nonzero(adj[i] & ref_core)[0]
+        if len(core_nbrs) == 0:
+            assert labels[i] == -1, f"A5 isolated point {i} not noise"
+        else:
+            assert labels[i] in set(int(labels[j]) for j in core_nbrs), (
+                f"A4 border {i} labeled {labels[i]} but core nbr labels are "
+                f"{sorted(set(int(labels[j]) for j in core_nbrs))}")
+
+
+def same_partition(labels_a, labels_b) -> bool:
+    """True iff two labelings induce the same partition (noise == noise)."""
+    a = np.asarray(labels_a)
+    b = np.asarray(labels_b)
+    if ((a == -1) != (b == -1)).any():
+        return False
+    fwd, bwd = {}, {}
+    for x, y in zip(a, b):
+        if x == -1:
+            continue
+        if fwd.setdefault(int(x), int(y)) != y:
+            return False
+        if bwd.setdefault(int(y), int(x)) != x:
+            return False
+    return True

@@ -1,0 +1,3 @@
+from . import pointclouds
+
+__all__ = ["pointclouds"]

@@ -1,0 +1,42 @@
+"""DBSCAN-powered near-duplicate filtering for the LM data pipeline.
+
+This is the paper's technique as a first-class framework feature
+(DESIGN.md §4): each training batch's documents are embedded into 3-D
+(lm_data.doc_embedding — low-dimensional by construction, the paper's
+target regime), clustered with FDBSCAN-DenseBox, and each duplicate
+cluster is thinned to ``keep_per_cluster`` representatives. Noise points
+(unique documents) always survive. On-device, O(n) memory, and fast enough
+to sit inline in the input pipeline; the distributed variant swaps in
+ring_dbscan over the data axis.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import dbscan
+from .lm_data import doc_embedding
+
+
+def dedup_indices(tokens: np.ndarray, *, eps: float = 0.15,
+                  min_pts: int = 2, keep_per_cluster: int = 1,
+                  embed_dim: int = 3, seed: int = 0,
+                  algorithm: str = "fdbscan-densebox") -> np.ndarray:
+    """Indices of documents to KEEP (stable order)."""
+    emb = doc_embedding(tokens, dim=embed_dim, seed=seed)
+    res = dbscan(emb, eps, min_pts, algorithm=algorithm)
+    labels = np.asarray(res.labels)
+    keep = np.zeros(len(labels), bool)
+    keep[labels == -1] = True                       # unique docs survive
+    for c in range(res.n_clusters):
+        members = np.nonzero(labels == c)[0]
+        keep[members[:keep_per_cluster]] = True
+    return np.nonzero(keep)[0]
+
+
+def dedup_batch(batch: dict, pad_to: int | None = None, **kw) -> dict:
+    """Filter a batch dict (leading dim = documents); optionally re-pad by
+    cycling survivors so downstream shapes stay static."""
+    idx = dedup_indices(batch["tokens"], **kw)
+    if pad_to is not None:
+        idx = np.resize(idx, pad_to)
+    return {k: v[idx] for k, v in batch.items()}, idx

@@ -1,0 +1,61 @@
+"""Synthetic LM data pipeline with controllable near-duplicate structure.
+
+The stream is a mixture of (a) fresh zipfian token documents and (b) noisy
+copies of a small template pool — the near-duplicate regime that embedding
+dedup (dedup.py, via the paper's DBSCAN) is built to clean. Deterministic
+per (seed, step): a restart resumes the exact stream position, which the
+fault-tolerance test relies on.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class SyntheticLM:
+    def __init__(self, vocab_size: int, seq_len: int, seed: int = 0,
+                 dup_frac: float = 0.3, n_templates: int = 8):
+        self.vocab = vocab_size
+        self.seq = seq_len
+        self.seed = seed
+        self.dup_frac = dup_frac
+        tr = np.random.default_rng(seed ^ 0xD5A1)
+        # low-entropy templates: repeated motifs make them learnable & dense
+        motifs = tr.integers(1, min(vocab_size, 512), size=(n_templates, 16))
+        reps = self.seq // 16 + 1
+        self.templates = np.tile(motifs, (1, reps))[:, :seq_len]
+
+    def batch(self, step: int, batch_size: int) -> dict:
+        rng = np.random.default_rng((self.seed, step))
+        is_dup = rng.random(batch_size) < self.dup_frac
+        toks = np.empty((batch_size, self.seq), np.int32)
+        # zipfian fresh docs
+        fresh = rng.zipf(1.3, size=(batch_size, self.seq)) % self.vocab
+        toks[:] = fresh
+        # noisy template copies
+        which = rng.integers(0, len(self.templates), size=batch_size)
+        noise = rng.random((batch_size, self.seq)) < 0.005
+        dup_tok = self.templates[which]
+        dup_tok = np.where(noise, fresh, dup_tok)
+        toks[is_dup] = dup_tok[is_dup]
+        return {"tokens": toks, "is_dup": is_dup}
+
+
+def doc_embedding(tokens: np.ndarray, dim: int = 3, seed: int = 0) -> np.ndarray:
+    """Cheap content embedding: random-projected bigram histogram sketch.
+
+    Parameter-free (no model in the loop) and low-dimensional by
+    construction — exactly the regime the paper's tree algorithms target
+    (DESIGN.md §4). Near-duplicate documents land within a tight eps ball.
+    """
+    B, S = tokens.shape
+    h = (tokens[:, :-1].astype(np.int64) * 1000003 + tokens[:, 1:]) % 4096
+    # drop bigrams touching the zipf head ("stopwords"): they correlate all
+    # fresh documents and would swamp the near-duplicate signal
+    keep = (tokens[:, :-1] >= 16) & (tokens[:, 1:] >= 16)
+    hist = np.zeros((B, 4096), np.float32)
+    rows = np.repeat(np.arange(B), S - 1)
+    np.add.at(hist, (rows, h.reshape(-1)), keep.reshape(-1).astype(np.float32))
+    hist /= np.linalg.norm(hist, axis=1, keepdims=True) + 1e-9
+    proj = np.random.default_rng(seed).normal(
+        size=(4096, dim)).astype(np.float32) / np.sqrt(dim)
+    return hist @ proj

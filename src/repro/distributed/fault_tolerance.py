@@ -1,0 +1,115 @@
+"""Fleet-resilience utilities: straggler detection, heartbeats, restart.
+
+On a 1000+ node fleet the three recurring events are (a) slow nodes
+(stragglers), (b) dead nodes, (c) preemptions. The framework's answers:
+
+* ``StragglerMonitor`` — robust z-score (median/MAD) over recent step
+  times; a step beyond ``threshold`` MADs flags a straggler. On a real
+  fleet the flag feeds the scheduler's replace/evict hook (``on_straggler``);
+  the default hook just logs.
+* ``HeartbeatBoard`` — per-worker heartbeat timestamps with a liveness
+  sweep; workers silent for > ``timeout`` are declared dead (the trigger
+  for checkpoint-restart with a shrunken mesh — the elastic path in
+  ``checkpoint.restore(shardings=new_mesh_shardings)``).
+* ``run_resilient`` — the supervisor loop used by launch/train.py: run
+  steps, checkpoint every ``ckpt_every``, and on any step exception restore
+  the latest checkpoint and continue (bounded retries).
+"""
+from __future__ import annotations
+
+import collections
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+
+class StragglerMonitor:
+    def __init__(self, window: int = 50, threshold: float = 6.0,
+                 on_straggler: Optional[Callable] = None):
+        self.times = collections.deque(maxlen=window)
+        self.threshold = threshold
+        self.on_straggler = on_straggler or (lambda *a: None)
+        self.flagged = []
+
+    def record(self, step: int, dt: float) -> bool:
+        """Record a step time; returns True if flagged as straggler."""
+        import numpy as np
+        if len(self.times) >= 8:
+            med = float(np.median(self.times))
+            mad = float(np.median(np.abs(np.asarray(self.times) - med)))
+            sigma = max(1.4826 * mad, 1e-6)
+            if dt - med > self.threshold * sigma:
+                self.flagged.append((step, dt, med))
+                self.on_straggler(step, dt, med)
+                self.times.append(dt)
+                return True
+        self.times.append(dt)
+        return False
+
+
+class HeartbeatBoard:
+    def __init__(self, timeout: float = 60.0):
+        self.timeout = timeout
+        self.last = {}
+
+    def beat(self, worker: str, t: float | None = None):
+        self.last[worker] = time.time() if t is None else t
+
+    def dead_workers(self, now: float | None = None) -> list[str]:
+        now = time.time() if now is None else now
+        return [w for w, t in self.last.items() if now - t > self.timeout]
+
+
+@dataclass
+class ResilienceReport:
+    steps_run: int = 0
+    failures: int = 0
+    restores: int = 0
+    stragglers: int = 0
+    history: list = field(default_factory=list)
+
+
+def run_resilient(step_fn, state, n_steps: int, *, ckpt, ckpt_every: int = 10,
+                  max_retries: int = 3, monitor: StragglerMonitor | None = None,
+                  on_metrics: Optional[Callable] = None) -> tuple:
+    """Supervisor loop: step, checkpoint, restore-on-failure.
+
+    ``step_fn(state, step) -> (state, metrics)`` must be a pure step.
+    ``state`` must match the checkpoint target structure.
+    """
+    report = ResilienceReport()
+    monitor = monitor or StragglerMonitor()
+    start = ckpt.latest_step()
+    step = 0
+    if start is not None:
+        state, step = ckpt.restore(state)
+        report.restores += 1
+    retries = 0
+    while step < n_steps:
+        t0 = time.time()
+        try:
+            state, metrics = step_fn(state, step)
+        except Exception:
+            report.failures += 1
+            retries += 1
+            if retries > max_retries:
+                raise
+            latest = ckpt.latest_step()
+            if latest is not None:
+                state, step = ckpt.restore(state)
+                report.restores += 1
+            continue
+        retries = 0
+        dt = time.time() - t0
+        if monitor.record(step, dt):
+            report.stragglers += 1
+        step += 1
+        report.steps_run += 1
+        report.history.append(metrics)
+        if on_metrics:
+            on_metrics(step, metrics)
+        if step % ckpt_every == 0 or step == n_steps:
+            ckpt.wait()
+            ckpt.save(step, state, blocking=False)
+    ckpt.wait()
+    return state, step, report

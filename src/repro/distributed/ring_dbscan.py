@@ -1,0 +1,183 @@
+"""Distributed DBSCAN: systolic ring over device shards (beyond-paper).
+
+The paper's §6 lists distribution as future work; this is the TPU-native
+extension (DESIGN.md §3). Points are Morton-sorted (spatial locality per
+shard) and sharded over the mesh's data axis. Each phase is a *ring
+systolic* pass: every device holds its resident block and a traveling
+block; at each of the ``ndev`` steps it runs the dense pairwise tile
+epilogue (neighbor count / min-label hook) between resident queries and the
+traveling block, then rotates the traveling block with
+``lax.ppermute`` — nearest-neighbor ICI traffic that overlaps with the tile
+compute, exactly the collective/compute overlap pattern the MXU kernel
+needs to stay fed.
+
+Union-find across shards: labels are global indices; after each ring hook
+sweep, labels are all-gathered (n x int32 — tiny next to the O(n^2/P)
+distance work) and pointer jumping runs locally to a fixpoint. Sweeps
+repeat until a global psum reports no change.
+
+The per-tile epilogues default to the pure-jnp oracle (portable: CPU tests
+run it under shard_map); on TPU the Pallas kernels in repro.kernels slot in
+via ``use_pallas=True`` (same contract, validated against the same refs).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import morton
+from repro.core.fdbscan import DBSCANResult, _finalize
+
+INT_MAX = jnp.iinfo(jnp.int32).max
+
+
+def _vary(x, axis, enabled=True):
+    """Mark a loop-carry init as device-varying (shard_map VMA typing)."""
+    if not enabled:
+        return x
+    return jax.lax.pcast(x, (axis,), to="varying")
+
+
+def _shard_map(fn, mesh, in_specs, out_specs, check_vma=True):
+    # check_vma=False is required when pl.pallas_call runs inside the body
+    # (its out_shape ShapeDtypeStructs carry no varying-axes typing).
+    try:
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    except AttributeError:  # older spelling
+        from jax.experimental.shard_map import shard_map
+        return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=check_vma)
+
+
+def _count_tile(q, r, eps):
+    d2 = jnp.sum((q[:, None, :] - r[None, :, :]) ** 2, -1)
+    return jnp.sum(d2 <= eps * eps, axis=1).astype(jnp.int32)
+
+
+def _minlabel_tile(q, r, labels_r, mask_r, eps):
+    d2 = jnp.sum((q[:, None, :] - r[None, :, :]) ** 2, -1)
+    ok = (d2 <= eps * eps) & mask_r[None, :]
+    return jnp.min(jnp.where(ok, labels_r[None, :], INT_MAX), axis=1)
+
+
+def _pallas_count(q, r, eps):
+    from repro.kernels import pairwise_count
+    return pairwise_count(q, r, eps, interpret=True)
+
+
+def _pallas_minlabel(q, r, labels_r, mask_r, eps):
+    from repro.kernels import pairwise_minlabel
+    return pairwise_minlabel(q, r, labels_r, mask_r, eps, interpret=True)[0]
+
+
+def ring_dbscan(points, eps: float, min_pts: int, mesh=None,
+                axis: str = "data", use_pallas: bool = False,
+                max_jump: int = 32) -> DBSCANResult:
+    points = jnp.asarray(points, jnp.float32)
+    n, d = points.shape
+    if mesh is None:
+        ndev = len(jax.devices())
+        mesh = jax.make_mesh((ndev,), (axis,))
+    ndev = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+
+    pts_sorted, order, _ = morton.morton_sort(points)
+    n_pad = ((n + ndev - 1) // ndev) * ndev
+    pts_pad = jnp.pad(pts_sorted, ((0, n_pad - n), (0, 0)),
+                      constant_values=1e30)  # sentinels never match
+    n_loc = n_pad // ndev
+    count_tile = _pallas_count if use_pallas else _count_tile
+    minlabel_tile = _pallas_minlabel if use_pallas else _minlabel_tile
+    check_vma = not use_pallas
+    perm = [(i, (i + 1) % ndev) for i in range(ndev)]
+
+    def kernel(local_pts):
+        me = lax.axis_index(axis)
+        offset = me.astype(jnp.int32) * n_loc
+        gid = offset + jnp.arange(n_loc, dtype=jnp.int32)
+        valid = gid < n
+
+        # ---- phase 1 (preprocessing): ring neighbor count ----------------
+        def count_body(i, carry):
+            counts, block = carry
+            counts = counts + count_tile(local_pts, block, eps)
+            return counts, lax.ppermute(block, axis, perm)
+
+        counts, _ = lax.fori_loop(
+            0, ndev, count_body,
+            (_vary(jnp.zeros(n_loc, jnp.int32), axis, check_vma), local_pts))
+        core = (counts >= min_pts) & valid
+
+        # ---- phase 2 (main): ring hook sweeps + global pointer jumping ---
+        labels = jnp.where(core, gid, INT_MAX)
+
+        def jump(labels):
+            # collectives live in the body (not cond): the carry holds the
+            # already-psum'd global change flag.
+            def body(state):
+                l, _ = state
+                table = lax.all_gather(l, axis, tiled=True)   # (n_pad,)
+                safe = jnp.where(l == INT_MAX, 0, l)
+                nl = jnp.where(l == INT_MAX, l, table[safe])
+                changed = lax.psum(jnp.any(nl != l).astype(jnp.int32), axis)
+                return nl, _vary(changed > 0, axis, check_vma)
+
+            labels, _ = lax.while_loop(lambda s: s[1], body,
+                                       (labels, _vary(jnp.bool_(True), axis, check_vma)))
+            return labels
+
+        def sweep_body(state):
+            labels, _ = state
+
+            def ring(i, carry):
+                best, blk_pts, blk_lab, blk_core = carry
+                got = minlabel_tile(local_pts, blk_pts, blk_lab, blk_core, eps)
+                best = jnp.minimum(best, got)
+                return (best,
+                        lax.ppermute(blk_pts, axis, perm),
+                        lax.ppermute(blk_lab, axis, perm),
+                        lax.ppermute(blk_core, axis, perm))
+
+            best, _, _, _ = lax.fori_loop(
+                0, ndev, ring,
+                (_vary(jnp.full(n_loc, INT_MAX, jnp.int32), axis, check_vma),
+                 local_pts, labels, core))
+            new = jnp.where(core, jnp.minimum(labels, best), labels)
+            new = jump(new)
+            changed = lax.psum(jnp.any(new != labels).astype(jnp.int32), axis)
+            return new, _vary(changed > 0, axis, check_vma)
+
+        labels, _ = lax.while_loop(lambda s: s[1], sweep_body,
+                                   (labels, _vary(jnp.bool_(True), axis, check_vma)))
+
+        # ---- borders: one more ring pass over core roots ------------------
+        def bring(i, carry):
+            best, blk_pts, blk_lab, blk_core = carry
+            got = minlabel_tile(local_pts, blk_pts, blk_lab, blk_core, eps)
+            return (jnp.minimum(best, got),
+                    lax.ppermute(blk_pts, axis, perm),
+                    lax.ppermute(blk_lab, axis, perm),
+                    lax.ppermute(blk_core, axis, perm))
+
+        broot = jnp.where(core, labels, INT_MAX)
+        best, _, _, _ = lax.fori_loop(
+            0, ndev, bring,
+            (_vary(jnp.full(n_loc, INT_MAX, jnp.int32), axis, check_vma),
+             local_pts, broot, core))
+        labels = jnp.where(core, labels, jnp.where(valid, best, INT_MAX))
+        labels = jnp.where(labels == INT_MAX, jnp.int32(-1), labels)
+        return labels, core
+
+    fn = _shard_map(kernel, mesh, in_specs=P(axis),
+                    out_specs=(P(axis), P(axis)), check_vma=check_vma)
+    labels_pad, core_pad = jax.jit(fn)(pts_pad)
+    labels_sorted = labels_pad[:n]   # -1 noise, else global sorted index
+    core_sorted = core_pad[:n]
+    labels, n_clusters = _finalize(labels_sorted, order, n)
+    core_mask = jnp.zeros(n, bool).at[order].set(core_sorted)
+    return DBSCANResult(labels=labels, core_mask=core_mask,
+                        n_clusters=n_clusters, n_sweeps=-1)

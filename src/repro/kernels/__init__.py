@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the DBSCAN compute hot spots (+ jnp oracles)."""
+from .pairwise import pairwise_count, pairwise_minlabel
+from .ops import dbscan_tiled
+from . import ref
+
+__all__ = ["pairwise_count", "pairwise_minlabel", "dbscan_tiled", "ref"]

@@ -1,0 +1,23 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+INT_MAX = jnp.iinfo(jnp.int32).max
+
+
+def pairwise_count_ref(points_q, points_r, eps, cap: int = INT_MAX):
+    q = points_q.astype(jnp.float32)
+    r = points_r.astype(jnp.float32)
+    d2 = jnp.sum((q[:, None, :] - r[None, :, :]) ** 2, -1)
+    cnt = jnp.sum(d2 <= eps * eps, axis=1).astype(jnp.int32)
+    return jnp.minimum(cnt, cap)
+
+
+def pairwise_minlabel_ref(points_q, points_r, labels_r, mask_r, eps):
+    q = points_q.astype(jnp.float32)
+    r = points_r.astype(jnp.float32)
+    d2 = jnp.sum((q[:, None, :] - r[None, :, :]) ** 2, -1)
+    ok = (d2 <= eps * eps) & mask_r.astype(bool)[None, :]
+    labs = jnp.where(ok, labels_r.astype(jnp.int32)[None, :], INT_MAX)
+    return jnp.min(labs, axis=1), jnp.sum(ok, axis=1).astype(jnp.int32)

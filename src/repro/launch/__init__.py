@@ -1,0 +1,5 @@
+# NOTE: dryrun is intentionally not imported here — it sets XLA_FLAGS on
+# import and must only run as its own process (python -m repro.launch.dryrun).
+from . import mesh, roofline, specs
+
+__all__ = ["mesh", "roofline", "specs"]

@@ -1,0 +1,187 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_REPRO_EXTRA_XLA", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be run as its own process (the XLA_FLAGS line above precedes any jax
+import so 512 placeholder host devices exist). Per cell, three compiles:
+
+  1. multi-pod (2,16,16) mesh, scanned blocks  — proves the "pod" axis
+     shards (deliverable e); cheap compile.
+  2. single-pod (16,16) mesh, scanned blocks   — the deployable program;
+     memory_analysis() proves per-device fit.
+  3. single-pod, *unrolled* blocks             — XLA cost_analysis counts a
+     while body once, so roofline FLOPs/bytes/collectives are extracted
+     from a fully unrolled lowering (compile-heavy; roofline table is
+     single-pod only, matching the assignment).
+
+Sequential-scan caveat (DESIGN.md §6): the wkv/SSM *time* recurrences stay
+`lax.scan` even when blocks are unrolled; their inner elementwise flops are
+a low single-digit % of layer flops (projections/einsums sit outside the
+scan) and are noted as an undercount in EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen1.5-4b --shape train_4k
+  python -m repro.launch.dryrun --all --out-dir results/dryrun --resume
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+
+def _memory_record(compiled):
+    try:
+        mem = compiled.memory_analysis()
+        return {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+        }
+    except Exception as e:
+        return {"error": str(e)}
+
+
+def _compile(arch, shape, mesh, unroll, **kw):
+    from repro.launch import specs
+    fn, args, in_sh, out_sh, meta = specs.build_cell(
+        arch, shape, mesh, unroll=unroll, **kw)
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=in_sh,
+                          out_shardings=out_sh).lower(*args)
+        compiled = lowered.compile()
+    return compiled, meta
+
+
+def run_cell(arch: str, shape: str, *, n_micro: int = 1, zero1: bool = True,
+             remat: bool = True, phases=("multi", "fit", "roofline"),
+             kv_policy: str = "auto", grad_rs: bool = False) -> dict:
+    from repro.launch import mesh as mesh_lib
+    from repro.launch import roofline, specs
+
+    reason = specs.skip_reason(arch, shape)
+    rec = {"arch": arch, "shape": shape}
+    if reason:
+        rec.update(status="SKIP", reason=reason)
+        return rec
+    kw = dict(n_micro=n_micro, zero1=zero1, remat=remat,
+              kv_policy=kv_policy, grad_rs=grad_rs)
+
+    if "multi" in phases:  # (2,16,16): the pod axis shards
+        t0 = time.time()
+        mesh = mesh_lib.make_production_mesh(multi_pod=True)
+        compiled, _ = _compile(arch, shape, mesh, unroll=False, **kw)
+        rec["multi_pod"] = {"mesh": "2x16x16", "status": "OK",
+                            "compile_s": round(time.time() - t0, 1),
+                            "memory": _memory_record(compiled)}
+        del compiled
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=False)
+    n_dev = mesh.devices.size
+
+    if "fit" in phases:  # deployable scanned program: memory fit proof
+        t0 = time.time()
+        compiled, _ = _compile(arch, shape, mesh, unroll=False, **kw)
+        rec["fit"] = {"mesh": "16x16", "status": "OK",
+                      "compile_s": round(time.time() - t0, 1),
+                      "memory": _memory_record(compiled),
+                      "hbm_per_chip": mesh_lib.HBM_PER_CHIP}
+        del compiled
+
+    if "roofline" in phases:  # unrolled: accurate cost/collectives
+        t0 = time.time()
+        compiled, meta = _compile(arch, shape, mesh, unroll=True, **kw)
+        cost_list = compiled.cost_analysis()
+        cost = cost_list[0] if isinstance(cost_list, (list, tuple)) else cost_list
+        wire = roofline.collective_wire_bytes(compiled.as_text(), n_dev)
+        terms = roofline.roofline_terms(
+            cost, wire, peak_flops=mesh_lib.PEAK_FLOPS_BF16,
+            hbm_bw=mesh_lib.HBM_BW, ici_bw=mesh_lib.ICI_BW)
+        n_active = meta["params_active"]
+        if meta["kind"] == "train":
+            model_flops = 6 * n_active * meta["batch"] * meta["seq"] / n_dev
+        elif meta["kind"] == "prefill":
+            model_flops = 2 * n_active * meta["batch"] * meta["seq"] / n_dev
+        else:
+            model_flops = 2 * n_active * meta["batch"] / n_dev
+        rec["meta"] = meta
+        rec["roofline"] = dict(
+            terms, compile_s=round(time.time() - t0, 1),
+            wire_by_kind={k: v for k, v in wire.items() if k != "counts"},
+            collective_counts=wire["counts"],
+            model_flops_per_dev=model_flops,
+            useful_flops_ratio=(model_flops / terms["hlo_flops"]
+                                if terms["hlo_flops"] else None))
+    rec["status"] = "OK"
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out")
+    ap.add_argument("--out-dir")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--phases", default="multi,fit,roofline")
+    ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--no-zero1", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--kv-policy", default="auto",
+                    choices=["auto", "heads", "seq", "headdim"])
+    ap.add_argument("--grad-rs", action="store_true",
+                    help="pin ZeRO-1 grad shardings (reduce-scatter)")
+    args = ap.parse_args()
+
+    from repro.configs import names
+    from repro.launch.specs import CELLS
+
+    archs = names() if args.all else [args.arch]
+    shapes = list(CELLS) if (args.all or not args.shape) else [args.shape]
+    phases = tuple(args.phases.split(","))
+
+    results = []
+    for a in archs:
+        for s in shapes:
+            fname = (os.path.join(args.out_dir, f"{a}__{s}.json")
+                     if args.out_dir else None)
+            if args.resume and fname and os.path.exists(fname):
+                print(f"[dryrun] {a}/{s}: cached", flush=True)
+                results.append(json.load(open(fname)))
+                continue
+            try:
+                rec = run_cell(a, s, n_micro=args.n_micro,
+                               zero1=not args.no_zero1,
+                               remat=not args.no_remat, phases=phases,
+                               kv_policy=args.kv_policy,
+                               grad_rs=args.grad_rs)
+            except Exception:
+                rec = {"arch": a, "shape": s, "status": "FAIL",
+                       "error": traceback.format_exc()}
+            extra = ""
+            if rec.get("roofline"):
+                r = rec["roofline"]
+                extra = (f" dominant={r['dominant']}"
+                         f" bound={r['bound_time_s']:.4f}s")
+            print(f"[dryrun] {a}/{s}: {rec['status']}{extra}", flush=True)
+            results.append(rec)
+            if fname:
+                os.makedirs(args.out_dir, exist_ok=True)
+                with open(fname, "w") as f:
+                    json.dump(rec, f, indent=1)
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results if len(results) > 1 else results[0], f, indent=1)
+    n_fail = sum(r["status"] == "FAIL" for r in results)
+    print(f"[dryrun] done: {len(results)} cells, {n_fail} failures")
+    sys.exit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

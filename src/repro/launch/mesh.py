@@ -1,0 +1,34 @@
+"""Production mesh definitions.
+
+Factory functions only — importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS for 512 host devices *before* any jax
+import; tests and benches see the real single device).
+
+Topology: a TPU v5e pod of 256 chips is a 16x16 mesh (data, model); the
+multi-pod configuration adds a leading "pod" axis (2 pods = 512 chips).
+The pod axis is pure data parallelism by default and is the pipeline axis
+for the GPipe schedule in repro/train/pipeline.py.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Mesh over whatever devices exist (tests: 1 CPU or 8 fake hosts)."""
+    n = len(jax.devices())
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+# TPU v5e hardware constants used by the roofline analysis
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link (per direction)
+HBM_PER_CHIP = 16 * 2**30       # 16 GiB

@@ -1,0 +1,111 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+compute term    = HLO_FLOPs / peak_FLOPs          (per chip: post-SPMD HLO)
+memory term     = HLO_bytes / HBM_bw
+collective term = wire_bytes / ICI_bw
+
+``cost_analysis`` provides per-partition FLOPs and bytes accessed. Wire
+bytes are parsed from the post-SPMD HLO text: for each collective op the
+*result* buffer size R gives per-chip traffic via the op-specific ring cost
+(all-reduce 2R, all-gather R, reduce-scatter R x group, all-to-all R,
+collective-permute R). Group sizes come from the op's replica_groups.
+"""
+from __future__ import annotations
+
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_TILED_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _result_bytes(lhs: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(lhs):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_TILED_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def collective_wire_bytes(hlo_text: str, n_devices: int) -> dict:
+    """Per-chip wire bytes by collective kind, from post-SPMD HLO."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            continue
+        rhs = line.split("=", 1)[1]
+        for kind in _COLLECTIVES:
+            # match "<result type> all-reduce(" or "... all-reduce-start("
+            if f" {kind}(" in rhs:
+                token = f" {kind}("
+            elif f" {kind}-start(" in rhs:
+                token = f" {kind}-start("
+            else:
+                continue
+            lhs = rhs.split(token, 1)[0]
+            r = _result_bytes(lhs)
+            if r == 0:
+                continue
+            g = _group_size(line, n_devices)
+            if kind == "all-reduce":
+                wire = 2 * r * (g - 1) // max(g, 1)
+            elif kind == "all-gather":
+                wire = r * (g - 1) // max(g, 1)
+            elif kind == "reduce-scatter":
+                wire = r * (g - 1)
+            elif kind == "all-to-all":
+                wire = r * (g - 1) // max(g, 1)
+            else:  # collective-permute
+                wire = r
+            out[kind] += wire
+            counts[kind] += 1
+            break
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["counts"] = counts
+    return out
+
+
+def roofline_terms(cost: dict, wire: dict, *, peak_flops: float,
+                   hbm_bw: float, ici_bw: float) -> dict:
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    t_compute = flops / peak_flops
+    t_memory = bytes_accessed / hbm_bw
+    t_collective = wire["total"] / ici_bw
+    dominant = max(
+        (("compute", t_compute), ("memory", t_memory),
+         ("collective", t_collective)), key=lambda kv: kv[1])[0]
+    return {
+        "hlo_flops": flops,
+        "hlo_bytes": bytes_accessed,
+        "wire_bytes": wire["total"],
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+        "dominant": dominant,
+        "bound_time_s": max(t_compute, t_memory, t_collective),
+    }

@@ -1,0 +1,83 @@
+"""Batched serving driver: prefill + decode loop with the cached step.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --reduced \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="rwkv6-1.6b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    from repro.configs import get
+    from repro.models import model
+    from repro.train import step as step_lib
+
+    cfg = get(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    B, P, G = args.batch, args.prompt_len, args.gen
+    S_max = P + G
+    params = model.init_params(cfg, jax.random.PRNGKey(args.seed))
+    rng = np.random.default_rng(args.seed)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, P)), jnp.int32)
+
+    batch = {"tokens": prompts}
+    if cfg.frontend == "vision":
+        batch["patches"] = jnp.asarray(
+            rng.normal(size=(B, cfg.n_frontend_tokens,
+                             model.VISION_EMBED_DIM)), jnp.float32)
+    if cfg.is_encdec:
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(B, P, cfg.d_model)), jnp.float32) * 0.02
+
+    t0 = time.time()
+    logits, cache = model.prefill(cfg, params, batch)
+    # pad kv caches from prompt length to the full decode budget
+    def grow(entry):
+        out = dict(entry)
+        for key in ("k", "v"):
+            if key in entry and entry[key].shape[2] < S_max:
+                pad = S_max - entry[key].shape[2]
+                out[key] = jnp.pad(entry[key],
+                                   ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        return out
+    cache = tuple(grow(e) for e in cache)
+    next_tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    t_prefill = time.time() - t0
+
+    serve_step = jax.jit(step_lib.make_serve_step(cfg))
+    out_tokens = [next_tok]
+    t0 = time.time()
+    for i in range(G - 1):
+        cache, nt = serve_step(params, cache, out_tokens[-1],
+                               jnp.asarray(P + i, jnp.int32))
+        out_tokens.append(nt[:, None])
+    gen = np.concatenate([np.asarray(t) for t in out_tokens], axis=1)
+    dt = time.time() - t0
+    print(f"[serve] {cfg.name}: prefill({B}x{P}) {t_prefill:.2f}s, "
+          f"decode {G-1} steps {dt:.2f}s "
+          f"({B*(G-1)/max(dt,1e-9):.1f} tok/s incl. compile)")
+    print("[serve] sample continuations:")
+    for b in range(min(B, 2)):
+        print(f"  prompt[-5:]={np.asarray(prompts[b, -5:]).tolist()} "
+              f"-> gen={gen[b, :10].tolist()}")
+    return gen
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,132 @@
+"""(arch x input-shape) cell definitions for the dry-run & roofline matrix.
+
+``build_cell`` returns everything needed to lower a cell with zero device
+allocation: the step function, ShapeDtypeStruct stand-ins for every input
+(params and optimizer state included, via ``jax.eval_shape`` over the init),
+and NamedShardings resolved per tensor (repro.distributed.sharding).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get
+from repro.distributed import sharding as shd
+from repro.models import model
+from repro.train import step as step_lib
+from repro.train.optimizer import adamw_init
+
+
+class Cell(NamedTuple):
+    kind: str       # train | prefill | decode
+    seq: int
+    batch: int
+
+
+CELLS = {
+    "train_4k": Cell("train", 4096, 256),
+    "prefill_32k": Cell("prefill", 32768, 32),
+    "decode_32k": Cell("decode", 32768, 128),
+    "long_500k": Cell("decode", 524288, 1),
+}
+
+
+def skip_reason(arch: str, shape: str) -> Optional[str]:
+    cfg = get(arch)
+    if shape == "long_500k" and not cfg.is_subquadratic:
+        if cfg.is_encdec:
+            return "enc-dec audio arch: decoder context is architecturally 448"
+        if "attn" in cfg.layer_pattern and cfg.sliding_window:
+            return "global full-attention layers dominate at 500k (gemma2)"
+        return "pure full-attention arch: quadratic prefill / unbounded cache"
+    return None
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg, cell: Cell, param_dtype=jnp.bfloat16):
+    """ShapeDtypeStructs for one input batch of this cell."""
+    B, S = cell.batch, cell.seq
+    if cell.kind == "decode":
+        return {"tokens": _sds((B, 1), jnp.int32)}
+    batch = {}
+    if cfg.is_encdec:
+        batch["frames"] = _sds((B, S, cfg.d_model), param_dtype)
+        batch["tokens"] = _sds((B, S), jnp.int32)
+        return batch
+    n_text = S - (cfg.n_frontend_tokens if cfg.frontend == "vision" else 0)
+    batch["tokens"] = _sds((B, n_text), jnp.int32)
+    if cfg.frontend == "vision":
+        batch["patches"] = _sds((B, cfg.n_frontend_tokens,
+                                 model.VISION_EMBED_DIM), param_dtype)
+    return batch
+
+
+def build_cell(arch: str, shape: str, mesh, *, n_micro: int = 1,
+               zero1: bool = True, param_dtype=jnp.bfloat16,
+               remat: bool = True, data_axes=None, unroll: bool = True,
+               kv_policy: str = "auto", grad_rs: bool = False):
+    """Returns (fn, args, in_shardings, out_shardings, meta)."""
+    cfg = get(arch)
+    cell = CELLS[shape]
+    if data_axes is None:
+        data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    params_sds = jax.eval_shape(
+        lambda: model.init_params(cfg, jax.random.PRNGKey(0), param_dtype))
+    params_sh = shd.params_shardings(params_sds, mesh)
+    repl = NamedSharding(mesh, P())
+    meta = {"arch": arch, "shape": shape, "kind": cell.kind,
+            "batch": cell.batch, "seq": cell.seq,
+            "params_total": cfg.params_total(),
+            "params_active": cfg.params_per_token_active()}
+
+    if cell.kind == "train":
+        opt_sds = jax.eval_shape(adamw_init, params_sds)
+        opt_sh = shd.opt_shardings(opt_sds, params_sh, mesh, zero1=zero1)
+        bsds = batch_specs(cfg, cell, param_dtype)
+        bsh = shd.batch_shardings(bsds, mesh, data_axes)
+        fn = step_lib.make_train_step(
+            cfg, n_micro=n_micro, unroll=unroll,
+            grad_shardings=opt_sh.m if grad_rs else None)
+        metrics_sh = {"ce": repl, "aux": repl, "loss": repl, "step": repl}
+        return (fn, (params_sds, opt_sds, bsds),
+                (params_sh, opt_sh, bsh),
+                (params_sh, opt_sh, metrics_sh), meta)
+
+    if cell.kind == "prefill":
+        bsds = batch_specs(cfg, cell, param_dtype)
+        bsh = shd.batch_shardings(bsds, mesh, data_axes)
+        fn = step_lib.make_prefill_step(cfg, unroll=unroll)
+        cache_sds = jax.eval_shape(fn, params_sds, bsds)[0]
+        cache_sh = shd.cache_shardings(cache_sds, mesh, batch=cell.batch,
+                                       kv_policy=kv_policy)
+        nt_sh = shd.batch_shardings(
+            jax.eval_shape(fn, params_sds, bsds)[1], mesh, data_axes)
+        return (fn, (params_sds, bsds), (params_sh, bsh),
+                (cache_sh, nt_sh), meta)
+
+    # decode: one new token against a seq-long cache
+    cache_sds = jax.eval_shape(
+        lambda: model.init_cache(cfg, cell.batch, cell.seq, param_dtype))
+    cache_sh = shd.cache_shardings(cache_sds, mesh, batch=cell.batch,
+                                   kv_policy=kv_policy)
+    tok_sds = {"tokens": _sds((cell.batch, 1), jnp.int32)}
+    tok_sh = shd.batch_shardings(tok_sds, mesh, data_axes)
+    fn0 = step_lib.make_serve_step(cfg, unroll=unroll)
+    pos = cell.seq - 1  # static: write slot for the new token
+
+    def fn(params, cache, tokens):
+        return fn0(params, cache, tokens, pos)
+
+    nt_sds = jax.eval_shape(fn, params_sds, cache_sds, tok_sds["tokens"])[1]
+    nt_sh = shd.batch_shardings(nt_sds, mesh, data_axes)
+    return (fn, (params_sds, cache_sds, tok_sds["tokens"]),
+            (params_sh, cache_sh, tok_sh["tokens"]),
+            (cache_sh, nt_sh), meta)

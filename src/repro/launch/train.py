@@ -1,0 +1,135 @@
+"""End-to-end resilient trainer.
+
+Wires together: arch configs, synthetic data + DBSCAN dedup, sharded
+train step (DP x TP on whatever devices exist), AdamW, atomic/async
+checkpointing with auto-resume, straggler monitoring, and an optional
+injected failure (--fail-at-step) to exercise the restart path.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-4b --reduced \
+      --steps 100 --batch 8 --seq 128 --dedup --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-4b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-test scale config")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--dedup", action="store_true",
+                    help="DBSCAN near-duplicate filtering in the pipeline")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--fail-at-step", type=int, default=None,
+                    help="inject one failure (tests checkpoint-restart)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    from repro.configs import get
+    from repro.data.dedup import dedup_batch
+    from repro.data.lm_data import SyntheticLM
+    from repro.distributed import sharding as shd
+    from repro.distributed.checkpoint import CheckpointManager
+    from repro.distributed.fault_tolerance import StragglerMonitor
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import model
+    from repro.train import step as step_lib
+    from repro.train.optimizer import adamw_init
+
+    cfg = get(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = make_host_mesh(model=args.model_parallel)
+    print(f"[train] {cfg.name}: {cfg.params_total()/1e6:.1f}M params, "
+          f"mesh {dict(zip(mesh.axis_names, mesh.devices.shape))}")
+
+    params = model.init_params(cfg, jax.random.PRNGKey(args.seed))
+    params_sh = shd.params_shardings(params, mesh)
+    params = jax.device_put(params, params_sh)
+    opt = adamw_init(params)
+    opt_sh = shd.opt_shardings(opt, params_sh, mesh, zero1=True)
+    opt = jax.device_put(opt, opt_sh)
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    repl = NamedSharding(mesh, P())
+    metrics_sh = {"ce": repl, "aux": repl, "loss": repl, "step": repl}
+    bsh = shd.batch_shardings(
+        {"tokens": jax.ShapeDtypeStruct((args.batch, args.seq), jnp.int32)},
+        mesh, ("data",))
+    step_fn = jax.jit(
+        step_lib.make_train_step(cfg, n_micro=args.n_micro, lr=args.lr),
+        in_shardings=(params_sh, opt_sh, bsh),
+        out_shardings=(params_sh, opt_sh, metrics_sh))
+
+    data = SyntheticLM(cfg.vocab_size, args.seq, seed=args.seed)
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    monitor = StragglerMonitor(
+        on_straggler=lambda s, dt, med: print(
+            f"[straggler] step {s}: {dt:.3f}s vs median {med:.3f}s"))
+
+    start = 0
+    if ckpt and ckpt.latest_step() is not None:
+        (params, opt), start = ckpt.restore((params, opt),
+                                            shardings=(params_sh, opt_sh))
+        print(f"[train] resumed from step {start}")
+
+    dedup_stats = []
+    t_start = time.time()
+    failed_once = [False]
+    for step in range(start, args.steps):
+        raw = data.batch(step, args.batch)
+        if args.dedup:
+            filtered, idx = dedup_batch({"tokens": raw["tokens"]},
+                                        pad_to=args.batch, min_pts=2)
+            dedup_stats.append(len(np.unique(idx)) / args.batch)
+            tokens = filtered["tokens"]
+        else:
+            tokens = raw["tokens"]
+        batch = {"tokens": jax.device_put(jnp.asarray(tokens), bsh["tokens"])}
+        t0 = time.time()
+        if (args.fail_at_step is not None and step == args.fail_at_step
+                and not failed_once[0]):
+            failed_once[0] = True
+            print(f"[train] injected failure at step {step}; restarting")
+            if ckpt and ckpt.latest_step() is not None:
+                ckpt.wait()
+                (params, opt), step0 = ckpt.restore(
+                    (params, opt), shardings=(params_sh, opt_sh))
+                print(f"[train] restored step {step0}")
+            continue
+        params, opt, metrics = step_fn(params, opt, batch)
+        monitor.record(step, time.time() - t0)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            extra = (f" kept={np.mean(dedup_stats[-args.log_every:]):.2f}"
+                     if dedup_stats else "")
+            print(f"[train] step {step:5d} loss={float(metrics['loss']):.4f}"
+                  f"{extra}", flush=True)
+        if ckpt and (step + 1) % args.ckpt_every == 0:
+            ckpt.wait()
+            ckpt.save(step + 1, (params, opt), blocking=False)
+    if ckpt:
+        ckpt.wait()
+        ckpt.save(args.steps, (params, opt))
+    dt = time.time() - t_start
+    tok_s = args.steps * args.batch * args.seq / dt
+    print(f"[train] done: {args.steps} steps in {dt:.1f}s "
+          f"({tok_s:.0f} tok/s); final loss {float(metrics['loss']):.4f}")
+    return float(metrics["loss"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from . import layers, model, moe, rwkv, ssm
+
+__all__ = ["layers", "model", "moe", "rwkv", "ssm"]

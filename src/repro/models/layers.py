@@ -1,0 +1,235 @@
+"""Shared transformer layers: norms, RoPE variants, GQA attention, MLPs.
+
+Everything is a plain function over a params dict (pytrees of jnp arrays);
+initialization mirrors each architecture's published scheme (trunc-normal
+0.02 unless noted). Attention supports the union of the assigned archs'
+features: GQA with grouped einsums (kv never materialized per-head), QKV
+bias (qwen), NeoX / GLM-partial-interleaved / no RoPE, attn & final logit
+softcaps (gemma2), sliding windows (mixtral/gemma2-local), non-causal
+(whisper encoder) and cross attention, plus a cached single-token decode
+path with rolling windows.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------- norms ----
+
+
+def init_norm(cfg, with_bias=None):
+    bias = cfg.norm_style == "layernorm" if with_bias is None else with_bias
+    p = {"scale": jnp.ones((cfg.d_model,), jnp.float32)}
+    if bias:
+        p["bias"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    return p
+
+
+def norm(cfg, p, x):
+    xf = x.astype(jnp.float32)
+    if cfg.norm_style == "rmsnorm":
+        xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True)
+                                + cfg.norm_eps)
+    else:
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.var(xf, -1, keepdims=True)
+        xf = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+    out = xf * p["scale"]
+    if "bias" in p:
+        out = out + p["bias"]
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- rope ----
+
+
+def _rope_freqs(cfg, rot_dim):
+    i = jnp.arange(rot_dim // 2, dtype=jnp.float32)
+    return cfg.rope_theta ** (-2.0 * i / rot_dim)
+
+
+def apply_rope(cfg, x, positions):
+    """x: (B, S, n, head_dim); positions: (S,) or (B, S)."""
+    if cfg.rope_style == "none":
+        return x
+    hd = x.shape[-1]
+    pos = positions.astype(jnp.float32)
+    if pos.ndim == 1:
+        pos = pos[None, :]
+    if cfg.rope_style == "neox":
+        freqs = _rope_freqs(cfg, hd)
+        ang = pos[..., None] * freqs            # (B, S, hd/2)
+        cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+        sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+        x1, x2 = jnp.split(x, 2, axis=-1)
+        return jnp.concatenate([x1 * cos - x2 * sin,
+                                x2 * cos + x1 * sin], -1)
+    if cfg.rope_style == "glm_partial":
+        # rotate the first half of the head dims, interleaved pairing
+        rot = hd // 2
+        xr, xp = x[..., :rot], x[..., rot:]
+        freqs = _rope_freqs(cfg, rot)
+        ang = pos[..., None] * freqs
+        cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+        sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+        xe, xo = xr[..., 0::2], xr[..., 1::2]
+        re = xe * cos - xo * sin
+        ro = xo * cos + xe * sin
+        xr = jnp.stack([re, ro], -1).reshape(xr.shape)
+        return jnp.concatenate([xr, xp], -1)
+    raise ValueError(cfg.rope_style)
+
+
+def sinusoid_positions(max_len: int, d_model: int) -> jnp.ndarray:
+    pos = jnp.arange(max_len, dtype=jnp.float32)[:, None]
+    i = jnp.arange(d_model // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, 2 * i / d_model)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+
+
+# ------------------------------------------------------------ attention ----
+
+
+def init_attention(cfg, key, cross=False):
+    d = cfg.d_model
+    hq = cfg.n_heads * cfg.head_dim
+    hkv = cfg.n_kv_heads * cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    std = 0.02
+    p = {
+        "wq": jax.random.normal(k1, (d, hq), jnp.float32) * std,
+        "wk": jax.random.normal(k2, (d, hkv), jnp.float32) * std,
+        "wv": jax.random.normal(k3, (d, hkv), jnp.float32) * std,
+        "wo": jax.random.normal(k4, (hq, d), jnp.float32) * std / math.sqrt(2 * cfg.n_layers),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((hq,), jnp.float32)
+        p["bk"] = jnp.zeros((hkv,), jnp.float32)
+        p["bv"] = jnp.zeros((hkv,), jnp.float32)
+    return p
+
+
+def _qkv(cfg, p, xq, xkv):
+    B, Sq, _ = xq.shape
+    Skv = xkv.shape[1]
+    q = xq @ p["wq"].astype(xq.dtype)
+    k = xkv @ p["wk"].astype(xq.dtype)
+    v = xkv @ p["wv"].astype(xq.dtype)
+    if "bq" in p:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    q = q.reshape(B, Sq, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(B, Skv, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(B, Skv, cfg.n_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+def _sdpa(cfg, q, k, v, mask):
+    """Grouped-query attention. q: (B,Sq,H,hd), k/v: (B,Sk,KV,hd),
+    mask: broadcastable to (B, KV, G, Sq, Sk) or None."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    scale = 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32) * scale
+    if cfg.attn_softcap:
+        c = cfg.attn_softcap
+        scores = c * jnp.tanh(scores / c)
+    if mask is not None:
+        scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v)
+    return out.reshape(B, Sq, H * hd)
+
+
+def causal_mask(cfg, q_pos, k_pos, kind: str):
+    """(…, Sq, Sk) validity mask from absolute positions."""
+    m = q_pos[..., :, None] >= k_pos[..., None, :]
+    window = cfg.sliding_window
+    if kind == "local" and window is not None:
+        m = m & (q_pos[..., :, None] - k_pos[..., None, :] < window)
+    return m
+
+
+def attention(cfg, p, x, positions, kind: str, causal: bool = True,
+              xkv=None):
+    """Full-sequence attention (training / prefill / encoder / cross)."""
+    cross = xkv is not None
+    q, k, v = _qkv(cfg, p, x, xkv if cross else x)
+    if not cross:
+        q = apply_rope(cfg, q, positions)
+        k = apply_rope(cfg, k, positions)
+        mask = None
+        if causal:
+            kp = positions if positions.ndim == 1 else positions[0]
+            m = causal_mask(cfg, kp, kp, kind)       # (Sq, Sk)
+            mask = m[None, None, None, :, :]
+    else:
+        mask = None
+    out = _sdpa(cfg, q, k, v, mask)
+    return out @ p["wo"].astype(x.dtype)
+
+
+def attention_decode(cfg, p, x, cache_k, cache_v, pos, kind: str):
+    """Single-token decode with a (possibly rolling) KV cache.
+
+    x: (B, 1, D); cache_k/v: (B, S_cache, KV, hd); pos: scalar absolute
+    position of the new token. For local/SWA layers the cache is sized
+    min(window, S_max) and written modulo its length (rolling); absolute
+    positions are reconstructed for the RoPE and window mask.
+    """
+    B = x.shape[0]
+    S_cache = cache_k.shape[1]
+    q, k, v = _qkv(cfg, p, x, x)
+    posv = jnp.full((1,), pos, jnp.int32)
+    q = apply_rope(cfg, q, posv)
+    k = apply_rope(cfg, k, posv)
+    slot = pos % S_cache
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, slot, axis=1)
+    # absolute position of each cache slot (rolling reconstruction)
+    idx = jnp.arange(S_cache, dtype=jnp.int32)
+    wraps = (pos // S_cache) - (idx > slot)
+    k_pos = wraps * S_cache + idx
+    valid = (k_pos >= 0) & (k_pos <= pos)
+    if kind == "local" and cfg.sliding_window is not None:
+        valid = valid & (pos - k_pos < cfg.sliding_window)
+    mask = valid[None, None, None, None, :]
+    out = _sdpa(cfg, q, cache_k, cache_v, mask)
+    return out @ p["wo"].astype(x.dtype), cache_k, cache_v
+
+
+# ---------------------------------------------------------------- mlps ----
+
+
+def init_mlp(cfg, key):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    std = 0.02
+    if cfg.mlp_style == "swiglu":
+        return {
+            "w_gate": jax.random.normal(ks[0], (d, f), jnp.float32) * std,
+            "w_up": jax.random.normal(ks[1], (d, f), jnp.float32) * std,
+            "w_down": jax.random.normal(ks[2], (f, d), jnp.float32) * std / math.sqrt(2 * cfg.n_layers),
+        }
+    return {  # gelu_mlp (whisper)
+        "w_in": jax.random.normal(ks[0], (d, f), jnp.float32) * std,
+        "b_in": jnp.zeros((f,), jnp.float32),
+        "w_out": jax.random.normal(ks[1], (f, d), jnp.float32) * std / math.sqrt(2 * cfg.n_layers),
+        "b_out": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def mlp(cfg, p, x):
+    act = jax.nn.silu if cfg.mlp_act == "silu" else partial(jax.nn.gelu, approximate=True)
+    if cfg.mlp_style == "swiglu":
+        h = act(x @ p["w_gate"].astype(x.dtype)) * (x @ p["w_up"].astype(x.dtype))
+        return h @ p["w_down"].astype(x.dtype)
+    h = jax.nn.gelu(x @ p["w_in"].astype(x.dtype) + p["b_in"].astype(x.dtype),
+                    approximate=True)
+    return h @ p["w_out"].astype(x.dtype) + p["b_out"].astype(x.dtype)

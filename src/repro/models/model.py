@@ -1,0 +1,380 @@
+"""Model assembly: superblock-scanned transformer for all assigned archs.
+
+The repeated ``layer_pattern`` (config) is one *superblock*; parameters of
+all superblocks are stacked on a leading axis and the forward pass is a
+``lax.scan`` over it (optionally rematerialized). HLO size and compile time
+are therefore depth-independent — essential for 40-layer models lowered on
+512 fake devices in the dry-run.
+
+Modes:
+  * ``forward``      — full-sequence (training; also the prefill body),
+  * ``prefill``      — forward + per-layer cache extraction,
+  * ``decode_step``  — one token against a (rolling/SSM) cache,
+all sharing the same layer functions (layers.py / moe.py / ssm.py / rwkv.py).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import layers, moe, rwkv, ssm
+
+VISION_EMBED_DIM = 1024  # CLIP-L stub width for the llava frontend
+
+
+# ------------------------------------------------------------------ init ----
+
+
+def _init_layer(cfg, key, kind: str, pattern_idx: int):
+    ks = jax.random.split(key, 4)
+    p = {"ln1": layers.init_norm(cfg)}
+    if kind in ("attn", "local"):
+        p["attn"] = layers.init_attention(cfg, ks[0])
+    elif kind == "mamba":
+        p["mamba"] = ssm.init_mamba(cfg, ks[0])
+    elif kind == "rwkv":
+        p["tmix"] = rwkv.init_rwkv(cfg, ks[0])
+    else:
+        raise ValueError(kind)
+    if kind == "rwkv":
+        p["ln2"] = layers.init_norm(cfg)
+        return p
+    p["ln2"] = layers.init_norm(cfg)
+    if cfg.moe_at(pattern_idx):
+        p["moe"] = moe.init_moe(cfg, ks[1])
+    else:
+        p["ffn"] = layers.init_mlp(cfg, ks[1])
+    if cfg.post_norm:
+        p["ln1_post"] = layers.init_norm(cfg)
+        p["ln2_post"] = layers.init_norm(cfg)
+    if cfg.is_encdec:  # decoder blocks carry cross attention
+        p["ln_cross"] = layers.init_norm(cfg)
+        p["cross"] = layers.init_attention(cfg, ks[2], cross=True)
+    return p
+
+
+def _init_block(cfg, key, encoder=False):
+    keys = jax.random.split(key, len(cfg.layer_pattern))
+    if encoder:
+        # whisper encoder: plain non-causal attn + mlp, no cross
+        import dataclasses
+        enc_cfg = dataclasses.replace(cfg, is_encdec=False)
+        return {"layers": [_init_layer(enc_cfg, k, "attn", i)
+                           for i, k in enumerate(keys)]}
+    return {"layers": [_init_layer(cfg, k, kind, i)
+                       for i, (kind, k) in enumerate(zip(cfg.layer_pattern, keys))]}
+
+
+def init_params(cfg, key, param_dtype=jnp.float32):
+    k_embed, k_blocks, k_enc, k_head, k_front = jax.random.split(key, 5)
+    params = {
+        "embed": jax.random.normal(k_embed, (cfg.vocab_size, cfg.d_model),
+                                   jnp.float32) * 0.02,
+        "final_norm": layers.init_norm(cfg),
+        "blocks": jax.vmap(lambda k: _init_block(cfg, k))(
+            jax.random.split(k_blocks, cfg.n_blocks)),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = jax.random.normal(
+            k_head, (cfg.d_model, cfg.vocab_size), jnp.float32) * 0.02
+    if cfg.is_encdec:
+        n_enc_blocks = cfg.n_enc_layers // len(cfg.layer_pattern)
+        params["enc_blocks"] = jax.vmap(
+            lambda k: _init_block(cfg, k, encoder=True))(
+                jax.random.split(k_enc, n_enc_blocks))
+        params["enc_norm"] = layers.init_norm(cfg)
+    if cfg.frontend == "vision":
+        params["projector"] = jax.random.normal(
+            k_front, (VISION_EMBED_DIM, cfg.d_model), jnp.float32) * 0.02
+    return jax.tree.map(lambda a: a.astype(param_dtype)
+                        if a.dtype == jnp.float32 else a, params)
+
+
+# --------------------------------------------------------------- layers ----
+
+
+def _layer_fw(cfg, lp, x, positions, kind, pattern_idx, memory=None):
+    """One layer, full sequence. Returns (x, aux, cache_entry)."""
+    h = layers.norm(cfg, lp["ln1"], x)
+    cache = {}
+    if kind in ("attn", "local"):
+        q, k, v = layers._qkv(cfg, lp["attn"], h, h)
+        q = layers.apply_rope(cfg, q, positions)
+        k = layers.apply_rope(cfg, k, positions)
+        kp = positions if positions.ndim == 1 else positions[0]
+        m = layers.causal_mask(cfg, kp, kp, kind)[None, None, None]
+        mix = layers._sdpa(cfg, q, k, v, m) @ lp["attn"]["wo"].astype(x.dtype)
+        win = cfg.sliding_window
+        keep = min(x.shape[1], win) if (kind == "local" and win) else x.shape[1]
+        cache = {"k": k[:, -keep:], "v": v[:, -keep:]}
+    elif kind == "mamba":
+        mix, state = ssm.mamba(cfg, lp["mamba"], h)
+        cache = {"conv": state[0], "h": state[1]}
+    elif kind == "rwkv":
+        mix, state = rwkv.time_mix(cfg, lp["tmix"], h)
+        cache = {"tm_x": state[0], "tm_s": state[1]}
+    if cfg.post_norm:
+        mix = layers.norm(cfg, lp["ln1_post"], mix)
+    x = x + mix
+    if memory is not None:  # cross attention (whisper decoder)
+        h = layers.norm(cfg, lp["ln_cross"], x)
+        q, ck, cv = layers._qkv(cfg, lp["cross"], h, memory)
+        out = layers._sdpa(cfg, q, ck, cv, None)
+        x = x + out @ lp["cross"]["wo"].astype(x.dtype)
+        cache["ck"], cache["cv"] = ck, cv
+    h = layers.norm(cfg, lp["ln2"], x)
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "rwkv":
+        out, cm_x = rwkv.channel_mix(cfg, lp["tmix"], h)
+        cache["cm_x"] = cm_x
+    elif cfg.moe_at(pattern_idx) and "moe" in lp:
+        out, aux = moe.moe_ffn(cfg, lp["moe"], h)
+    else:
+        out = layers.mlp(cfg, lp["ffn"], h)
+    if cfg.post_norm:
+        out = layers.norm(cfg, lp["ln2_post"], out)
+    return x + out, aux, cache
+
+
+def _layer_decode(cfg, lp, x, bcache, pos, kind, pattern_idx):
+    """One layer, single token with cache. Returns (x, new_cache_entry)."""
+    h = layers.norm(cfg, lp["ln1"], x)
+    new = {}
+    if kind in ("attn", "local"):
+        mix, ck, cv = layers.attention_decode(cfg, lp["attn"], h,
+                                              bcache["k"], bcache["v"],
+                                              pos, kind)
+        new = {"k": ck, "v": cv}
+    elif kind == "mamba":
+        mix, st = ssm.mamba_decode(cfg, lp["mamba"], h,
+                                   (bcache["conv"], bcache["h"]))
+        new = {"conv": st[0], "h": st[1]}
+    elif kind == "rwkv":
+        mix, st = rwkv.time_mix(cfg, lp["tmix"], h,
+                                state=(bcache["tm_x"], bcache["tm_s"]))
+        new = {"tm_x": st[0], "tm_s": st[1]}
+    if cfg.post_norm:
+        mix = layers.norm(cfg, lp["ln1_post"], mix)
+    x = x + mix
+    if cfg.is_encdec:
+        h = layers.norm(cfg, lp["ln_cross"], x)
+        q, _, _ = layers._qkv(cfg, lp["cross"], h, h)
+        out = layers._sdpa(cfg, q, bcache["ck"], bcache["cv"], None)
+        x = x + out @ lp["cross"]["wo"].astype(x.dtype)
+        new["ck"], new["cv"] = bcache["ck"], bcache["cv"]
+    h = layers.norm(cfg, lp["ln2"], x)
+    if kind == "rwkv":
+        out, cm_x = rwkv.channel_mix(cfg, lp["tmix"], h, state=bcache["cm_x"])
+        new["cm_x"] = cm_x
+    elif cfg.moe_at(pattern_idx) and "moe" in lp:
+        out, _ = moe.moe_ffn(cfg, lp["moe"], h)
+    else:
+        out = layers.mlp(cfg, lp["ffn"], h)
+    if cfg.post_norm:
+        out = layers.norm(cfg, lp["ln2_post"], out)
+    return x + out, new
+
+
+# -------------------------------------------------------------- forward ----
+
+
+def _embed_inputs(cfg, params, batch):
+    """Token (+frontend) embeddings -> (x, positions, n_prefix)."""
+    emb = params["embed"]
+    tokens = batch["tokens"]
+    x = emb[tokens].astype(emb.dtype)
+    if cfg.embed_scale:
+        x = x * math.sqrt(cfg.d_model)
+    n_prefix = 0
+    if cfg.frontend == "vision" and "patches" in batch:
+        patches = batch["patches"].astype(x.dtype) @ params["projector"]
+        x = jnp.concatenate([patches, x], axis=1)
+        n_prefix = patches.shape[1]
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    return x, positions, n_prefix
+
+
+def _scan_blocks(cfg, blocks, x, positions, memory=None, remat=True,
+                 return_cache=False, unroll=False):
+    def block_fw(carry, bparams):
+        x, aux = carry
+        caches = []
+        for i, kind in enumerate(cfg.layer_pattern):
+            x, a, c = _layer_fw(cfg, bparams["layers"][i], x, positions,
+                                kind, i, memory=memory)
+            aux = aux + a
+            caches.append(c)
+        return (x, aux), (caches if return_cache else 0)
+
+    fn = jax.checkpoint(block_fw) if remat else block_fw
+    # unroll=True: used by the dry-run so cost_analysis sees every block
+    # (XLA counts a while body once; see launch/dryrun.py).
+    (x, aux), caches = lax.scan(fn, (x, jnp.zeros((), jnp.float32)), blocks,
+                                unroll=cfg.n_blocks if unroll else 1)
+    return x, aux, caches
+
+
+def _encode(cfg, params, batch, remat=True, unroll=False):
+    frames = batch["frames"]
+    x = frames.astype(params["embed"].dtype)
+    pos = layers.sinusoid_positions(x.shape[1], cfg.d_model).astype(x.dtype)
+    x = x + pos[None]
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    import dataclasses
+    enc_cfg = dataclasses.replace(cfg, is_encdec=False)
+
+    def block_fw(carry, bparams):
+        x = carry
+        for i in range(len(cfg.layer_pattern)):
+            h = layers.norm(enc_cfg, bparams["layers"][i]["ln1"], x)
+            mix = layers.attention(enc_cfg, bparams["layers"][i]["attn"], h,
+                                   positions, "attn", causal=False)
+            x = x + mix
+            h = layers.norm(enc_cfg, bparams["layers"][i]["ln2"], x)
+            x = x + layers.mlp(enc_cfg, bparams["layers"][i]["ffn"], h)
+        return x, 0
+
+    fn = jax.checkpoint(block_fw) if remat else block_fw
+    nb = params["enc_blocks"]["layers"][0]["ln1"]["scale"].shape[0]
+    x, _ = lax.scan(fn, x, params["enc_blocks"], unroll=nb if unroll else 1)
+    return layers.norm(cfg, params["enc_norm"], x)
+
+
+def forward(cfg, params, batch, remat=True, return_cache=False, unroll=False):
+    """Full-sequence forward. Returns (x_final, aux, caches, n_prefix)."""
+    memory = None
+    if cfg.is_encdec:
+        memory = _encode(cfg, params, batch, remat=remat, unroll=unroll)
+    x, positions, n_prefix = _embed_inputs(cfg, params, batch)
+    if cfg.is_encdec:
+        pos_table = layers.sinusoid_positions(x.shape[1], cfg.d_model)
+        x = x + pos_table.astype(x.dtype)[None]
+    x, aux, caches = _scan_blocks(cfg, params["blocks"], x, positions,
+                                  memory=memory, remat=remat,
+                                  return_cache=return_cache, unroll=unroll)
+    x = layers.norm(cfg, params["final_norm"], x)
+    return x, aux, caches, n_prefix
+
+
+def logits_from_hidden(cfg, params, x):
+    w = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
+    logits = (x @ w.astype(x.dtype)).astype(jnp.float32)
+    if cfg.final_softcap:
+        c = cfg.final_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+# ----------------------------------------------------------------- loss ----
+
+
+def loss_fn(cfg, params, batch, remat=True, chunk=1024, unroll=False):
+    """Next-token CE (f32, logit-chunked over the sequence) + MoE aux."""
+    x, aux, _, n_prefix = forward(cfg, params, batch, remat=remat,
+                                  unroll=unroll)
+    tokens = batch["tokens"]
+    # hidden state at text position i predicts token i+1; the final
+    # position is padded+masked so the chunk length stays a power of two.
+    xs = x[:, n_prefix:]
+    B, S, D = xs.shape
+    tgt = jnp.concatenate([tokens[:, 1:], jnp.zeros((B, 1), tokens.dtype)], 1)
+    mask = batch.get("loss_mask")
+    mask = jnp.ones_like(tgt, bool) if mask is None else mask.astype(bool)
+    mask = mask.at[:, -1].set(False)
+
+    c = min(chunk, S)
+    while S % c:
+        c -= 1
+
+    def chunk_loss(args):
+        xc, tc, mc = args
+        logits = logits_from_hidden(cfg, params, xc)
+        lz = jax.nn.logsumexp(logits, -1)
+        ll = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        return jnp.sum((lz - ll) * mc), jnp.sum(mc)
+
+    k = S // c
+    xc = xs.reshape(B, k, c, D).swapaxes(0, 1)
+    tc = tgt.reshape(B, k, c).swapaxes(0, 1)
+    mc = mask.reshape(B, k, c).swapaxes(0, 1).astype(jnp.float32)
+    fn = jax.checkpoint(chunk_loss) if remat else chunk_loss
+    _, (sums, cnts) = lax.scan(lambda c, a: (c, fn(a)), None, (xc, tc, mc),
+                               unroll=k if unroll else 1)
+    loss = jnp.sum(sums) / jnp.maximum(jnp.sum(cnts), 1.0)
+    total = loss + 0.01 * aux
+    return total, {"ce": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------- cache ----
+
+
+def init_cache(cfg, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    """Zeroed per-block decode cache, leaves stacked (NB, ...)."""
+    NB = cfg.n_blocks
+    win = cfg.sliding_window
+    entries = []
+    for i, kind in enumerate(cfg.layer_pattern):
+        if kind in ("attn", "local"):
+            keep = min(seq_len, win) if (kind == "local" and win) else seq_len
+            e = {"k": jnp.zeros((NB, batch, keep, cfg.n_kv_heads, cfg.head_dim), dtype),
+                 "v": jnp.zeros((NB, batch, keep, cfg.n_kv_heads, cfg.head_dim), dtype)}
+        elif kind == "mamba":
+            e = {"conv": jnp.zeros((NB, batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+                 "h": jnp.zeros((NB, batch, cfg.d_inner, cfg.ssm_state), jnp.float32)}
+        elif kind == "rwkv":
+            H = cfg.n_rwkv_heads
+            hd = cfg.rwkv_head_dim
+            e = {"tm_x": jnp.zeros((NB, batch, 1, cfg.d_model), dtype),
+                 "tm_s": jnp.zeros((NB, batch, H, hd, hd), jnp.float32),
+                 "cm_x": jnp.zeros((NB, batch, 1, cfg.d_model), dtype)}
+        if cfg.is_encdec and kind in ("attn", "local"):
+            e["ck"] = jnp.zeros((NB, batch, seq_len, cfg.n_kv_heads, cfg.head_dim), dtype)
+            e["cv"] = jnp.zeros((NB, batch, seq_len, cfg.n_kv_heads, cfg.head_dim), dtype)
+        entries.append(e)
+    return tuple(entries)
+
+
+def decode_step(cfg, params, cache, tokens, pos, unroll=False):
+    """One decode step. tokens: (B, 1); pos: scalar absolute position.
+    Returns (logits (B, 1, V) f32, new_cache)."""
+    emb = params["embed"]
+    x = emb[tokens].astype(emb.dtype)
+    if cfg.embed_scale:
+        x = x * math.sqrt(cfg.d_model)
+    if cfg.is_encdec:
+        i = jnp.arange(cfg.d_model // 2, dtype=jnp.float32)
+        ang = pos.astype(jnp.float32) if hasattr(pos, "astype") else float(pos)
+        ang = ang / jnp.power(10000.0, 2 * i / cfg.d_model)
+        pt = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])
+        x = x + pt.astype(x.dtype)[None, None]
+
+    def body(x, xs):
+        bparams, bcache = xs
+        new = []
+        for i, kind in enumerate(cfg.layer_pattern):
+            x, nc = _layer_decode(cfg, bparams["layers"][i], x,
+                                  bcache[i], pos, kind, i)
+            new.append(nc)
+        return x, tuple(new)
+
+    x, new_cache = lax.scan(body, x, (params["blocks"], cache),
+                            unroll=cfg.n_blocks if unroll else 1)
+    x = layers.norm(cfg, params["final_norm"], x)
+    return logits_from_hidden(cfg, params, x), new_cache
+
+
+def prefill(cfg, params, batch, cache_len: int | None = None,
+            unroll=False):
+    """Forward over a prompt, returning (last-position logits, cache)."""
+    x, _, caches, n_prefix = forward(cfg, params, batch, remat=True,
+                                     return_cache=True, unroll=unroll)
+    logits = logits_from_hidden(cfg, params, x[:, -1:])
+    # scanned caches already carry the (NB, ...) leading axis
+    cache = tuple(
+        {k: v for k, v in entry.items()} for entry in caches
+    ) if isinstance(caches, (list, tuple)) else caches
+    return logits, cache

@@ -1,0 +1,86 @@
+"""Mixture-of-experts FFN with capacity-based dense dispatch (GShard-style).
+
+TPU-native: dispatch/combine are one-hot einsums (MXU work, no scatters),
+experts are batched into a single (E, C, D) x (E, D, F) einsum so the expert
+dimension can be sharded over the `model` mesh axis (expert parallelism —
+XLA inserts the all-to-alls from the shardings). Tokens beyond an expert's
+capacity are dropped (standard); the router returns a switch-style
+load-balancing auxiliary loss.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def init_moe(cfg, key):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    std = 0.02
+    return {
+        "router": jax.random.normal(ks[0], (d, e), jnp.float32) * std,
+        "w_gate": jax.random.normal(ks[1], (e, d, f), jnp.float32) * std,
+        "w_up": jax.random.normal(ks[2], (e, d, f), jnp.float32) * std,
+        "w_down": jax.random.normal(ks[3], (e, f, d), jnp.float32) * std / math.sqrt(2 * cfg.n_layers),
+    }
+
+
+GROUP_SIZE = 4096  # tokens per dispatch group (~tokens/chip at prod shapes)
+
+
+def moe_ffn(cfg, p, x, group_size: int = GROUP_SIZE):
+    """x: (B, S, D) -> (out, aux_loss).
+
+    *Grouped* dispatch: tokens are split into groups of ``group_size`` with
+    a per-group capacity, so the one-hot dispatch/combine einsums cost
+    2*T*E*C_local*D instead of 2*T*E*C_global*D — C_global grows with the
+    global batch and made dispatch dominate total FLOPs (the naive variant
+    measured 150x the expert FFN compute at train_4k; see EXPERIMENTS.md
+    §Perf iteration 1). Groups follow token order, so under batch sharding
+    the group axis aligns with the data axis and dispatch stays local.
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    T = B * S
+    g = min(group_size, T)
+    while T % g:
+        g -= 1
+    G = T // g
+    xt = x.reshape(G, g, D)
+
+    logits = (xt @ p["router"].astype(x.dtype)).astype(jnp.float32)  # (G,g,E)
+    probs = jax.nn.softmax(logits, -1)
+    gate_vals, idx = jax.lax.top_k(logits, K)                        # (G,g,K)
+    gates = jax.nn.softmax(gate_vals, -1)                            # mixtral renorm
+
+    # switch aux loss: E * sum_e f_e * p_e (global)
+    me = jnp.mean(probs, (0, 1))
+    ce = jnp.mean(jax.nn.one_hot(idx[..., 0], E, dtype=jnp.float32), (0, 1))
+    aux = E * jnp.sum(me * ce)
+
+    C = max(1, int(cfg.capacity_factor * g * K / E))
+    dispatch = jnp.zeros((G, g, E, C), x.dtype)
+    combine = jnp.zeros((G, g, E, C), x.dtype)
+    counts = jnp.zeros((G, E), jnp.int32)
+    for s in range(K):  # K is small & static: unrolled
+        m = jax.nn.one_hot(idx[..., s], E, dtype=jnp.int32)          # (G,g,E)
+        pos = counts[:, None, :] + jnp.cumsum(m, 1) - m              # (G,g,E)
+        counts = counts + jnp.sum(m, 1)
+        ps = jnp.sum(pos * m, -1)                                    # (G,g)
+        ok = (ps < C).astype(x.dtype)                                # capacity
+        oh = jax.nn.one_hot(ps, C, dtype=x.dtype) * ok[..., None]
+        slot_d = m.astype(x.dtype)[..., None] * oh[:, :, None, :]    # (G,g,E,C)
+        dispatch = dispatch + slot_d
+        combine = combine + slot_d * gates[..., s].astype(x.dtype)[..., None, None]
+
+    xs = jnp.einsum("gtec,gtd->egcd", dispatch, xt)                  # (E,G,C,D)
+    xs = xs.reshape(E, G * C, D)
+    act = jax.nn.silu if cfg.mlp_act == "silu" else jax.nn.gelu
+    h = act(jnp.einsum("ead,edf->eaf", xs, p["w_gate"].astype(x.dtype))) \
+        * jnp.einsum("ead,edf->eaf", xs, p["w_up"].astype(x.dtype))
+    out = jnp.einsum("eaf,efd->ead", h, p["w_down"].astype(x.dtype))
+    out = out.reshape(E, G, C, D)
+    yt = jnp.einsum("gtec,egcd->gtd", combine, out)
+    return yt.reshape(B, S, D), aux

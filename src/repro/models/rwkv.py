@@ -1,0 +1,136 @@
+"""RWKV6 "Finch" block: attention-free time mix with data-dependent decay.
+
+Implements the published v6 structure [arXiv:2404.05892]:
+  * ddlerp token-shift: mix of x_t and x_{t-1} with a data-dependent LoRA
+    correction per projection (w, k, v, r, g),
+  * per-channel data-dependent decay w_t = exp(-exp(w0 + lora_w(x))),
+  * multi-head wkv state (head_dim x head_dim per head) with the "bonus" u
+    term, group-normed output, silu(g) gate,
+  * squared-relu channel mix.
+
+The wkv recurrence is a sequential ``lax.scan`` over time carrying the
+(B, H, hd, hd) state — O(1) memory in sequence length, which is what makes
+the 500k-token decode cell feasible (DESIGN.md §4). A chunk-parallel variant
+is a documented perf follow-up (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def init_rwkv(cfg, key):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    r = cfg.rwkv_decay_lora
+    ks = jax.random.split(key, 12)
+    std = 0.02
+    p = {
+        # ddlerp token-shift parameters
+        "maa_x": jnp.zeros((d,), jnp.float32),
+        "maa": jnp.zeros((5, d), jnp.float32),           # w,k,v,r,g base mix
+        "maa_w1": jax.random.normal(ks[0], (d, 5 * 32), jnp.float32) * std,
+        "maa_w2": jax.random.normal(ks[1], (5, 32, d), jnp.float32) * std,
+        # data-dependent decay
+        "w0": jnp.full((d,), -6.0, jnp.float32),
+        "w1": jax.random.normal(ks[2], (d, r), jnp.float32) * std,
+        "w2": jax.random.normal(ks[3], (r, d), jnp.float32) * std,
+        "u": jnp.zeros((H, hd), jnp.float32),            # bonus
+        "wr": jax.random.normal(ks[4], (d, d), jnp.float32) * std,
+        "wk": jax.random.normal(ks[5], (d, d), jnp.float32) * std,
+        "wv": jax.random.normal(ks[6], (d, d), jnp.float32) * std,
+        "wg": jax.random.normal(ks[7], (d, d), jnp.float32) * std,
+        "wo": jax.random.normal(ks[8], (d, d), jnp.float32) * std / math.sqrt(2 * cfg.n_layers),
+        "ln_x_scale": jnp.ones((d,), jnp.float32),
+        "ln_x_bias": jnp.zeros((d,), jnp.float32),
+        # channel mix
+        "cm_maa_k": jnp.zeros((d,), jnp.float32),
+        "cm_maa_r": jnp.zeros((d,), jnp.float32),
+        "cm_wk": jax.random.normal(ks[9], (d, cfg.d_ff), jnp.float32) * std,
+        "cm_wv": jax.random.normal(ks[10], (cfg.d_ff, d), jnp.float32) * std / math.sqrt(2 * cfg.n_layers),
+        "cm_wr": jax.random.normal(ks[11], (d, d), jnp.float32) * std,
+    }
+    return p
+
+
+def _ddlerp(p, x, sx):
+    """Data-dependent lerp producing the 5 mixed inputs (w,k,v,r,g)."""
+    xxx = x + sx * p["maa_x"].astype(x.dtype)
+    B, S, d = x.shape
+    lo = jnp.tanh(xxx @ p["maa_w1"].astype(x.dtype)).reshape(B, S, 5, 32)
+    delta = jnp.einsum("bsfr,frd->bsfd", lo, p["maa_w2"].astype(x.dtype))
+    mix = p["maa"].astype(x.dtype)[None, None] + delta     # (B,S,5,d)
+    return x[:, :, None, :] + sx[:, :, None, :] * mix
+
+
+def _wkv_scan(r, k, v, w, u, s0):
+    """r,k,v: (B,S,H,hd); w: (B,S,H,hd) decay in (0,1); s0: (B,H,hd,hd).
+
+    y_t = r_t . (diag(u) k_t^T v_t + S_{t-1});  S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    """
+    def step(s, xs):
+        rt, kt, vt, wt = xs                    # (B,H,hd) each
+        kv = kt[..., :, None] * vt[..., None, :]          # (B,H,hd,hd)
+        y = jnp.einsum("bhi,bhij->bhj", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, y
+
+    xs = tuple(a.swapaxes(0, 1) for a in (r, k, v, w))    # (S,B,H,hd)
+    sT, ys = lax.scan(step, s0, xs)
+    return ys.swapaxes(0, 1), sT                          # (B,S,H,hd)
+
+
+def time_mix(cfg, p, x, state=None):
+    """state: None (training, zero init) or (x_prev (B,1,d), s (B,H,hd,hd))."""
+    B, S, d = x.shape
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    x_prev = jnp.zeros((B, 1, d), x.dtype) if state is None else state[0].astype(x.dtype)
+    s0 = jnp.zeros((B, H, hd, hd), jnp.float32) if state is None else state[1]
+    shifted = jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+    sx = shifted - x
+    mixed = _ddlerp(p, x, sx)                             # (B,S,5,d)
+    xw, xk, xv, xr, xg = [mixed[:, :, i] for i in range(5)]
+    w = jnp.exp(-jnp.exp(
+        (p["w0"] + jnp.tanh(xw @ p["w1"].astype(x.dtype)).astype(jnp.float32)
+         @ p["w2"]).astype(jnp.float32)))                 # (B,S,d) in (0,1)
+    r = (xr @ p["wr"].astype(x.dtype)).reshape(B, S, H, hd).astype(jnp.float32)
+    k = (xk @ p["wk"].astype(x.dtype)).reshape(B, S, H, hd).astype(jnp.float32)
+    v = (xv @ p["wv"].astype(x.dtype)).reshape(B, S, H, hd).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["wg"].astype(x.dtype))
+    y, sT = _wkv_scan(r, k, v, w.reshape(B, S, H, hd), p["u"], s0)
+    # group norm over each head
+    y = y.reshape(B, S, H, hd)
+    mu = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    y = ((y - mu) * lax.rsqrt(var + 64e-5)).reshape(B, S, d)
+    y = (y * p["ln_x_scale"] + p["ln_x_bias"]).astype(x.dtype)
+    out = (y * g) @ p["wo"].astype(x.dtype)
+    return out, (x[:, -1:], sT)
+
+
+def channel_mix(cfg, p, x, state=None):
+    B, S, d = x.shape
+    x_prev = jnp.zeros((B, 1, d), x.dtype) if state is None else state.astype(x.dtype)
+    shifted = jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+    sx = shifted - x
+    xk = x + sx * p["cm_maa_k"].astype(x.dtype)
+    xr = x + sx * p["cm_maa_r"].astype(x.dtype)
+    kh = jnp.square(jax.nn.relu(xk @ p["cm_wk"].astype(x.dtype)))
+    out = jax.nn.sigmoid(xr @ p["cm_wr"].astype(x.dtype)) * (kh @ p["cm_wv"].astype(x.dtype))
+    return out, x[:, -1:]
+
+
+def init_rwkv_state(cfg, batch, dtype):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    return {
+        "tm_x": jnp.zeros((batch, 1, d), dtype),
+        "tm_s": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "cm_x": jnp.zeros((batch, 1, d), dtype),
+    }

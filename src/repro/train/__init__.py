@@ -1,0 +1,3 @@
+from . import optimizer, step
+
+__all__ = ["optimizer", "step"]

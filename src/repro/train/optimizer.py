@@ -1,0 +1,51 @@
+"""In-house AdamW with f32 master weights (mixed-precision training).
+
+Model params may live in bf16 (compute dtype); the optimizer carries f32
+master weights and moments. With ZeRO-1 (distributed/sharding.py) the whole
+optimizer state is additionally sharded over the data axis, so the f32
+triplet never dominates per-chip memory.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    master: dict     # f32 copy of params
+    m: dict
+    v: dict
+
+
+def adamw_init(params) -> AdamWState:
+    f32 = lambda p: p.astype(jnp.float32)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      master=jax.tree.map(f32, params),
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params))
+
+
+def adamw_update(params, grads, opt: AdamWState, lr, b1=0.9, b2=0.95,
+                 eps=1e-8, weight_decay=0.0, clip_norm=1.0):
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if clip_norm is not None:
+        gn = jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, clip_norm / (gn + 1e-12))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    step = opt.step + 1
+    b1c = 1.0 - b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - b2 ** step.astype(jnp.float32)
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, opt.m, grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, opt.v, grads)
+
+    def upd(w, m_, v_):
+        u = (m_ / b1c) / (jnp.sqrt(v_ / b2c) + eps)
+        return w - lr * (u + weight_decay * w)
+
+    master = jax.tree.map(upd, opt.master, m, v)
+    new_params = jax.tree.map(lambda w, p: w.astype(p.dtype), master, params)
+    return new_params, AdamWState(step=step, master=master, m=m, v=v)

@@ -1,0 +1,76 @@
+"""GPipe pipeline parallelism over the "pod" mesh axis.
+
+The multi-pod mesh's leading axis is pure data-parallel by default; this
+module gives it the alternative role: pipeline stages. The schedule is
+classic GPipe — M microbatches flow through S stages in M + S - 1 ticks;
+stage-to-stage activation transfer is a single ``lax.ppermute`` hop per
+tick (nearest-neighbor on the pod interconnect), which overlaps with the
+next tick's compute. Bubble fraction = (S-1)/(M+S-1), reported by
+``gpipe_bubble``; EXPERIMENTS.md quotes it for the production shapes.
+
+``gpipe`` is generic over a stage function so any superblock stack can be
+cut into stages: stage parameters are sharded over the pipe axis (stage i's
+params live only on its devices — the memory win of PP).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+
+def gpipe_bubble(n_micro: int, n_stages: int) -> float:
+    return (n_stages - 1) / (n_micro + n_stages - 1)
+
+
+def gpipe(stage_fn, mesh, axis: str = "pod"):
+    """Build a pipelined apply: (stage_params, microbatches) -> outputs.
+
+    stage_params: pytree with leading dim = n_stages (sharded over axis).
+    microbatches: (n_micro, mb, ...) replicated input; outputs likewise.
+    ``stage_fn(params_for_stage, x) -> y`` with x.shape == y.shape
+    (equal-width stages, the standard GPipe constraint).
+    """
+    n_stages = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+    fwd_perm = [(i, i + 1) for i in range(n_stages - 1)]
+
+    def kernel(stage_params, mb):
+        # shard_map gives each stage its own params slice (leading dim 1)
+        params = jax.tree.map(lambda a: a[0], stage_params)
+        me = lax.axis_index(axis)
+        n_micro = mb.shape[0]
+        ticks = n_micro + n_stages - 1
+        vary = lambda x: jax.lax.pcast(x, (axis,), to="varying")
+        buf = vary(jnp.zeros(mb.shape[1:], mb.dtype))  # traveling activation
+        outs = vary(jnp.zeros_like(mb))
+
+        def tick(t, carry):
+            buf, outs = carry
+            # stage 0 injects microbatch t (if any); others take the wire
+            inject = mb[jnp.minimum(t, n_micro - 1)]
+            x = jnp.where(me == 0, inject, buf)
+            y = stage_fn(params, x)
+            # last stage emits microbatch t - (S-1)
+            out_idx = t - (n_stages - 1)
+            emit = (me == n_stages - 1) & (out_idx >= 0)
+            outs = lax.cond(
+                emit,
+                lambda o: lax.dynamic_update_index_in_dim(
+                    o, y, jnp.maximum(out_idx, 0), 0),
+                lambda o: o, outs)
+            buf = lax.ppermute(y, axis, fwd_perm)
+            return buf, outs
+
+        _, outs = lax.fori_loop(0, ticks, tick, (buf, outs))
+        # outputs live on the last stage; share them along the axis
+        outs = lax.psum(jnp.where(me == n_stages - 1, outs, 0.0), axis)
+        return outs
+
+    try:
+        sm = jax.shard_map
+    except AttributeError:
+        from jax.experimental.shard_map import shard_map as sm
+    return sm(kernel, mesh=mesh, in_specs=(P(axis), P()), out_specs=P())

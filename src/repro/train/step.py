@@ -1,0 +1,97 @@
+"""Training / serving step factories.
+
+``make_train_step`` builds the jittable step: microbatched gradient
+accumulation via ``lax.scan`` (the per-microbatch backward overlaps with the
+XLA-scheduled gradient reductions — the standard compute/comm overlap), f32
+accumulation, optional simulated int8 gradient compression (the *transport*
+demonstration with a real psum lives in repro.distributed.compression),
+AdamW with master weights.
+
+``make_serve_step`` / ``make_prefill_step`` wrap the cached decode paths.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import model
+from .optimizer import adamw_init, adamw_update  # noqa: F401 (re-export)
+
+
+def quantize_int8(g):
+    """Fake-quantize to int8 per-tensor scale (simulated compressed grads)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q.astype(jnp.float32) * scale
+
+
+def make_loss(cfg, unroll=False):
+    def loss(params, batch):
+        return model.loss_fn(cfg, params, batch, unroll=unroll)
+    return loss
+
+
+def make_train_step(cfg, *, n_micro: int = 1, lr: float = 3e-4,
+                    weight_decay: float = 0.1,
+                    grad_compression: str | None = None, unroll: bool = False,
+                    grad_shardings=None):
+    """grad_shardings: optional pytree of NamedShardings (the ZeRO-1 layout)
+    pinned onto the gradients before the optimizer — turns the data-axis
+    gradient reduction into reduce-scatter + sharded optimizer math instead
+    of all-reduce + replicated math (EXPERIMENTS.md §Perf iteration 5)."""
+    loss = make_loss(cfg, unroll=unroll)
+
+    def train_step(params, opt, batch):
+        if n_micro == 1:
+            (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(
+                params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        else:
+            mb = jax.tree.map(
+                lambda a: a.reshape((n_micro, a.shape[0] // n_micro)
+                                    + a.shape[1:]), batch)
+
+            def micro(carry, b):
+                acc, lsum = carry
+                (l, _), g = jax.value_and_grad(loss, has_aux=True)(params, b)
+                acc = jax.tree.map(lambda a, x: a + x.astype(jnp.float32),
+                                   acc, g)
+                return (acc, lsum + l), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+            (grads, lsum), _ = lax.scan(micro, (zeros, jnp.zeros(())), mb,
+                                        unroll=n_micro if unroll else 1)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            l = lsum / n_micro
+            metrics = {"ce": l, "aux": jnp.zeros(())}
+        if grad_shardings is not None:
+            grads = jax.lax.with_sharding_constraint(grads, grad_shardings)
+        if grad_compression == "int8":
+            grads = jax.tree.map(quantize_int8, grads)
+        params, opt = adamw_update(params, grads, opt, lr=lr,
+                                   weight_decay=weight_decay)
+        metrics = dict(metrics, loss=l, step=opt.step)
+        return params, opt, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg, unroll: bool = False):
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = model.decode_step(cfg, params, cache, tokens, pos,
+                                          unroll=unroll)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return cache, next_tok
+    return serve_step
+
+
+def make_prefill_step(cfg, unroll: bool = False):
+    def prefill_step(params, batch):
+        logits, cache = model.prefill(cfg, params, batch, unroll=unroll)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return cache, next_tok
+    return prefill_step

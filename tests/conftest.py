@@ -1,0 +1,32 @@
+import numpy as np
+import pytest
+
+
+def separated_points(n: int, d: int, eps: float, seed: int,
+                     band: float = 2e-3) -> np.ndarray:
+    """Random points with no pair within a relative band of eps^2.
+
+    DBSCAN is discontinuous at dist == eps: different (equally valid)
+    float summation orders flip pairs sitting exactly on the boundary.
+    Tests that compare two backends exactly use boundary-separated data;
+    boundary behaviour itself is covered by the integer-grid property tests
+    (where d2 is exact).
+    """
+    rng = np.random.default_rng(seed)
+    pts = rng.uniform(0, 1, size=(n, d)).astype(np.float32)
+    e2 = eps * eps
+    while True:
+        d2 = ((pts[:, None, :].astype(np.float64)
+               - pts[None, :, :].astype(np.float64)) ** 2).sum(-1)
+        offending = np.abs(d2 - e2) < band * e2
+        np.fill_diagonal(offending, False)
+        bad = np.unique(np.nonzero(offending)[0])
+        if len(bad) == 0:
+            return pts
+        repl = rng.uniform(0, 1, size=(len(bad), d)).astype(np.float32)
+        pts[bad] = repl
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,132 @@
+"""End-to-end DBSCAN correctness vs the brute-force oracle."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import dbscan, dbscan_bruteforce_np, gdbscan
+from repro.core.validate import check_dbscan, same_partition
+from repro.data import pointclouds
+
+from conftest import separated_points
+
+ALGOS = ["fdbscan", "fdbscan-densebox"]
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+@pytest.mark.parametrize("name,n,eps,mp", [
+    ("blobs", 400, 0.05, 10),
+    ("ngsim_like", 500, 0.01, 8),
+    ("portotaxi_like", 400, 0.02, 6),
+    ("road3d_like", 400, 0.01, 4),
+    ("hacc_like", 500, 0.03, 5),
+])
+def test_matches_oracle_partition(algo, name, n, eps, mp):
+    pts = pointclouds.load(name, n)
+    res = dbscan(pts, eps, mp, algorithm=algo)
+    check_dbscan(pts, eps, mp, res.labels, res.core_mask)
+    ref_labels, ref_core = dbscan_bruteforce_np(pts, eps, mp)
+    assert (np.asarray(res.core_mask) == ref_core).all()
+    # core partitions must match exactly (borders may differ validly)
+    core = ref_core
+    assert same_partition(np.asarray(res.labels)[core], ref_labels[core])
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_minpts2_friends_of_friends(algo):
+    pts = separated_points(300, 2, eps=0.04, seed=0)
+    res = dbscan(pts, 0.04, 2, algorithm=algo)
+    check_dbscan(pts, 0.04, 2, res.labels, res.core_mask)
+    # minpts=2: no border points — every labeled point is core
+    labs = np.asarray(res.labels)
+    core = np.asarray(res.core_mask)
+    assert (labs[~core] == -1).all() and (labs[core] >= 0).all()
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_dbscan_star_no_borders(algo):
+    pts = pointclouds.blobs(300, seed=5)
+    res = dbscan(pts, 0.05, 10, algorithm=algo, star=True)
+    labs = np.asarray(res.labels)
+    core = np.asarray(res.core_mask)
+    assert (labs[~core] == -1).all()
+    full = dbscan(pts, 0.05, 10, algorithm=algo)
+    # core labeling identical to full DBSCAN
+    assert same_partition(labs[core], np.asarray(full.labels)[core])
+
+
+def test_gdbscan_baseline_agrees():
+    pts = separated_points(300, 2, eps=0.06, seed=2)
+    a = gdbscan(pts, 0.06, 8)
+    b = dbscan(pts, 0.06, 8, algorithm="fdbscan")
+    assert (np.asarray(a.core_mask) == np.asarray(b.core_mask)).all()
+    core = np.asarray(a.core_mask)
+    assert same_partition(np.asarray(a.labels)[core], np.asarray(b.labels)[core])
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_permutation_invariance(algo):
+    pts = separated_points(200, 2, eps=0.07, seed=3)
+    perm = np.random.default_rng(0).permutation(200)
+    r1 = dbscan(pts, 0.07, 5, algorithm=algo)
+    r2 = dbscan(pts[perm], 0.07, 5, algorithm=algo)
+    assert (np.asarray(r1.core_mask)[perm] == np.asarray(r2.core_mask)).all()
+    assert same_partition(np.asarray(r1.labels)[perm], np.asarray(r2.labels))
+
+
+def test_eps_monotonicity():
+    # growing eps can only merge/grow clusters: core points stay core
+    pts = separated_points(250, 2, eps=0.05, seed=4)
+    prev_core = None
+    for eps in [0.03, 0.06, 0.12]:
+        res = dbscan(pts, eps, 5)
+        core = np.asarray(res.core_mask)
+        if prev_core is not None:
+            assert (core | ~prev_core).all()  # prev_core implies core
+        prev_core = core
+
+
+def test_minpts_monotonicity():
+    pts = separated_points(250, 2, eps=0.08, seed=6)
+    prev_core = None
+    for mp in [20, 10, 5, 2]:
+        res = dbscan(pts, 0.08, mp)
+        core = np.asarray(res.core_mask)
+        if prev_core is not None:
+            assert (core | ~prev_core).all()
+        prev_core = core
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_all_points_identical(algo):
+    pts = np.zeros((64, 2), np.float32)
+    res = dbscan(pts, 0.1, 5, algorithm=algo)
+    assert res.n_clusters == 1
+    assert (np.asarray(res.labels) == 0).all()
+
+
+def test_two_clusters_bridged_by_border():
+    # classic bridging scenario: a single non-core point within eps of two
+    # separate clusters must NOT merge them (the paper's critical section)
+    ring = np.array([[0.0, 0.0], [0.1, 0.0], [0.05, 0.05], [0.05, -0.05],
+                     [-0.05, 0.0], [0.0, 0.05], [0.0, -0.05], [0.05, 0.0]])
+    a = ring
+    b = ring + np.array([2.0, 0.0])
+    bridge = np.array([[1.0, 0.0]])  # reaches only the closest edge points
+    pts = np.concatenate([a, b, bridge]).astype(np.float32)
+    eps, mp = 0.92, 4
+    res = dbscan(pts, eps=eps, min_pts=mp)
+    labs = np.asarray(res.labels)
+    core = np.asarray(res.core_mask)
+    assert not core[16], "bridge must be non-core"
+    assert core[:16].all()
+    assert labs[0] != labs[8], "bridging occurred"
+    assert labs[16] in (labs[0], labs[8])  # border joined exactly one side
+    check_dbscan(pts, eps, mp, res.labels, res.core_mask)
+
+
+def test_sweep_count_is_small():
+    # hook+jump converges in a handful of sweeps even on adversarial chains
+    line = np.stack([np.linspace(0, 1, 512), np.zeros(512)], -1).astype(np.float32)
+    res = dbscan(line, eps=0.003, min_pts=2, algorithm="fdbscan")
+    assert res.n_clusters == 1
+    assert res.n_sweeps <= 12  # ~log2(512) + margin

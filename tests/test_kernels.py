@@ -1,0 +1,81 @@
+"""Per-kernel allclose vs the pure-jnp oracles, across shapes and dtypes."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import pairwise_count, pairwise_minlabel, dbscan_tiled
+from repro.kernels.ref import pairwise_count_ref, pairwise_minlabel_ref
+from repro.core import dbscan
+from repro.core.validate import check_dbscan, same_partition
+
+from conftest import separated_points
+
+SHAPES = [(7, 5), (128, 128), (130, 257), (64, 300), (1, 1), (200, 3)]
+
+
+@pytest.mark.parametrize("nq,nr", SHAPES)
+@pytest.mark.parametrize("d", [2, 3])
+def test_count_matches_ref(nq, nr, d):
+    pts = separated_points(nq + nr, d, eps=0.2, seed=nq + nr + d)
+    q, r = pts[:nq], pts[nq:]
+    out = pairwise_count(q, r, 0.2)
+    ref = pairwise_count_ref(q, r, 0.2)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("cap", [1, 3, 2**31 - 1])
+def test_count_saturates(cap):
+    pts = separated_points(150, 2, eps=0.3, seed=9)
+    out = pairwise_count(pts, pts, 0.3, cap=cap)
+    ref = pairwise_count_ref(pts, pts, 0.3, cap=cap)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    assert int(out.max()) <= cap
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64, np.float16])
+def test_count_dtypes(dtype):
+    pts = separated_points(100, 2, eps=0.25, seed=3).astype(dtype)
+    out = pairwise_count(pts, pts, 0.25)
+    ref = pairwise_count_ref(pts, pts, 0.25)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("tile", [128, 256])
+def test_count_tile_sizes(tile):
+    pts = separated_points(300, 2, eps=0.15, seed=5)
+    out = pairwise_count(pts, pts, 0.15, tile_q=tile, tile_r=tile)
+    ref = pairwise_count_ref(pts, pts, 0.15)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("nq,nr", SHAPES)
+def test_minlabel_matches_ref(nq, nr):
+    rng = np.random.default_rng(nq * 7 + nr)
+    pts = separated_points(nq + nr, 2, eps=0.2, seed=nq + 31 * nr)
+    q, r = pts[:nq], pts[nq:]
+    labels = rng.integers(0, max(nr, 1), size=nr).astype(np.int32)
+    mask = rng.random(nr) > 0.4
+    out_l, out_c = pairwise_minlabel(q, r, labels, mask, 0.2)
+    ref_l, ref_c = pairwise_minlabel_ref(q, r, jnp.asarray(labels),
+                                         jnp.asarray(mask), 0.2)
+    np.testing.assert_array_equal(np.asarray(out_l), np.asarray(ref_l))
+    np.testing.assert_array_equal(np.asarray(out_c), np.asarray(ref_c))
+
+
+def test_minlabel_all_masked():
+    pts = separated_points(90, 2, eps=0.2, seed=11)
+    labels = np.arange(90, dtype=np.int32)
+    out_l, out_c = pairwise_minlabel(pts, pts, labels, np.zeros(90, bool), 0.2)
+    assert (np.asarray(out_l) == np.iinfo(np.int32).max).all()
+    assert (np.asarray(out_c) == 0).all()
+
+
+@pytest.mark.parametrize("n,eps,mp", [(256, 0.08, 5), (400, 0.05, 2),
+                                      (333, 0.1, 20)])
+def test_tiled_dbscan_agrees_with_tree_backends(n, eps, mp):
+    pts = separated_points(n, 2, eps=eps, seed=n)
+    r_tile = dbscan_tiled(pts, eps, mp)
+    check_dbscan(pts, eps, mp, r_tile.labels, r_tile.core_mask)
+    r_tree = dbscan(pts, eps, mp, algorithm="fdbscan")
+    assert (np.asarray(r_tile.core_mask) == np.asarray(r_tree.core_mask)).all()
+    assert r_tile.n_clusters == r_tree.n_clusters

@@ -1,0 +1,126 @@
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import grid, lbvh, morton
+
+
+def _build(n, d=2, seed=0):
+    rng = np.random.default_rng(seed)
+    pts = rng.uniform(0, 1, size=(n, d)).astype(np.float32)
+    spts, order, codes = morton.morton_sort(jnp.asarray(pts))
+    tree = lbvh.build_tree(codes, spts, spts)
+    return np.asarray(spts), tree
+
+
+@pytest.mark.parametrize("n", [2, 3, 5, 17, 64, 257, 1024])
+def test_topology_invariants(n):
+    pts, tree = _build(n)
+    left = np.asarray(tree.left)
+    right = np.asarray(tree.right)
+    parent = np.asarray(tree.parent)
+    n_nodes = 2 * n - 1
+    # every node except root has exactly one parent; children consistent
+    assert parent[0] == -1
+    seen = np.zeros(n_nodes, int)
+    for i in range(n - 1):
+        for c in (left[i], right[i]):
+            assert 0 < c < n_nodes
+            assert parent[c] == i
+            seen[c] += 1
+    assert (seen[1:] == 1).all() and seen[0] == 0
+
+
+@pytest.mark.parametrize("n", [2, 5, 64, 257])
+def test_rope_traversal_visits_all_leaves_in_order(n):
+    pts, tree = _build(n, seed=1)
+    left = np.asarray(tree.left)
+    miss = np.asarray(tree.miss)
+    node, visited = 0 if n > 1 else (n - 1), []
+    # full DFS: always descend; at leaves follow the rope
+    while node != -1:
+        if node >= n - 1:
+            visited.append(node - (n - 1))
+            node = miss[node]
+        else:
+            node = left[node]
+    assert visited == list(range(n))
+
+
+@pytest.mark.parametrize("n,d", [(64, 2), (64, 3), (500, 2)])
+def test_aabb_contains_descendants(n, d):
+    pts, tree = _build(n, d=d, seed=2)
+    lo = np.asarray(tree.box_lo)
+    hi = np.asarray(tree.box_hi)
+    left = np.asarray(tree.left)
+    right = np.asarray(tree.right)
+    for i in range(n - 1):
+        for c in (left[i], right[i]):
+            assert (lo[i] <= lo[c] + 1e-7).all()
+            assert (hi[i] >= hi[c] - 1e-7).all()
+    # leaves tight on their point
+    leaf = np.arange(n) + n - 1
+    assert np.allclose(lo[leaf], pts) and np.allclose(hi[leaf], pts)
+
+
+@pytest.mark.parametrize("n", [2, 5, 64, 257])
+def test_range_r_is_max_leaf_under_node(n):
+    pts, tree = _build(n, seed=3)
+    left = np.asarray(tree.left)
+    right = np.asarray(tree.right)
+    range_r = np.asarray(tree.range_r)
+
+    def max_leaf(node):
+        if node >= n - 1:
+            return node - (n - 1)
+        return max(max_leaf(left[node]), max_leaf(right[node]))
+
+    import sys
+    sys.setrecursionlimit(10000)
+    for i in range(2 * n - 1):
+        assert range_r[i] == max_leaf(i)
+
+
+def test_duplicate_codes_tiebreak():
+    # all identical points -> all codes equal; construction must still work
+    pts = np.zeros((33, 2), np.float32)
+    spts, order, codes = morton.morton_sort(jnp.asarray(pts))
+    tree = lbvh.build_tree(codes, spts, spts)
+    miss = np.asarray(tree.miss)
+    left = np.asarray(tree.left)
+    node, count = 0, 0
+    while node != -1:
+        if node >= 32:
+            count += 1
+            node = miss[node]
+        else:
+            node = left[node]
+    assert count == 33
+
+
+def test_densebox_segments_partition():
+    rng = np.random.default_rng(4)
+    pts = rng.uniform(0, 1, size=(400, 2)).astype(np.float32)
+    segs = grid.build_segments_densebox(jnp.asarray(pts), eps=0.08, min_pts=5)
+    start = np.asarray(segs.seg_start)
+    end = np.asarray(segs.seg_end)
+    sop = np.asarray(segs.seg_of_point)
+    assert start[0] == 0 and end[-1] == 400
+    assert (start[1:] == end[:-1]).all()          # contiguous partition
+    for s in range(segs.n_segments):
+        assert (sop[start[s]:end[s]] == s).all()
+    dense_seg = np.asarray(segs.dense_seg)
+    # dense segments have >= minpts members; loose are singletons
+    sizes = end - start
+    assert ((sizes >= 5) == dense_seg).all()
+    assert (sizes[~dense_seg] == 1).all()
+    # tight AABBs
+    spts = np.asarray(segs.pts)
+    for s in range(segs.n_segments):
+        mem = spts[start[s]:end[s]]
+        assert np.allclose(np.asarray(segs.prim_lo)[s], mem.min(0))
+        assert np.allclose(np.asarray(segs.prim_hi)[s], mem.max(0))
+    # dense cells geometrically valid: diameter <= eps
+    diam = np.linalg.norm(np.asarray(segs.prim_hi) - np.asarray(segs.prim_lo),
+                          axis=1)
+    assert (diam[dense_seg] <= 0.08 + 1e-6).all()

@@ -1,0 +1,50 @@
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import morton
+
+
+def test_expand_bits_2d_known_values():
+    v = jnp.asarray([0b1011], dtype=jnp.uint32)
+    out = int(morton._expand_bits_2d(v)[0])
+    assert out == 0b1000101  # 1 0 1 1 -> 1 _0 0_ 1 ... interleaved gaps
+
+
+def test_encode_2d_orders_quadrants():
+    pts = np.array([[0.0, 0.0], [0.0, 1.0], [1.0, 0.0], [1.0, 1.0]], np.float32)
+    codes = np.asarray(morton.morton_encode(jnp.asarray(pts)))
+    # x is the high interleave bit: (0,0) < (0,1) < (1,0) < (1,1)
+    assert codes[0] < codes[1] < codes[2] < codes[3]
+
+
+def test_encode_injective_on_grid_2d():
+    g = np.stack(np.meshgrid(np.arange(32), np.arange(32)), -1).reshape(-1, 2)
+    pts = (g / 31.0).astype(np.float32)
+    codes = np.asarray(morton.morton_encode(jnp.asarray(pts)))
+    assert len(np.unique(codes)) == len(codes)
+
+
+def test_encode_injective_on_grid_3d():
+    g = np.stack(np.meshgrid(*[np.arange(8)] * 3), -1).reshape(-1, 3)
+    pts = (g / 7.0).astype(np.float32)
+    codes = np.asarray(morton.morton_encode(jnp.asarray(pts)))
+    assert len(np.unique(codes)) == len(codes)
+
+
+def test_quantize_range():
+    pts = np.random.default_rng(0).normal(size=(100, 3)).astype(np.float32)
+    q = np.asarray(morton.quantize(jnp.asarray(pts), 10))
+    assert q.min() >= 0 and q.max() <= 1023
+
+
+def test_sort_locality():
+    # Z-order locality: consecutive codes should usually be spatial neighbors
+    rng = np.random.default_rng(1)
+    pts = rng.uniform(0, 1, size=(512, 2)).astype(np.float32)
+    spts, order, codes = morton.morton_sort(jnp.asarray(pts))
+    spts = np.asarray(spts)
+    assert (np.diff(np.asarray(codes).astype(np.int64)) >= 0).all()
+    hops = np.linalg.norm(np.diff(spts, axis=0), axis=1)
+    rand_hops = np.linalg.norm(np.diff(pts, axis=0), axis=1)
+    assert np.median(hops) < 0.5 * np.median(rand_hops)
+    assert (np.sort(np.asarray(order)) == np.arange(512)).all()

@@ -1,0 +1,63 @@
+"""Property-based tests (hypothesis) on exact integer-grid geometry.
+
+Coordinates are small integers and eps^2 is chosen strictly between integer
+values, so d2 comparisons are exact in float32 — every backend must agree
+*exactly* with the brute-force oracle, including at cluster merges.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dbscan, dbscan_bruteforce_np
+from repro.core.validate import check_dbscan, same_partition
+from repro.kernels import dbscan_tiled
+
+N = 48  # fixed size => jit caches are reused across examples
+
+points_strategy = st.lists(
+    st.tuples(st.integers(0, 12), st.integers(0, 12)),
+    min_size=N, max_size=N).map(
+        lambda l: np.asarray(l, np.float32))
+
+eps_strategy = st.sampled_from([1.4, 2.2, 3.1])   # eps^2 never integral
+minpts_strategy = st.sampled_from([2, 3, 5])
+
+
+@settings(max_examples=20, deadline=None)
+@given(pts=points_strategy, eps=eps_strategy, mp=minpts_strategy)
+def test_fdbscan_axioms(pts, eps, mp):
+    res = dbscan(pts, eps, mp, algorithm="fdbscan")
+    check_dbscan(pts, eps, mp, res.labels, res.core_mask)
+
+
+@settings(max_examples=20, deadline=None)
+@given(pts=points_strategy, eps=eps_strategy, mp=minpts_strategy)
+def test_densebox_matches_oracle(pts, eps, mp):
+    res = dbscan(pts, eps, mp, algorithm="fdbscan-densebox")
+    ref_labels, ref_core = dbscan_bruteforce_np(pts, eps, mp)
+    assert (np.asarray(res.core_mask) == ref_core).all()
+    assert same_partition(np.asarray(res.labels)[ref_core],
+                          ref_labels[ref_core])
+    check_dbscan(pts, eps, mp, res.labels, res.core_mask)
+
+
+@settings(max_examples=10, deadline=None)
+@given(pts=points_strategy, eps=eps_strategy, mp=minpts_strategy)
+def test_tiled_kernel_backend_matches_oracle(pts, eps, mp):
+    res = dbscan_tiled(pts, eps, mp)
+    ref_labels, ref_core = dbscan_bruteforce_np(pts, eps, mp)
+    assert (np.asarray(res.core_mask) == ref_core).all()
+    assert same_partition(np.asarray(res.labels)[ref_core],
+                          ref_labels[ref_core])
+
+
+@settings(max_examples=10, deadline=None)
+@given(pts=points_strategy, eps=eps_strategy, mp=minpts_strategy,
+       seed=st.integers(0, 2**31 - 1))
+def test_backends_agree_under_permutation(pts, eps, mp, seed):
+    perm = np.random.default_rng(seed).permutation(N)
+    a = dbscan(pts, eps, mp, algorithm="fdbscan")
+    b = dbscan(pts[perm], eps, mp, algorithm="fdbscan-densebox")
+    core = np.asarray(a.core_mask)
+    assert (core[perm] == np.asarray(b.core_mask)).all()
+    assert same_partition(np.asarray(a.labels)[perm][np.asarray(b.core_mask)],
+                          np.asarray(b.labels)[np.asarray(b.core_mask)])

@@ -1,0 +1,74 @@
+"""Sharding-resolver unit tests (pure spec logic, fake mesh)."""
+from types import SimpleNamespace
+
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as shd
+
+
+def fake_mesh(data=16, model=16):
+    return SimpleNamespace(axis_names=("data", "model"),
+                           devices=np.empty((data, model)))
+
+
+MESH = fake_mesh()
+
+
+def _spec(name, shape, in_blocks=False):
+    path = tuple(SimpleNamespace(key=k)
+                 for k in ((["blocks"] if in_blocks else []) + [name]))
+    return shd.param_spec(path, shape, MESH)
+
+
+def test_embedding_vocab_parallel():
+    assert _spec("embed", (151936, 2560)) == P("model", None)
+    assert _spec("unembed", (2560, 151936)) == P(None, "model")
+
+
+def test_attention_projections():
+    assert _spec("wq", (4096, 4096)) == P(None, "model")
+    assert _spec("wo", (4096, 4096)) == P("model", None)
+    # stacked superblock axis shifts dims
+    assert _spec("wq", (8, 4096, 4096), in_blocks=True) == P(None, None, "model")
+
+
+def test_divisibility_fallback_replicates():
+    # gemma2: 8 heads x 256 = 2048 cols; 2048 % 16 == 0 -> sharded
+    assert _spec("wq", (2304, 2048)) == P(None, "model")
+    # a 9-wide dim cannot shard over 16 -> replicated
+    assert _spec("wq", (2304, 9)) == P(None, None)
+
+
+def test_moe_expert_parallel_and_fallback():
+    # 64 experts % 16 == 0 -> expert parallel
+    assert _spec("w_gate", (6, 64, 2048, 1408), in_blocks=True) == \
+        P(None, "model", None, None)
+    # 8 experts % 16 != 0 -> shard d_ff instead (mixtral)
+    assert _spec("w_gate", (4, 8, 4096, 14336), in_blocks=True) == \
+        P(None, None, None, "model")
+    assert _spec("w_down", (4, 8, 14336, 4096), in_blocks=True) == \
+        P(None, None, "model", None)
+
+
+def test_norms_replicated():
+    assert _spec("scale", (4096,)) == P(None)
+    assert _spec("router", (4096, 8)) == P(None, None)
+
+
+def test_zero1_adds_data_on_largest_free_dim():
+    s = shd.zero1_spec(P(None, "model"), (4096, 11008), MESH)
+    assert s == P("data", "model")
+    # model-sharded dim is taken; largest free divisible dim gets data
+    s = shd.zero1_spec(P("model", None), (11008, 4096), MESH)
+    assert s == P("model", "data")
+    # nothing divisible -> unchanged
+    s = shd.zero1_spec(P(None,), (7,), MESH)
+    assert s == P(None)
+
+
+def test_mamba_rules():
+    assert _spec("in_proj", (4, 4096, 16384), in_blocks=True) == \
+        P(None, None, "model")
+    assert _spec("A_log", (4, 8192, 16), in_blocks=True) == \
+        P(None, "model", None)

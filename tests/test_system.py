@@ -1,0 +1,103 @@
+"""End-to-end behaviour tests for the paper's system claims."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import dbscan, fdbscan, grid, lbvh, traversal
+from repro.data import pointclouds
+
+from conftest import separated_points
+
+
+def test_on_the_fly_memory_no_neighbor_lists():
+    """The paper's O(n) claim: no structure in the pipeline may scale with
+    the edge count. We run a dense instance (avg degree ~n/4) and assert
+    every array allocated by the phases is O(n + m)."""
+    pts = jnp.asarray(separated_points(512, 2, eps=0.5, seed=0))
+    eps, minpts = 0.5, 4  # extremely dense: ~85k edges for 512 points
+    segs = grid.build_segments_densebox(pts, eps, minpts)
+    tree = lbvh.build_tree(segs.codes, segs.prim_lo, segs.prim_hi)
+    n, m = segs.n_points, segs.n_segments
+    bound = 4 * (2 * m - 1 + 2 * n)  # nodes + per-point arrays, elements
+    for leaf in list(tree) + list(segs):
+        assert leaf.size <= bound, f"edge-scaled allocation: {leaf.shape}"
+    core = fdbscan._preprocess(tree, segs, eps, minpts)
+    labels, sweeps = fdbscan._main_phase(tree, segs, eps, core)
+    assert labels.size == n and core.size == n
+
+
+def test_early_exit_count_saturates():
+    pts = jnp.asarray(separated_points(256, 2, eps=0.4, seed=1))
+    segs = grid.build_segments_fdbscan(pts)
+    tree = lbvh.build_tree(segs.codes, segs.prim_lo, segs.prim_hi)
+    counts = traversal.count_neighbors(tree, segs, 0.4, cap=5)
+    assert int(counts.max()) <= 5  # early exit: no count beyond minpts
+
+
+def test_densebox_eliminates_distance_work():
+    """>=90% of points in dense cells (paper's 2D road-data regime)."""
+    pts = pointclouds.trajectories_2d(8000)
+    eps = 0.02
+    segs = grid.build_segments_densebox(jnp.asarray(pts), eps, 5)
+    dense_frac = float(np.asarray(segs.dense_pt).mean())
+    assert dense_frac > 0.9
+    # all dense members are core without any traversal
+    core = fdbscan._preprocess(
+        lbvh.build_tree(segs.codes, segs.prim_lo, segs.prim_hi),
+        segs, eps, 5)
+    assert bool(np.asarray(core)[np.asarray(segs.dense_pt)].all())
+
+
+def test_sparse_3d_disables_dense_cells():
+    """Paper Fig. 6: at high minpts no cells are dense (cosmology)."""
+    pts = pointclouds.halos_3d(4000, seed=7)
+    segs = grid.build_segments_densebox(jnp.asarray(pts), 0.02, 100)
+    assert float(np.asarray(segs.dense_pt).mean()) < 0.05
+
+
+def test_minpts2_equals_connected_components():
+    """minpts=2 == friends-of-friends == CC of the eps-graph."""
+    pts = separated_points(300, 2, eps=0.06, seed=5)
+    res = dbscan(pts, 0.06, 2)
+    d2 = ((pts[:, None].astype(np.float64) - pts[None]) ** 2).sum(-1)
+    adj = d2 <= 0.06 * 0.06
+    n = len(pts)
+    lab = np.arange(n)
+    while True:  # min-label propagation to fixpoint = CC
+        new = np.min(np.where(adj, lab[None, :], n), axis=1)
+        new = np.minimum(lab, new)
+        if (new == lab).all():
+            break
+        lab = new
+    comp_sizes = np.bincount(lab, minlength=n)
+    singles = comp_sizes[lab] == 1
+    ours = np.asarray(res.labels)
+    assert ((ours == -1) == singles).all()
+    # same partition on non-noise
+    from repro.core.validate import same_partition
+    assert same_partition(ours[~singles], lab[~singles])
+
+
+def test_dedup_pipeline_end_to_end():
+    """The paper's technique as a framework feature: duplicate-heavy batch
+    in, thinned batch out, fresh documents untouched."""
+    from repro.data.dedup import dedup_batch
+    from repro.data.lm_data import SyntheticLM
+    data = SyntheticLM(1024, 64, seed=9, dup_frac=0.5)
+    raw = data.batch(0, 48)
+    out, idx = dedup_batch({"tokens": raw["tokens"]})
+    dup = raw["is_dup"]
+    assert len(idx) < 48
+    # duplicates collapse hard; at most a couple of fresh docs may fall
+    # into a borderline cluster (3-D projection tail)
+    assert dup[idx].sum() <= dup.sum() // 2
+    assert (~dup[idx]).sum() >= (~dup).sum() - 2
+
+
+def test_sweep_convergence_bound():
+    """Hook+jump sweep count stays logarithmic on adversarial chains."""
+    for n in (128, 512):
+        line = np.stack([np.linspace(0, 1, n), np.zeros(n)], -1).astype(np.float32)
+        res = dbscan(line, eps=1.5 / n, min_pts=2, algorithm="fdbscan")
+        assert res.n_clusters == 1
+        assert res.n_sweeps <= int(np.log2(n)) + 4
