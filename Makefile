@@ -1,0 +1,18 @@
+# Developer entry points. `make test-fast` is the tier-1 iteration loop
+# (seconds, -m fast subset); `make test` is the full suite (~minutes).
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-fast bench bench-full
+
+test:
+	$(PY) -m pytest -q --continue-on-collection-errors
+
+test-fast:
+	$(PY) -m pytest -q -m fast
+
+bench:
+	$(PY) -m benchmarks.run
+
+bench-full:
+	$(PY) -m benchmarks.run --full

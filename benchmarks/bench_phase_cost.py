@@ -1,46 +1,165 @@
 """Paper abstract claim: computing clusters costs at most ~2x neighbor
-determination. We time the three phases (preprocessing / main sweeps /
-border assignment) separately and report main+border relative to
-preprocessing-equivalent traversal cost.
+determination.
+
+We time the phases of the fused pipeline against the paper's comparator —
+FULL neighbor determination (no early exit) — and report:
+
+  * ratio_clustering_vs_nd: (fused first pass + remaining sweeps + border)
+    relative to full neighbor determination (the paper's <= 2x bound),
+  * traversal-loop iteration counts before/after fusion: the seed spent a
+    count pass + a first sweep (two walks, one work unit per loop trip);
+    the fused engine spends one walk at ``unroll`` work units per trip,
+  * per-run traversal counts (n_sweeps + 1 vs the seed's n_sweeps + 2).
+
+``run(json_out=...)`` additionally emits a machine-readable trajectory
+file (BENCH_traversal.json) so future PRs can track the hot path.
 """
 from __future__ import annotations
 
+import json
+
 import numpy as np
 
-from repro.core import fdbscan, grid, lbvh
+from repro.core import fdbscan, grid, lbvh, traversal
 from repro.data import pointclouds
-from .common import emit, time_fn
+from .common import emit
+
+INT_MAX = 2**31 - 1
+
+# 2-D and 3-D scenarios with the paper's full-scale (n=16384) minpts.
+# ``minpts`` scales with the subsample size so the density regime (dense
+# cell occupancy / core fraction) matches the paper's setting — at the
+# full-data minpts a 2k subsample has zero dense cells and ~2/3 noise,
+# which is structurally unlike the workload the claim is about.
+SCENARIOS = [
+    ("portotaxi_like", 0.01, 50),   # 2-D
+    ("hacc_like", 0.03, 5),         # 3-D
+    ("ngsim_like", 0.005, 100),     # 2-D, high minpts
+]
+FULL_N = 16384
 
 
-def run(n: int = 4096, quick: bool = False):
+def _scaled_minpts(minpts_full: int, n: int) -> int:
+    return max(3, minpts_full * n // FULL_N)
+
+
+def _sum_iters(tr):
+    return int(np.asarray(tr.iters).sum())
+
+
+# Interleaved timing: one call of every phase per round, medians across
+# rounds. Host speed drifts on shared machines; a per-phase timing block
+# lets the drift land unevenly and corrupt the phase *ratios*, which are
+# the quantity this benchmark exists to report.
+_ROUNDS = 5
+
+
+def _measure_rounds(phases: dict, rounds: int = _ROUNDS) -> dict:
+    import time as _time
+    import jax
+    for fn in phases.values():          # warmup/compile round
+        jax.block_until_ready(jax.tree.leaves(fn()))
+    acc = {k: [] for k in phases}
+    for _ in range(rounds):
+        for k, fn in phases.items():
+            t0 = _time.perf_counter()
+            jax.block_until_ready(jax.tree.leaves(fn()))
+            acc[k].append(_time.perf_counter() - t0)
+    return {k: float(np.median(v)) for k, v in acc.items()}
+
+
+def run(n: int = 4096, quick: bool = False, json_out: str | None = None):
     import jax.numpy as jnp
-    for dset, eps, minpts in ([("portotaxi_like", 0.01, 50)] if quick else
-                              [("portotaxi_like", 0.01, 50),
-                               ("ngsim_like", 0.005, 100),
-                               ("hacc_like", 0.03, 5)]):
+    records = {}
+    for dset, eps, minpts_full in (SCENARIOS[:2] if quick else SCENARIOS):
+        minpts = _scaled_minpts(minpts_full, n)
         pts = jnp.asarray(pointclouds.load(dset, n))
         segs = grid.build_segments_densebox(pts, eps, minpts)
         tree = lbvh.build_tree(segs.codes, segs.prim_lo, segs.prim_hi)
+        nq = segs.n_points
+        ones = jnp.ones(nq, bool)
+        core, labels0, vals0, absorbed, _ = fdbscan._fused_first_pass(
+            tree, segs, eps, minpts)
+        fused_init = (vals0, absorbed)
+        labels_fix, sweeps, stats = fdbscan._sweep_to_fixpoint(
+            tree, segs, eps, core, labels0, collect_stats=True,
+            fused_init=fused_init)
 
-        t_pre, core = time_fn(fdbscan._preprocess, tree, segs, eps, minpts)
-        # the paper's comparator: FULL neighbor determination (no early exit)
-        from repro.core import traversal
-        t_full, _ = time_fn(traversal.count_neighbors, tree, segs, eps,
-                            2**31 - 1)
-        t_main, (labels, sweeps) = time_fn(fdbscan._main_phase, tree, segs,
-                                           eps, core)
-        t_border, _ = time_fn(fdbscan._assign_borders, tree, segs, eps,
-                              core, labels)
-        ratio_full = (t_main + t_border) / max(t_full, 1e-9)
-        per_sweep = t_main / max(int(sweeps), 1) / max(t_full, 1e-9)
-        emit(f"phase_cost/{dset}/preprocess-earlyexit", t_pre * 1e6,
-             f"minpts={minpts}")
+        phases = {
+            # the paper's comparator: FULL neighbor determination
+            "full": lambda: traversal.traverse(tree, segs, eps, vals0, ones,
+                                               cap=INT_MAX, mode="count"),
+            # BEFORE fusion (seed shape): early-exit count over loose
+            # points + first min-label sweep over core queries gathering
+            # core values — exactly the seed's two single-work-unit walks
+            "pre": lambda: traversal.traverse(
+                tree, segs, eps, vals0, ones, cap=minpts, mode="count",
+                query_ids=traversal._ids_from_mask(nq, ~segs.dense_pt),
+                unroll=1),
+            "sweep1": lambda: traversal.traverse(
+                tree, segs, eps, labels0, core, mode="minlabel",
+                query_ids=traversal._ids_from_mask(nq, core), unroll=1),
+            # AFTER fusion: one walk, count saturating at min_pts - 1
+            "fused": lambda: traversal.traverse(tree, segs, eps, vals0,
+                                                ones, cap=minpts - 1,
+                                                mode="count_minlabel"),
+            "main": lambda: fdbscan._sweep_to_fixpoint(
+                tree, segs, eps, core, labels0, fused_init=fused_init)[0],
+            "border": lambda: fdbscan._assign_borders(tree, segs, eps,
+                                                      core, labels_fix),
+        }
+        t = _measure_rounds(phases)
+        t_full, t_pre, t_sweep1 = t["full"], t["pre"], t["sweep1"]
+        t_fused, t_main, t_border = t["fused"], t["main"], t["border"]
+
+        pre_tr = traversal.traverse(
+            tree, segs, eps, vals0, ones, cap=minpts, mode="count",
+            query_ids=traversal._ids_from_mask(nq, ~segs.dense_pt), unroll=1)
+        sweep1_tr = traversal.traverse(
+            tree, segs, eps, labels0, core, mode="minlabel",
+            query_ids=traversal._ids_from_mask(nq, core), unroll=1)
+        fused_tr = traversal.traverse(tree, segs, eps, vals0, ones,
+                                      cap=minpts - 1, mode="count_minlabel")
+        iters_before = _sum_iters(pre_tr) + _sum_iters(sweep1_tr)
+        iters_after = _sum_iters(fused_tr)
+
+        t_cluster = t_fused + t_main + t_border
+        ratio = t_cluster / max(t_full, 1e-9)
+        n_sweeps = 1 + sweeps
+        rec = {
+            "n": int(nq), "eps": eps, "minpts": minpts,
+            "t_neighbor_determination_us": t_full * 1e6,
+            "t_fused_first_pass_us": t_fused * 1e6,
+            "t_separate_pre_plus_sweep_us": (t_pre + t_sweep1) * 1e6,
+            "t_main_sweeps_us": t_main * 1e6,
+            "t_border_us": t_border * 1e6,
+            "t_total_clustering_us": t_cluster * 1e6,
+            "ratio_clustering_vs_nd": ratio,
+            "loop_iters_before_fusion": iters_before,
+            "loop_iters_after_fusion": iters_after,
+            "iters_speedup": iters_before / max(iters_after, 1),
+            "n_sweeps": n_sweeps,
+            "n_traversals": n_sweeps + 1,
+            "n_traversals_seed_equivalent": n_sweeps + 2,
+            "frontier_per_sweep": stats["frontier_per_sweep"],
+            "active_queries_per_sweep": stats["active_per_sweep"],
+            "sweep_iters_per_sweep": stats["iters_per_sweep"],
+        }
+        records[dset] = rec
         emit(f"phase_cost/{dset}/neighbor-determination-full", t_full * 1e6,
              "paper comparator")
-        emit(f"phase_cost/{dset}/main+border", (t_main + t_border) * 1e6,
-             f"sweeps={int(sweeps)};ratio_vs_full={ratio_full:.2f};"
-             f"per_sweep_vs_full={per_sweep:.2f}")
+        emit(f"phase_cost/{dset}/first-pass-fused", t_fused * 1e6,
+             f"vs_separate={(t_pre + t_sweep1) * 1e6:.1f}us;"
+             f"iters {iters_before}->{iters_after}")
+        emit(f"phase_cost/{dset}/total-clustering", t_cluster * 1e6,
+             f"ratio_vs_nd={ratio:.2f};sweeps={n_sweeps};"
+             f"traversals={n_sweeps + 1}")
+    if json_out:
+        with open(json_out, "w") as f:
+            json.dump(records, f, indent=2)
+        print(f"# wrote {json_out}")
+    return records
 
 
 if __name__ == "__main__":
-    run()
+    run(json_out="BENCH_traversal.json")

@@ -21,7 +21,7 @@ def time_fn(fn, *args, warmup: int = 1, repeat: int = 3, **kw):
     return float(np.median(times)), r
 
 
-def algorithms(include_gdbscan=True, include_tiled=True):
+def algorithms(include_gdbscan=True, include_tiled=True, include_auto=False):
     from repro.core import dbscan, gdbscan
     from repro.kernels import dbscan_tiled
     algos = {
@@ -31,6 +31,9 @@ def algorithms(include_gdbscan=True, include_tiled=True):
     }
     if include_tiled:
         algos["tiled-mxu"] = lambda p, e, m: dbscan_tiled(p, e, m)
+    if include_auto:
+        # the unified dispatcher: backend choice + plan cache across eps
+        algos["auto"] = lambda p, e, m: dbscan(p, e, m, algorithm="auto")
     if include_gdbscan:
         algos["gdbscan"] = gdbscan
     return algos

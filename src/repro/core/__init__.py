@@ -1,7 +1,15 @@
-"""Core library: the paper's tree-based DBSCAN algorithms on TPU/JAX."""
-from .fdbscan import DBSCANResult, dbscan
-from .baselines import dbscan_bruteforce_np, gdbscan
-from . import grid, lbvh, morton, traversal, unionfind, validate
+"""Core library: the paper's tree-based DBSCAN algorithms on TPU/JAX.
 
-__all__ = ["DBSCANResult", "dbscan", "dbscan_bruteforce_np", "gdbscan",
-           "grid", "lbvh", "morton", "traversal", "unionfind", "validate"]
+``dbscan`` is the unified auto-dispatching entry point (DESIGN.md §5): it
+plans a backend (tree walk or MXU tiles) per input and reuses cached
+indexes across eps/min_pts sweeps. The per-algorithm implementations stay
+importable via ``fdbscan`` and ``kernels.ops``.
+"""
+from .fdbscan import DBSCANResult
+from .dispatch import dbscan, plan, Plan
+from .baselines import dbscan_bruteforce_np, gdbscan
+from . import dispatch, fdbscan, grid, lbvh, morton, traversal, unionfind, validate
+
+__all__ = ["DBSCANResult", "dbscan", "plan", "Plan", "dbscan_bruteforce_np",
+           "gdbscan", "dispatch", "fdbscan", "grid", "lbvh", "morton",
+           "traversal", "unionfind", "validate"]

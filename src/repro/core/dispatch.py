@@ -1,0 +1,171 @@
+"""Unified backend dispatch for DBSCAN (DESIGN.md §5).
+
+One entry point — ``dbscan(points, eps, min_pts, algorithm="auto")`` —
+serving three backends:
+
+  * ``fdbscan``          — singleton-segment BVH (Morton order); the index
+                           is eps-independent, so it is cached per point set
+                           and reused verbatim across ``eps``/``min_pts``
+                           sweeps (benchmarks/bench_eps.py's workload).
+  * ``fdbscan-densebox`` — mixed dense-cell/loose-point BVH; the eps-grid
+                           build doubles as the density probe that drives
+                           the auto heuristic, so choosing this backend
+                           costs no extra work.
+  * ``tiled``            — the MXU Pallas tile backend (kernels/ops.py):
+                           n^2 streamed distance tiles beat a divergent
+                           tree walk when the point count is small.
+
+``plan()`` performs the (cacheable) decision + index build; ``dbscan()``
+executes a plan. Plans are memoized in a small LRU keyed by point-set
+content hash + parameters, with the eps-independent fdbscan index shared
+across all eps/min_pts entries of the same point set.
+"""
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from typing import Any, NamedTuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import fdbscan, grid, lbvh
+
+# Below this size the n^2 tile sweep is cheaper than divergent traversal
+# (one 128x128 MXU tile row per query block), and it keeps the CPU
+# interpret-mode path exercised in tests.
+TILED_MAX_POINTS = 1024
+# Minimum fraction of points inside dense cells for the DenseBox index to
+# pay for its grid pass (paper Fig. 6: sparse/high-minpts regimes have ~0).
+DENSE_FRACTION_MIN = 0.05
+
+_CACHE_MAX = 32
+_plan_cache: "OrderedDict[Any, Any]" = OrderedDict()
+
+ALGORITHMS = ("auto", "fdbscan", "fdbscan-densebox", "tiled")
+
+
+class Plan(NamedTuple):
+    """A resolved backend choice plus the (reusable) index that drove it."""
+    backend: str                      # "fdbscan" | "fdbscan-densebox" | "tiled"
+    segs: grid.Segments | None        # None for the tiled backend
+    tree: lbvh.Tree | None            # None for tiled or single-segment
+    stats: dict                       # occupancy/size stats behind the choice
+
+
+def clear_cache() -> None:
+    _plan_cache.clear()
+
+
+def cache_info() -> dict:
+    return {"entries": len(_plan_cache), "max": _CACHE_MAX}
+
+
+def _points_key(points) -> str:
+    arr = np.ascontiguousarray(np.asarray(points))
+    h = hashlib.sha1(arr.tobytes())
+    h.update(repr((arr.shape, str(arr.dtype))).encode())
+    return h.hexdigest()
+
+
+def _cache_get(key):
+    if key in _plan_cache:
+        _plan_cache.move_to_end(key)
+        return _plan_cache[key]
+    return None
+
+
+def _cache_put(key, val):
+    _plan_cache[key] = val
+    _plan_cache.move_to_end(key)
+    while len(_plan_cache) > _CACHE_MAX:
+        _plan_cache.popitem(last=False)
+    return val
+
+
+def _tree_of(segs: grid.Segments):
+    if segs.n_segments < 2 or segs.n_points < 2:
+        return None
+    return lbvh.build_tree(segs.codes, segs.prim_lo, segs.prim_hi)
+
+
+def _fdbscan_plan(points, pkey: str, stats: dict) -> Plan:
+    """Plain-FDBSCAN plan; the index is eps-independent and shared across
+    every (eps, min_pts) plan for the same point set."""
+    base_key = (pkey, "fdbscan-index")
+    cached = _cache_get(base_key)
+    if cached is None:
+        segs = grid.build_segments_fdbscan(points)
+        cached = _cache_put(base_key, (segs, _tree_of(segs)))
+    segs, tree = cached
+    return Plan("fdbscan", segs, tree, stats)
+
+
+def plan(points, eps: float, min_pts: int,
+         algorithm: str = "auto") -> Plan:
+    """Choose a backend and build (or fetch) its index.
+
+    The densebox grid build is reused as the density probe: its dense-point
+    fraction decides densebox-vs-plain, and on a densebox decision the very
+    same segments become the index (no duplicated work).
+    """
+    if algorithm not in ALGORITHMS:
+        raise ValueError(f"unknown algorithm {algorithm!r}")
+    if eps < 0:
+        raise ValueError(f"eps must be non-negative; got {eps}"
+                         " (a negative eps would be squared away silently)")
+    points = jnp.asarray(points)
+    n, d = points.shape
+    pkey = _points_key(points)
+    key = (pkey, float(eps), int(min_pts), algorithm)
+    hit = _cache_get(key)
+    if hit is not None:
+        return hit
+
+    stats: dict = {"n": n, "d": d}
+    if algorithm == "tiled" or (algorithm == "auto" and n <= TILED_MAX_POINTS):
+        stats["reason"] = ("explicit" if algorithm == "tiled"
+                           else f"n <= {TILED_MAX_POINTS}: MXU tiles win")
+        return _cache_put(key, Plan("tiled", None, None, stats))
+
+    if algorithm == "fdbscan" or d not in (2, 3):
+        stats["reason"] = ("explicit" if algorithm == "fdbscan"
+                           else "no eps-grid for this dimensionality")
+        return _cache_put(key, _fdbscan_plan(points, pkey, stats))
+
+    # eps-grid build: density probe and (potentially) the index itself
+    segs = grid.build_segments_densebox(points, eps, min_pts)
+    dense_frac = float(np.asarray(segs.dense_pt).mean())
+    stats.update(dense_fraction=dense_frac, n_segments=segs.n_segments)
+    if algorithm == "fdbscan-densebox" or dense_frac >= DENSE_FRACTION_MIN:
+        stats["reason"] = ("explicit" if algorithm == "fdbscan-densebox"
+                           else f"dense_fraction >= {DENSE_FRACTION_MIN}")
+        return _cache_put(key,
+                          Plan("fdbscan-densebox", segs, _tree_of(segs), stats))
+    stats["reason"] = f"dense_fraction < {DENSE_FRACTION_MIN}: plain tree"
+    return _cache_put(key, _fdbscan_plan(points, pkey, stats))
+
+
+def dbscan(points, eps: float, min_pts: int, *, algorithm: str = "auto",
+           star: bool = False, frontier: bool = True,
+           query_plan: Plan | None = None) -> fdbscan.DBSCANResult:
+    """DBSCAN with automatic backend selection (the unified entry point).
+
+    ``query_plan`` short-circuits planning entirely — pass the result of a
+    previous :func:`plan` call *for the same point set* to amortize the
+    index build across runs (the plan's index, not ``points``, is what a
+    tree backend clusters).
+    """
+    points = jnp.asarray(points)
+    p = query_plan if query_plan is not None else plan(points, eps, min_pts,
+                                                       algorithm)
+    if p.backend == "tiled":
+        import jax
+        from repro.kernels import ops
+        # interpret mode only off-TPU (the Pallas kernels are TPU-tiled;
+        # interpret=True is the CPU-test emulation path)
+        return ops.dbscan_tiled(points, eps, min_pts, star=star,
+                                interpret=jax.default_backend() != "tpu")
+    return fdbscan.cluster_from_index(p.segs, p.tree, eps, min_pts,
+                                      star=star, frontier=frontier,
+                                      backend=p.backend)

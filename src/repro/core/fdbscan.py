@@ -2,16 +2,25 @@
 
 Two bulk phases over a segment BVH (DESIGN.md §1, §3):
 
-  preprocessing: determine core points with an early-exit neighbor count
-      (``minpts`` neighbors suffice — the paper's "lightweight" approach);
-      entirely skipped when ``minpts == 2`` (every ε-pair is core-core) and,
-      for DenseBox, skipped for all points inside dense cells (all core).
+  fused first pass (DESIGN.md §4): ONE traversal computes the neighbor
+      count *and* a min-neighbor-label candidate, collapsing core-point
+      preprocessing and the first main-phase sweep — the paper's claim that
+      clustering costs stay within ~2x of neighbor determination hinges on
+      exactly this fusion. The candidate is validated against the core mask
+      after the pass (a candidate gathered from a non-core neighbor is
+      discarded), so the hook only ever merges genuine core-core pairs.
 
   main: min-label propagation sweeps fused into the traversal (hook) +
       pointer jumping (DESIGN.md §3 explains why this replaces the GPU's
-      atomic-CAS union-find), iterated to a fixpoint. Border points are
-      assigned in one final gather and never propagate labels — this removes
-      the paper's critical section (no cluster bridging by construction).
+      atomic-CAS union-find), iterated to a fixpoint. Sweeps restrict
+      their gathers to the *frontier* — the points whose label changed
+      last sweep (ECL-CC-style active-set restriction; DESIGN.md §4).
+      Because labels decrease monotonically under a min hook, the
+      restriction is exact, so the first no-change sweep certifies the
+      fixpoint with no separate verification pass. Border points are
+      assigned in one final gather and never propagate labels — this
+      removes the paper's critical section (no cluster bridging by
+      construction).
 
 Memory is O(n + m): neighbor lists are never materialized.
 """
@@ -20,20 +29,26 @@ from __future__ import annotations
 from functools import partial
 from typing import NamedTuple
 
+import numpy as np
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from . import grid, lbvh, traversal, unionfind
 
 INT_MAX = traversal.INT_MAX
+
+# Frontier id vectors are padded to the next power of two (floor below) so
+# the jitted traversal sees a bounded number of distinct shapes per run.
+_PAD_MIN = 64
 
 
 class DBSCANResult(NamedTuple):
     labels: jax.Array      # (n,) cluster id in [0, n_clusters) or -1 (noise)
     core_mask: jax.Array   # (n,) point is a core point
     n_clusters: int
-    n_sweeps: int          # main-phase sweeps until fixpoint
+    n_sweeps: int          # main-phase sweeps until fixpoint (incl. fused)
+    n_traversals: int = -1  # total tree walks this run (-1: not applicable)
+    backend: str = ""      # resolved backend that produced the result
 
 
 def _unify_dense(labels, segs: grid.Segments):
@@ -46,7 +61,11 @@ def _unify_dense(labels, segs: grid.Segments):
 
 @partial(jax.jit, static_argnames=("min_pts",))
 def _preprocess(tree, segs, eps, min_pts: int):
-    """Core-point determination with early exit at min_pts."""
+    """Standalone core-point determination with early exit at min_pts.
+
+    Kept as the unfused reference (tests compare it against the fused first
+    pass); the production path is ``_fused_first_pass``.
+    """
     # Dense members are core by construction; only loose points traverse.
     counts = traversal.count_neighbors(tree, segs, eps, cap=min_pts,
                                        query_active=~segs.dense_pt)
@@ -55,40 +74,251 @@ def _preprocess(tree, segs, eps, min_pts: int):
 
 
 @jax.jit
-def _main_phase(tree, segs, eps, core):
-    """Hook+jump sweeps until the core-core components stabilize."""
+def _fused_first_pass_jit(tree, segs, eps, min_pts):
     n = segs.n_points
-    labels0 = jnp.where(core, jnp.arange(n, dtype=jnp.int32), jnp.int32(INT_MAX))
+    idx = jnp.arange(n, dtype=jnp.int32)
+    # Candidate labels as if every point were core: own index, unified
+    # within dense cells. Every gathered value is therefore a sorted index
+    # whose core status can be checked once counts are known.
+    vals0 = _unify_dense(idx, segs)
+    # hits excludes the query itself: |N_eps(q)| >= min_pts <=> hits >= mp-1,
+    # so the count may saturate at min_pts - 1 (re-arming the dense
+    # short-circuit for saturated lanes — the fused early exit).
+    tr = traversal.fused_count_minlabel(tree, segs, eps, vals0,
+                                        cap=min_pts - 1)
+    core = segs.dense_pt | (tr.hits >= min_pts - 1)
+    # Validate the candidate: vals0 maps loose points to themselves and
+    # dense points to a dense (hence core) member, so core[cand] holds iff
+    # the contributing neighbor is core — a sound hook (DESIGN.md §4).
+    cand = tr.acc
+    cand_ok = core[jnp.clip(cand, 0, n - 1)]
+    labels0 = jnp.where(core, jnp.where(cand_ok, cand, vals0),
+                        jnp.int32(INT_MAX))
     labels0 = jnp.where(core, _unify_dense(labels0, segs), labels0)
+    labels0 = jnp.where(core, unionfind.jump_to_fixpoint(
+        jnp.where(core, labels0, idx)), labels0)
+    # A core query with a valid candidate has absorbed the min over *every*
+    # neighbor's initial value; in the next sweep it only needs to gather
+    # from points whose label changed since init (DESIGN.md §4).
+    absorbed = cand_ok & core
+    return core, labels0, vals0, absorbed, tr
 
-    def cond(state):
-        _, changed, _ = state
-        return changed
 
-    def body(state):
-        labels, _, sweeps = state
-        gathered, _ = traversal.minlabel_sweep(tree, segs, eps, labels,
-                                               gather_mask=core,
-                                               query_active=core)
-        new = unionfind.hook(labels, gathered, mask=core)
-        new = _unify_dense(jnp.where(core, new, labels), segs)
-        new = jnp.where(core, unionfind.jump_to_fixpoint(
-            jnp.where(core, new, jnp.arange(n, dtype=jnp.int32))), new)
-        changed = jnp.any(new != labels)
-        return new, changed, sweeps + 1
+def _fused_first_pass(tree, segs, eps, min_pts: int):
+    """(core, labels0, vals0, absorbed, trace) from a single traversal."""
+    return _fused_first_pass_jit(tree, segs, eps,
+                                 jnp.asarray(min_pts, jnp.int32))
 
-    labels, _, sweeps = lax.while_loop(cond, body,
-                                       (labels0, jnp.bool_(True), jnp.int32(0)))
-    return labels, sweeps
+
+def _pad_size(k: int) -> int:
+    """Pad length with quarter-power-of-two granularity: bounded distinct
+    jit shapes (~4 per octave) without the up-to-2x lane waste of pure
+    power-of-two buckets."""
+    size = _PAD_MIN
+    while size < k:
+        size *= 2
+    if size > _PAD_MIN:
+        quarter = size // 4
+        size = -(-k // quarter) * quarter
+    return max(size, _PAD_MIN)
+
+
+def _compact_ids(mask_np: np.ndarray) -> jax.Array:
+    """Active sorted-point ids, padded with -1 to a bucketed length."""
+    idx = np.flatnonzero(mask_np).astype(np.int32)
+    out = np.full(_pad_size(len(idx)), -1, np.int32)
+    out[:len(idx)] = idx
+    return jnp.asarray(out)
+
+
+def _gather_minlabel(tree, segs, eps, labels, gather_mask, ids,
+                     node_mask=None):
+    """One (possibly compacted/pruned) min-label sweep, full-width output."""
+    tr = traversal.traverse(tree, segs, eps, labels, gather_mask,
+                            query_ids=ids, mode="minlabel",
+                            node_mask=node_mask)
+    n = segs.n_points
+    safe = jnp.where(ids >= 0, ids, jnp.int32(n))  # padding -> dropped
+    gathered = jnp.full(n, INT_MAX, jnp.int32).at[safe].set(
+        jnp.where(ids >= 0, tr.acc, INT_MAX), mode="drop")
+    return gathered, tr
 
 
 @jax.jit
-def _assign_borders(tree, segs, eps, core, core_labels):
-    """Borders take the min adjacent core root; isolated non-core -> noise."""
+def _post_sweep(tree, segs, labels, core, ids, acc):
+    """Scatter-back + hook + dense unification + pointer jumping + change
+    detection + next sweep's node flags, fused into one dispatch (the host
+    loop's per-sweep cost is dominated by dispatch overhead otherwise)."""
+    n = labels.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    safe = jnp.where(ids >= 0, ids, jnp.int32(n))  # padding -> dropped
+    gathered = jnp.full(n, INT_MAX, jnp.int32).at[safe].set(
+        jnp.where(ids >= 0, acc, INT_MAX), mode="drop")
+    new = unionfind.hook(labels, gathered, mask=core)
+    new = _unify_dense(jnp.where(core, new, labels), segs)
+    new = jnp.where(core, unionfind.jump_to_fixpoint(
+        jnp.where(core, new, idx)), new)
+    changed = (new != labels) & core
+    return new, changed, _frontier_node_mask(tree, segs, changed)
+
+
+@jax.jit
+def _frontier_node_mask(tree, segs, changed):
+    """Per-node 'subtree holds a changed point' flag for descent pruning."""
+    seg_changed = jax.ops.segment_max(changed.astype(jnp.int32),
+                                      segs.seg_of_point,
+                                      num_segments=segs.n_segments).astype(bool)
+    return lbvh.propagate_leaf_flags(tree, seg_changed)
+
+
+# A pair within eps spans at most ceil(eps / cell_edge) cells per axis;
+# cell_edge >= eps/sqrt(d) (d <= 3), so radius 2 always covers.
+_CELL_DILATE = 2
+
+
+def _cell_keys(pts, eps: float) -> np.ndarray:
+    """int64 eps-grid cell key per (sorted) point, for the frontier filter."""
+    cells, _ = grid._cell_coords(jnp.asarray(pts), eps)
+    c = np.asarray(cells).astype(np.int64)
+    if c.shape[1] == 2:
+        return (c[:, 0] << 21) | c[:, 1]
+    return (c[:, 0] << 42) | (c[:, 1] << 21) | c[:, 2]
+
+
+def _near_changed(keys: np.ndarray, d: int, changed_np: np.ndarray
+                  ) -> np.ndarray:
+    """Points whose eps-cell is within the dilation radius of a changed
+    point's cell — a sound superset of 'has a changed point within eps'."""
+    changed_keys = np.unique(keys[changed_np])
+    r = range(-_CELL_DILATE, _CELL_DILATE + 1)
+    # arithmetic (not bitwise) composition: offsets have negative components
+    if d == 2:
+        offs = [(dx << 21) + dy for dx in r for dy in r]
+    else:
+        offs = [(dx << 42) + (dy << 21) + dz
+                for dx in r for dy in r for dz in r]
+    dilated = (changed_keys[:, None] + np.asarray(offs, np.int64)).ravel()
+    return np.isin(keys, dilated)
+
+
+def _sweep_to_fixpoint(tree, segs, eps, core, labels0, *,
+                       frontier: bool = True, collect_stats: bool = False,
+                       fused_init=None):
+    """Hook+jump sweeps until the core-core components stabilize.
+
+    Frontier restriction (DESIGN.md §4): labels only ever decrease and the
+    hook is a monotone min, so a point already holds everything it gathered
+    in earlier sweeps — gathering over *only the points whose label changed
+    last sweep* is exact, not a heuristic. Each frontier sweep therefore
+    (a) masks the gather to changed points and (b) prunes tree descent into
+    subtrees containing no changed point, so lanes far from any change die
+    within a few box tests. Dense-cell unification marks every member of a
+    changed cell as changed, which flags the cell's subtree — points that
+    neighbor such a cell re-discover it through the unpruned walk. Labels
+    and sweep counts are identical to full sweeps; only the work shrinks.
+
+    Returns (labels, sweeps, stats) with per-sweep frontier sizes and
+    loop-trip totals.
+    """
     n = segs.n_points
-    acc, _ = traversal.border_gather(tree, segs, eps, core_labels, core,
-                                     query_active=~core)
-    labels = jnp.where(core, core_labels, acc)
+    d = segs.pts.shape[1]
+    core_np = np.asarray(core)
+    n_core = int(core_np.sum())
+    # Query-side restriction only pays once the frontier is genuinely
+    # small; above this the cell filter is host overhead for nothing.
+    small = max(_PAD_MIN, n_core // 4)
+    labels = labels0
+    ids_core = _compact_ids(core_np)  # default: every core point gathers
+    ids = ids_core
+    gather_mask = core            # sweep 1 is full: nothing gathered yet
+    # every gather mask is a subset of core, so subtrees holding only
+    # non-core points (noise regions) are prunable from sweep one on
+    node_mask_core = _frontier_node_mask(tree, segs, core)
+    node_mask = node_mask_core
+    # eps <= 0 is degenerate (no grid): skip the cell filter, keep the
+    # (still exact) gather-mask + node-mask frontier restriction
+    cell_keys = _cell_keys(segs.pts, eps) if frontier and eps > 0 else None
+    dual = None
+    if frontier and fused_init is not None:
+        # Split first sweep: queries that absorbed every initial value in
+        # the fused pass gather changed-since-init points only (narrow);
+        # the validation-rejected minority gathers the full core set
+        # (wide). One walk, per-lane mask choice — exact either way.
+        vals0, absorbed = fused_init
+        changed0 = core & (labels0 != vals0)
+        changed0_np = np.asarray(changed0)
+        wide_np = core_np & ~np.asarray(absorbed)
+        if cell_keys is not None and int(changed0_np.sum()) <= small:
+            near0 = (_near_changed(cell_keys, d, changed0_np)
+                     if changed0_np.any() else np.zeros(n, bool))
+            active_np = wide_np | (core_np & near0)
+            ids = _compact_ids(active_np)
+            ids_np = np.asarray(ids)
+            lane_wide = jnp.asarray(
+                np.where(ids_np >= 0, wide_np[np.maximum(ids_np, 0)], False))
+            gather_mask = changed0
+            dual = dict(point_mask_wide=core, wide_lanes=lane_wide,
+                        node_mask_wide=node_mask_core)
+            node_mask = _frontier_node_mask(tree, segs, changed0)
+    sweeps = 0
+    stats = {"frontier_per_sweep": [], "active_per_sweep": [],
+             "iters_per_sweep": [], "evals_per_sweep": []}
+    while True:
+        tr = traversal.traverse(tree, segs, eps, labels, gather_mask,
+                                query_ids=ids, mode="minlabel",
+                                node_mask=node_mask, **(dual or {}))
+        dual = None               # only the first sweep may be split
+        new, changed, changed_flags = _post_sweep(tree, segs, labels, core,
+                                                  ids, tr.acc)
+        sweeps += 1
+        if collect_stats:
+            stats["frontier_per_sweep"].append(int(jnp.sum(gather_mask)))
+            stats["active_per_sweep"].append(int(jnp.sum(ids >= 0)))
+            stats["iters_per_sweep"].append(int(jnp.sum(tr.iters)))
+            stats["evals_per_sweep"].append(int(jnp.sum(tr.evals)))
+        labels = new
+        changed_np = np.asarray(changed)
+        n_changed = int(changed_np.sum())
+        if n_changed == 0:
+            break
+        if frontier:
+            # gather only from changed points; prune unchanged subtrees;
+            # and, once the frontier is small, re-traverse only queries
+            # whose eps-cell neighborhood holds a changed point (anyone
+            # else provably cannot improve)
+            gather_mask = changed
+            node_mask = changed_flags
+            if cell_keys is not None and n_changed <= small:
+                ids = _compact_ids(core_np & _near_changed(cell_keys, d,
+                                                           changed_np))
+            else:
+                ids = ids_core
+    return labels, sweeps, stats
+
+
+def _main_phase(tree, segs, eps, core, *, frontier: bool = True):
+    """Seed-compatible entry: (labels, sweeps) from a core mask."""
+    n = segs.n_points
+    labels0 = jnp.where(core, jnp.arange(n, dtype=jnp.int32),
+                        jnp.int32(INT_MAX))
+    labels0 = jnp.where(core, _unify_dense(labels0, segs), labels0)
+    labels, sweeps, _ = _sweep_to_fixpoint(tree, segs, eps, core, labels0,
+                                           frontier=frontier)
+    return labels, sweeps
+
+
+def _assign_borders(tree, segs, eps, core, core_labels):
+    """Borders take the min adjacent core root; isolated non-core -> noise.
+
+    Traverses a compacted non-core query set (usually a small minority),
+    pruning subtrees that hold no core point (nothing to gather there).
+    """
+    ids = _compact_ids(np.asarray(~core))
+    vals = jnp.where(core, core_labels, jnp.int32(INT_MAX))
+    gathered, _ = _gather_minlabel(tree, segs, eps, vals, core, ids,
+                                   node_mask=_frontier_node_mask(tree, segs,
+                                                                 core))
+    labels = jnp.where(core, core_labels, gathered)
     return jnp.where(labels == INT_MAX, jnp.int32(-1), labels)
 
 
@@ -106,18 +336,81 @@ def _finalize(labels_sorted, order, n):
     return compact.astype(jnp.int32), n_clusters
 
 
+def cluster_from_index(segs: grid.Segments, tree, eps: float, min_pts: int,
+                       *, star: bool = False, frontier: bool = True,
+                       backend: str = "", with_stats: bool = False):
+    """Run the clustering phases over a prebuilt (segments, tree) index.
+
+    ``tree`` may be None when ``segs.n_segments == 1`` (single dense cell).
+    This is the entry the dispatcher (repro.core.dispatch) reuses so an
+    index cached across ``eps``/``min_pts`` sweeps skips the build.
+    """
+    n = segs.n_points
+    stats: dict = {}
+    if n == 1:
+        noise = min_pts > 1
+        res = DBSCANResult(labels=jnp.array([-1 if noise else 0], jnp.int32),
+                           core_mask=jnp.array([not noise]),
+                           n_clusters=0 if noise else 1, n_sweeps=0,
+                           n_traversals=0, backend=backend)
+        return (res, stats) if with_stats else res
+
+    if segs.n_segments == 1:
+        # Everything inside one dense cell: one cluster, all core, 0 sweeps.
+        res = DBSCANResult(labels=jnp.zeros(n, jnp.int32),
+                           core_mask=jnp.ones(n, bool),
+                           n_clusters=1, n_sweeps=0, n_traversals=0,
+                           backend=backend)
+        return (res, stats) if with_stats else res
+
+    # Fused first pass: neighbor count + hooked labels in ONE traversal
+    # (the seed spent two: a count pass and the first min-label sweep).
+    core, labels0, vals0, absorbed, first = _fused_first_pass(
+        tree, segs, eps, min_pts)
+    core_labels, loop_sweeps, sweep_stats = _sweep_to_fixpoint(
+        tree, segs, eps, core, labels0, frontier=frontier,
+        collect_stats=with_stats, fused_init=(vals0, absorbed))
+    n_sweeps = 1 + loop_sweeps          # the fused pass is sweep #1
+    n_traversals = n_sweeps
+
+    if star:
+        labels_sorted = jnp.where(core, core_labels, jnp.int32(-1))
+    else:
+        labels_sorted = _assign_borders(tree, segs, eps, core, core_labels)
+        n_traversals += 1
+
+    labels, n_clusters = _finalize(labels_sorted, segs.order, n)
+    core_mask = jnp.zeros(n, bool).at[segs.order].set(core)
+    res = DBSCANResult(labels=labels, core_mask=core_mask,
+                       n_clusters=n_clusters, n_sweeps=n_sweeps,
+                       n_traversals=n_traversals, backend=backend)
+    if with_stats:
+        stats = dict(sweep_stats)
+        stats["first_pass_iters"] = int(jnp.sum(first.iters))
+        stats["first_pass_evals"] = int(jnp.sum(first.evals))
+        return res, stats
+    return res
+
+
 def dbscan(points, eps: float, min_pts: int, *, algorithm: str = "auto",
-           star: bool = False) -> DBSCANResult:
+           star: bool = False, frontier: bool = True) -> DBSCANResult:
     """DBSCAN via the paper's tree-based algorithms.
 
-    algorithm: "fdbscan" | "fdbscan-densebox" | "auto" (densebox for 2/3-D,
-    matching the paper's recommendation for dense low-dimensional data).
-    star=True implements DBSCAN* (no border points; non-core -> noise).
+    algorithm: "fdbscan" | "fdbscan-densebox" build the named tree index
+    directly; "auto" and "tiled" go through the unified dispatcher
+    (repro.core.dispatch), which probes the eps-grid occupancy and may pick
+    the MXU tile backend. star=True implements DBSCAN* (no border points;
+    non-core -> noise). frontier=False forces full (unrestricted) sweeps.
     """
     points = jnp.asarray(points)
+    if algorithm in ("auto", "tiled"):
+        from . import dispatch
+        return dispatch.dbscan(points, eps, min_pts, algorithm=algorithm,
+                               star=star, frontier=frontier)
+    if eps < 0:
+        raise ValueError(f"eps must be non-negative; got {eps}"
+                         " (a negative eps would be squared away silently)")
     n, d = points.shape
-    if algorithm == "auto":
-        algorithm = "fdbscan-densebox" if d in (2, 3) else "fdbscan"
     if algorithm == "fdbscan-densebox":
         segs = grid.build_segments_densebox(points, eps, min_pts)
     elif algorithm == "fdbscan":
@@ -125,44 +418,8 @@ def dbscan(points, eps: float, min_pts: int, *, algorithm: str = "auto",
     else:
         raise ValueError(f"unknown algorithm {algorithm!r}")
 
-    if n == 1:
-        noise = min_pts > 1
-        return DBSCANResult(labels=jnp.array([-1 if noise else 0], jnp.int32),
-                            core_mask=jnp.array([not noise]),
-                            n_clusters=0 if noise else 1, n_sweeps=0)
-
-    m = segs.n_segments
-    if m == 1:
-        # Everything inside one dense cell: one cluster, all core, 0 sweeps.
-        labels = jnp.zeros(n, jnp.int32)
-        return DBSCANResult(labels=labels, core_mask=jnp.ones(n, bool),
-                            n_clusters=1, n_sweeps=0)
-
-    tree = lbvh.build_tree(segs.codes, segs.prim_lo, segs.prim_hi)
-
-    if min_pts == 2:
-        # Paper §3.2: preprocessing is skipped — any ε-pair is core-core.
-        # A point is core iff it has at least one other point within eps,
-        # which falls out of the sweep's matched-neighbor count.
-        n_idx = jnp.arange(n, dtype=jnp.int32)
-        all_mask = jnp.ones(n, bool)
-        _, cnt = traversal.minlabel_sweep(tree, segs, eps, n_idx,
-                                          gather_mask=all_mask,
-                                          query_active=all_mask)
-        core = cnt > 0
-        core = jnp.where(segs.dense_pt, True, core)
-    else:
-        core = _preprocess(tree, segs, eps, min_pts)
-
-    core_labels, sweeps = _main_phase(tree, segs, eps, core)
-
-    if star:
-        labels_sorted = jnp.where(core, core_labels, jnp.int32(INT_MAX))
-        labels_sorted = jnp.where(labels_sorted == INT_MAX, -1, labels_sorted)
-    else:
-        labels_sorted = _assign_borders(tree, segs, eps, core, core_labels)
-
-    labels, n_clusters = _finalize(labels_sorted, segs.order, n)
-    core_mask = jnp.zeros(n, bool).at[segs.order].set(core)
-    return DBSCANResult(labels=labels, core_mask=core_mask,
-                        n_clusters=n_clusters, n_sweeps=int(sweeps))
+    tree = None
+    if segs.n_segments > 1 and n > 1:
+        tree = lbvh.build_tree(segs.codes, segs.prim_lo, segs.prim_hi)
+    return cluster_from_index(segs, tree, eps, min_pts, star=star,
+                              frontier=frontier, backend=algorithm)

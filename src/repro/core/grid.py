@@ -97,7 +97,9 @@ def build_segments_densebox(points: jax.Array, eps: float, min_pts: int) -> Segm
     pads ``m`` to ``n``).
     """
     n, d = points.shape
-    if d not in (2, 3):
+    if d not in (2, 3) or eps <= 0:
+        # degenerate eps: no grid to build — singleton segments are always
+        # correct, only the dense-cell optimization is lost
         return build_segments_fdbscan(points)
     cells, dense_valid = _cell_coords(points, eps)
     codes_pt = _cell_morton(cells)

@@ -193,6 +193,31 @@ def _compute_ropes(left, right, parent, n_nodes):
     return miss
 
 
+@jax.jit
+def propagate_leaf_flags(tree: Tree, leaf_flags: jax.Array) -> jax.Array:
+    """(2n-1,) per-node OR of ``leaf_flags`` over each subtree's leaves.
+
+    Level-synchronous bottom-up sweeps like ``_fit_boxes`` (no atomics).
+    Frontier sweeps use this to mark subtrees containing changed points so
+    the traversal can prune unchanged regions (DESIGN.md §4).
+    """
+    n_int = tree.left.shape[0]
+    flags = jnp.concatenate([jnp.zeros(n_int, bool), leaf_flags])
+
+    def cond(state):
+        flags, changed = state
+        return changed
+
+    def body(state):
+        flags, _ = state
+        new_int = flags[tree.left] | flags[tree.right]
+        new = flags.at[:n_int].set(new_int)
+        return new, jnp.any(new != flags)
+
+    flags, _ = lax.while_loop(cond, body, (flags, jnp.bool_(True)))
+    return flags
+
+
 def build_tree(codes: jax.Array, prim_lo: jax.Array, prim_hi: jax.Array) -> Tree:
     """Build the LBVH over primitives sorted by ``codes``.
 

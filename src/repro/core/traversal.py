@@ -15,13 +15,23 @@ GPU -> TPU mapping:
     ``Tree.range_r`` (skip subtrees whose max primitive index is below the
     query's own), used by the edge-once extraction mode.
 
-Each loop iteration performs exactly one unit of work — either one internal
-node test or one segment-member distance — so the fused kernel is uniform
-across lanes (low divergence in the paper's sense).
+Fused single-pass engine (DESIGN.md §4):
+  * ``mode="count_minlabel"`` computes the neighbor count *and* the
+    min-neighbor-label candidate in one walk, collapsing core-point
+    preprocessing and the first main-phase sweep into a single traversal
+    (the paper's phase-fusion claim made real).
+  * Each ``while_loop`` trip executes ``unroll`` work units (box tests or
+    member distances) instead of one, amortizing the loop-carried overhead
+    that otherwise dominates a one-unit-per-trip masked loop. Sub-steps are
+    dead-guarded so lanes freeze exactly where the one-unit engine would.
+  * Queries are addressed by an explicit ``query_ids`` vector, so frontier
+    sweeps can traverse a *compacted* active subset (ECL-CC-style active-set
+    restriction) instead of masking inert full-width lanes.
 """
 from __future__ import annotations
 
 from functools import partial
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -32,116 +42,227 @@ from .grid import Segments
 
 INT_MAX = jnp.iinfo(jnp.int32).max
 
+# Work units per while_loop trip. On lockstep accelerators (TPU/GPU) 4
+# amortizes the loop-carried overhead (cond evaluation + state select per
+# trip) without inflating tail waste: a lane overshoots by at most
+# unroll-1 dead-guarded sub-steps. On CPU the while_loop is cheap and the
+# masked sub-steps are pure overhead, so the default stays 1 there.
+DEFAULT_UNROLL = 4 if jax.default_backend() in ("tpu", "gpu") else 1
+
+MODES = ("count", "minlabel", "count_minlabel")
+
+
+class Trace(NamedTuple):
+    """Per-query traversal outputs (all shaped like ``query_ids``).
+
+    acc:   mode accumulator — the saturated neighbor count (incl. self) for
+           ``count``; the min gathered ``point_vals`` (init: the query's own
+           value) for ``minlabel``/``count_minlabel``.
+    hits:  matched neighbors *excluding* the query itself (mask-filtered in
+           the minlabel modes; partial when a pass early-exits or a dense
+           short-circuit fires).
+    evals: member distance evaluations — the paper's work metric.
+    iters: while_loop trips taken (after unrolling); the loop-overhead
+           metric that ``unroll`` amortizes.
+    """
+    acc: jax.Array
+    hits: jax.Array
+    evals: jax.Array
+    iters: jax.Array
+
 
 def _box_dist2(q, lo, hi):
     d = jnp.maximum(jnp.maximum(lo - q, q - hi), 0.0)
     return jnp.sum(d * d)
 
 
-@partial(jax.jit, static_argnames=("mode", "use_range_mask"))
+@partial(jax.jit, static_argnames=("mode", "use_range_mask", "unroll"))
 def traverse(tree: Tree, segs: Segments, eps: float,
-             query_active: jax.Array,
              point_vals: jax.Array,
              point_mask: jax.Array,
+             query_ids: jax.Array | None = None,
              cap: int | jax.Array = INT_MAX,
              mode: str = "count",
-             use_range_mask: bool = False):
-    """Run one fused traversal for every (sorted-order) point.
+             use_range_mask: bool = False,
+             node_mask: jax.Array | None = None,
+             point_mask_wide: jax.Array | None = None,
+             node_mask_wide: jax.Array | None = None,
+             wide_lanes: jax.Array | None = None,
+             unroll: int = DEFAULT_UNROLL) -> Trace:
+    """Run one fused traversal per entry of ``query_ids``.
 
-    mode="count":    acc = |N_eps(q)| saturated at ``cap`` (early exit).
+    query_ids: int32 sorted-order point indices; ``-1`` marks an inert
+        (padding) lane. ``None`` traverses every point.
+    node_mask: optional (2m-1,) per-node flag; subtrees whose flag is False
+        are pruned as if their boxes missed. Frontier sweeps pass the
+        "subtree contains a changed point" flag (DESIGN.md §4) so lanes far
+        from any change die within a few box tests.
+    point_mask_wide / node_mask_wide / wide_lanes: optional second
+        (gather-mask, node-mask) pair selected per lane by the boolean
+        ``wide_lanes`` (aligned with ``query_ids``). The split first main
+        sweep runs narrow (changed-only) lanes and wide (full-core) lanes
+        in one walk (DESIGN.md §4).
+
+    mode="count":    acc = |N_eps(q)| (incl. self) saturated at ``cap``
+                     (early exit: the lane dies once ``acc`` reaches cap).
     mode="minlabel": acc = min(point_vals[j]) over neighbors j with
-                     point_mask[j]; entering a *dense* segment stops at the
-                     first member hit (all members share one label — the
-                     paper's dense-cell short-circuit). Also returns the
-                     found-any flag packed in the count output.
-
-    Returns (acc, count) where count is the number of matched neighbors
-    (mode minlabel counts matched neighbors excluding self).
+                     point_mask[j] (init: the query's own value); entering a
+                     *dense* segment stops at the first member hit (all
+                     members share one label — the paper's dense-cell
+                     short-circuit).
+    mode="count_minlabel": the fused first pass (DESIGN.md §4) — acc as in
+                     minlabel *and* hits = neighbor count saturated at
+                     ``cap`` in the same walk. The lane itself never exits
+                     early (the gather needs the full neighborhood), but
+                     the dense short-circuit fires for dense queries and
+                     for lanes whose count has saturated — one member hit
+                     still yields a dense cell's unified label, so the
+                     gather stays exact while the count work collapses to
+                     the paper's early-exit budget.
     """
+    if mode not in MODES:
+        raise ValueError(f"unknown traversal mode {mode!r}")
     n = segs.n_points
     m = segs.n_segments
     leaf_off = m - 1
     eps2 = jnp.asarray(eps, segs.pts.dtype) ** 2
     pts = segs.pts
     root = jnp.int32(0 if m > 1 else leaf_off)  # m==1: the single leaf
+    if query_ids is None:
+        query_ids = jnp.arange(n, dtype=jnp.int32)
+    minlab = mode in ("minlabel", "count_minlabel")
+    dual = wide_lanes is not None
+    if not dual:
+        wide_lanes = jnp.zeros_like(query_ids, dtype=bool)
 
-    def one_query(q_idx, active):
+    def one_query(qid, lane_wide):
+        lane_on = qid >= 0
+        q_idx = jnp.maximum(qid, jnp.int32(0))
         q = pts[q_idx]
+        q_dense = segs.dense_pt[q_idx]
 
-        def cond(state):
-            node, ptr, acc, cnt = state
+        def live_of(node, acc):
             live = node >= 0
             if mode == "count":
                 live = live & (acc < cap)
             return live
 
-        def body(state):
-            node, ptr, acc, cnt = state
-            is_member_step = ptr >= 0
+        def step(state):
+            """One unit of work; a no-op for lanes that already finished."""
+            node, ptr, acc, hits, evals = state
+            live = live_of(node, acc)
+            node_safe = jnp.maximum(node, 0)
+            is_member = live & (ptr >= 0)
 
             # ---- member step: one distance test against sorted point ptr --
-            j = jnp.where(is_member_step, ptr, 0)
+            j = jnp.where(is_member, ptr, 0)
             diff = q - pts[j]
             d2 = jnp.sum(diff * diff)
-            hit = is_member_step & (d2 <= eps2)
-            hit_other = hit & (j != q_idx)
+            hit = is_member & (d2 <= eps2)
+            seg_id = jnp.where(node_safe >= leaf_off, node_safe - leaf_off, 0)
             if mode == "count":
-                acc_new = acc + jnp.where(hit, 1, 0)
-                # cnt tracks distance evaluations (the paper's work metric)
-                cnt_new = cnt + jnp.where(is_member_step, 1, 0)
-                stop_seg = False
+                acc_m = jnp.minimum(acc + jnp.where(hit, 1, 0), cap)
+                hits_m = hits + jnp.where(hit & (j != q_idx), 1, 0)
+                stop_seg = jnp.bool_(False)
             else:
-                ok = hit & point_mask[j]
-                acc_new = jnp.where(ok, jnp.minimum(acc, point_vals[j]), acc)
-                cnt_new = cnt + jnp.where(ok & (j != q_idx), 1, 0)
-                # dense segment: all members share one label & core status;
-                # the first hit tells us everything (paper §4.2).
-                seg_id = jnp.where(node >= leaf_off, node - leaf_off, 0)
+                if dual:
+                    ok = hit & jnp.where(lane_wide, point_mask_wide[j],
+                                         point_mask[j])
+                else:
+                    ok = hit & point_mask[j]
+                acc_m = jnp.where(ok, jnp.minimum(acc, point_vals[j]), acc)
+                hits_m = hits + jnp.where(ok & (j != q_idx), 1, 0)
+                # Dense segment: all members share one label & core status;
+                # the first hit tells us everything (paper §4.2). The fused
+                # pass additionally needs the *count*, but only up to its
+                # saturation point ``cap`` (= min_pts - 1): once a lane's
+                # count saturates — or the query is itself dense (core by
+                # construction) — the dense short-circuit re-arms, since
+                # one member hit still yields the cell's unified label.
                 stop_seg = ok & segs.dense_seg[seg_id]
-            seg_id = jnp.where(node >= leaf_off, node - leaf_off, 0)
+                if mode == "count_minlabel":
+                    hits_m = jnp.minimum(hits_m, cap)
+                    stop_seg = stop_seg & (q_dense | (hits_m >= cap))
             seg_done = (ptr + 1 >= segs.seg_end[seg_id]) | stop_seg
-            member_next_node = jnp.where(seg_done, tree.miss[node], node)
+            member_next_node = jnp.where(seg_done, tree.miss[node_safe], node)
             member_next_ptr = jnp.where(seg_done, jnp.int32(-1), ptr + 1)
 
             # ---- node step: descend / skip -------------------------------
-            is_leaf = node >= leaf_off
-            seg = jnp.where(is_leaf, node - leaf_off, 0)
-            bd2 = _box_dist2(q, tree.box_lo[node], tree.box_hi[node])
+            is_leaf = node_safe >= leaf_off
+            seg = jnp.where(is_leaf, node_safe - leaf_off, 0)
+            bd2 = _box_dist2(q, tree.box_lo[node_safe], tree.box_hi[node_safe])
             overlap = bd2 <= eps2
             if use_range_mask:
-                overlap = overlap & (tree.range_r[node] >= segs.seg_of_point[q_idx])
+                overlap = overlap & (tree.range_r[node_safe]
+                                     >= segs.seg_of_point[q_idx])
+            if node_mask is not None:
+                if dual and node_mask_wide is not None:
+                    overlap = overlap & jnp.where(lane_wide,
+                                                  node_mask_wide[node_safe],
+                                                  node_mask[node_safe])
+                else:
+                    overlap = overlap & node_mask[node_safe]
             # internal: go left on overlap else rope; leaf: enter members on
             # overlap (empty segments skip straight to the rope).
-            child = jnp.where(node < leaf_off,
-                              jnp.where(overlap, tree_left(tree, node), tree.miss[node]),
+            child = jnp.where(node_safe < leaf_off,
+                              jnp.where(overlap, tree_left(tree, node_safe),
+                                        tree.miss[node_safe]),
                               node)
-            enter_members = is_leaf & overlap & (segs.seg_start[seg] < segs.seg_end[seg])
+            enter_members = is_leaf & overlap & (segs.seg_start[seg]
+                                                 < segs.seg_end[seg])
             node_next_node = jnp.where(is_leaf,
-                                       jnp.where(enter_members, node, tree.miss[node]),
+                                       jnp.where(enter_members, node,
+                                                 tree.miss[node_safe]),
                                        child)
-            node_next_ptr = jnp.where(enter_members, segs.seg_start[seg], jnp.int32(-1))
+            node_next_ptr = jnp.where(enter_members, segs.seg_start[seg],
+                                      jnp.int32(-1))
 
-            node_out = jnp.where(is_member_step, member_next_node, node_next_node)
-            ptr_out = jnp.where(is_member_step, member_next_ptr, node_next_ptr)
-            acc_out = jnp.where(is_member_step, acc_new, acc)
-            cnt_out = jnp.where(is_member_step, cnt_new, cnt)
-            return node_out, ptr_out, acc_out, cnt_out
+            node_new = jnp.where(is_member, member_next_node, node_next_node)
+            ptr_new = jnp.where(is_member, member_next_ptr, node_next_ptr)
+            acc_new = jnp.where(is_member, acc_m, acc)
+            hits_new = jnp.where(is_member, hits_m, hits)
+            evals_new = evals + jnp.where(is_member, 1, 0)
+            # freeze finished lanes so unrolled sub-steps are no-ops
+            return (jnp.where(live, node_new, node),
+                    jnp.where(live, ptr_new, ptr),
+                    jnp.where(live, acc_new, acc),
+                    jnp.where(live, hits_new, hits),
+                    jnp.where(live, evals_new, evals))
+
+        def cond(state):
+            node, ptr, acc, hits, evals, iters = state
+            return live_of(node, acc)
+
+        def body(state):
+            node, ptr, acc, hits, evals, iters = state
+            inner = (node, ptr, acc, hits, evals)
+            for _ in range(unroll):
+                inner = step(inner)
+            return (*inner, iters + 1)
 
         if mode == "count":
             acc0 = jnp.int32(0)
         else:
-            acc0 = point_vals[q_idx] if point_vals.ndim else jnp.int32(INT_MAX)
-        start = jnp.where(active, root, jnp.int32(-1))
-        node, ptr, acc, cnt = lax.while_loop(
-            cond, body, (start, jnp.int32(-1), acc0, jnp.int32(0)))
-        return acc, cnt
+            acc0 = point_vals[q_idx]
+        start = jnp.where(lane_on, root, jnp.int32(-1))
+        node, ptr, acc, hits, evals, iters = lax.while_loop(
+            cond, body, (start, jnp.int32(-1), acc0, jnp.int32(0),
+                         jnp.int32(0), jnp.int32(0)))
+        return Trace(acc=acc, hits=hits, evals=evals, iters=iters)
 
-    qs = jnp.arange(n, dtype=jnp.int32)
-    return jax.vmap(one_query)(qs, query_active)
+    return jax.vmap(one_query)(query_ids, wide_lanes)
 
 
 def tree_left(tree: Tree, node):
     return tree.left[jnp.clip(node, 0, tree.left.shape[0] - 1)]
+
+
+def _ids_from_mask(n: int, query_active) -> jax.Array:
+    """Full-width id vector with inactive lanes marked -1 (no compaction)."""
+    ids = jnp.arange(n, dtype=jnp.int32)
+    if query_active is None:
+        return ids
+    return jnp.where(query_active, ids, jnp.int32(-1))
 
 
 def count_neighbors(tree: Tree, segs: Segments, eps: float, cap: int,
@@ -154,22 +275,46 @@ def count_neighbors_with_work(tree: Tree, segs: Segments, eps: float,
                               cap: int, query_active=None):
     """(counts, distance_evaluations) — the paper's work metric."""
     n = segs.n_points
-    if query_active is None:
-        query_active = jnp.ones(n, bool)
-    dummy = jnp.zeros((), jnp.int32)
-    return traverse(tree, segs, eps, query_active, dummy,
-                    jnp.ones(n, bool), cap=cap, mode="count")
+    dummy = jnp.zeros((n,), jnp.int32)
+    tr = traverse(tree, segs, eps, dummy, jnp.ones(n, bool),
+                  query_ids=_ids_from_mask(n, query_active),
+                  cap=cap, mode="count")
+    return tr.acc, tr.evals
 
 
 def minlabel_sweep(tree: Tree, segs: Segments, eps: float, labels: jax.Array,
                    gather_mask: jax.Array, query_active: jax.Array):
     """Per active query: min(label) over neighbors with gather_mask.
 
-    Returns (min_labels, matched_other_count). ``labels`` must already be
+    Returns (min_labels, matched_other_count); an inactive query returns
+    its own ``labels`` value (no-op hook). ``labels`` must already be
     consistent within dense segments (the caller re-unifies after updates).
     """
-    return traverse(tree, segs, eps, query_active, labels, gather_mask,
-                    mode="minlabel")
+    tr = traverse(tree, segs, eps, labels, gather_mask,
+                  query_ids=_ids_from_mask(segs.n_points, query_active),
+                  mode="minlabel")
+    # inactive lanes carry no query identity inside the engine; restore
+    # the own-value contract here where lane i <=> point i
+    acc = jnp.where(query_active, tr.acc, labels)
+    return acc, tr.hits
+
+
+def fused_count_minlabel(tree: Tree, segs: Segments, eps: float,
+                         point_vals: jax.Array, point_mask=None,
+                         query_ids=None, cap: int | jax.Array = INT_MAX
+                         ) -> Trace:
+    """The fused first pass (DESIGN.md §4): one walk, two answers.
+
+    Returns the full ``Trace``: ``acc`` is the min gathered value over all
+    masked neighbors (candidate label — the caller validates it against the
+    core mask once counts are known), ``hits`` the neighbor count excluding
+    self, exact up to saturation at ``cap`` (pass ``min_pts - 1``; dense
+    queries are core by construction and may undercount).
+    """
+    if point_mask is None:
+        point_mask = jnp.ones(segs.n_points, bool)
+    return traverse(tree, segs, eps, point_vals, point_mask,
+                    query_ids=query_ids, cap=cap, mode="count_minlabel")
 
 
 def border_gather(tree: Tree, segs: Segments, eps: float, root_labels,
@@ -177,8 +322,11 @@ def border_gather(tree: Tree, segs: Segments, eps: float, root_labels,
     """Min core-neighbor root label per non-core query; INT_MAX if none."""
     sentinel = jnp.full_like(root_labels, INT_MAX)
     vals = jnp.where(core_mask, root_labels, sentinel)
-    acc, cnt = traverse(tree, segs, eps, query_active, vals, core_mask,
-                        mode="minlabel")
-    # acc was initialized with vals[q]; for non-core queries that is INT_MAX,
-    # so acc == INT_MAX  <=>  no core neighbor (noise).
-    return acc, cnt
+    tr = traverse(tree, segs, eps, vals, core_mask,
+                  query_ids=_ids_from_mask(segs.n_points, query_active),
+                  mode="minlabel")
+    # active lanes start from vals[q] (INT_MAX for non-core queries), so
+    # acc == INT_MAX <=> no core neighbor (noise); inactive lanes return
+    # their own vals[q] to keep the lane i <=> point i contract.
+    acc = jnp.where(query_active, tr.acc, vals)
+    return acc, tr.hits

@@ -56,16 +56,13 @@ def make_dp_grad_fn(loss_fn, mesh, axis: str = "data", method: str = "int8"):
         # reduction) contributions — the compressed psum below is then the
         # one and only cross-replica reduction (VMA-aware AD would otherwise
         # insert its own full-precision psum for invariant params).
-        params = jax.tree.map(
-            lambda a: lax.pcast(a, (axis,), to="varying"), params)
+        from repro.distributed.sharding import vary
+        params = jax.tree.map(lambda a: vary(a, axis), params)
         l, g = jax.value_and_grad(loss_fn)(params, batch)
         g = compressed_psum_tree(g, axis, method)
         g = jax.tree.map(lambda x: x / ndev, g)
         return lax.pmean(l, axis), g
 
-    try:
-        sm = jax.shard_map
-    except AttributeError:
-        from jax.experimental.shard_map import shard_map as sm
-    return sm(local, mesh=mesh, in_specs=(P(), P(axis)),
-              out_specs=(P(), P()))
+    from repro.distributed.sharding import shard_map_compat
+    return shard_map_compat(local, mesh, in_specs=(P(), P(axis)),
+                            out_specs=(P(), P()))

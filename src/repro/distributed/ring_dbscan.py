@@ -31,6 +31,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import morton
 from repro.core.fdbscan import DBSCANResult, _finalize
+from repro.distributed import sharding
 
 INT_MAX = jnp.iinfo(jnp.int32).max
 
@@ -39,19 +40,14 @@ def _vary(x, axis, enabled=True):
     """Mark a loop-carry init as device-varying (shard_map VMA typing)."""
     if not enabled:
         return x
-    return jax.lax.pcast(x, (axis,), to="varying")
+    return sharding.vary(x, axis)
 
 
 def _shard_map(fn, mesh, in_specs, out_specs, check_vma=True):
     # check_vma=False is required when pl.pallas_call runs inside the body
     # (its out_shape ShapeDtypeStructs carry no varying-axes typing).
-    try:
-        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_vma=check_vma)
-    except AttributeError:  # older spelling
-        from jax.experimental.shard_map import shard_map
-        return shard_map(fn, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs, check_vma=check_vma)
+    return sharding.shard_map_compat(fn, mesh, in_specs, out_specs,
+                                     check_vma=check_vma)
 
 
 def _count_tile(q, r, eps):

@@ -46,6 +46,39 @@ _MODEL_RULES: dict[str, dict[int, int]] = {
 _MOE_FALLBACK = {"w_gate": 2, "w_up": 2, "w_down": 1}  # shard d_ff instead
 
 
+def vary(x, axis: str):
+    """Mark ``x`` device-varying under shard_map's VMA typing.
+
+    Version shim: newer jax spells this ``lax.pcast(..., to="varying")``
+    (earlier ``lax.pvary``); on jax without VMA typing it is a no-op —
+    replication is then governed by ``check_rep`` (see shard_map_compat).
+    """
+    pc = getattr(jax.lax, "pcast", None)
+    if pc is not None:
+        return pc(x, (axis,), to="varying")
+    pv = getattr(jax.lax, "pvary", None)
+    if pv is not None:
+        return pv(x, (axis,))
+    return x
+
+
+def shard_map_compat(fn, mesh, in_specs, out_specs, check_vma: bool = True):
+    """shard_map across the jax API renames.
+
+    Newer jax: top-level ``jax.shard_map`` with ``check_vma``. Older jax:
+    ``jax.experimental.shard_map.shard_map`` with ``check_rep`` — which we
+    always disable there, since without VMA typing (``vary`` above being a
+    no-op) its replication checker rejects valid loop-carried collectives.
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as sm_old
+    return sm_old(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False)
+
+
 def _axis_size(mesh: Mesh, axis: Optional[str]) -> int:
     return dict(zip(mesh.axis_names, mesh.devices.shape)).get(axis, 1)
 

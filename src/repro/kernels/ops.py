@@ -58,18 +58,22 @@ def _tiled_phases(pts, eps, min_pts: int, interpret: bool, tile: int):
     return jnp.where(labels == INT_MAX, jnp.int32(-1), labels), core
 
 
-def dbscan_tiled(points, eps: float, min_pts: int, *, interpret: bool = True,
-                 tile: int = 128):
+def dbscan_tiled(points, eps: float, min_pts: int, *, star: bool = False,
+                 interpret: bool = True, tile: int = 128):
     """Full DBSCAN on MXU distance tiles (labels compacted, noise = -1).
 
     Unlike the paper's GPU preprocessing skip for minpts == 2, the tiled
     backend keeps the uniform count pass: a saturating count over dense
     tiles costs the same as the main sweep and keeps all lanes uniform.
+    star=True implements DBSCAN* (non-core points become noise).
     """
     from repro.core.fdbscan import DBSCANResult, _finalize
     pts = jnp.asarray(points, jnp.float32)
     n = pts.shape[0]
     labels_rep, core = _tiled_phases(pts, eps, min_pts, interpret, tile)
+    if star:
+        labels_rep = jnp.where(core, labels_rep, jnp.int32(-1))
     labels, n_clusters = _finalize(labels_rep, jnp.arange(n, dtype=jnp.int32), n)
     return DBSCANResult(labels=labels, core_mask=core,
-                        n_clusters=n_clusters, n_sweeps=-1)
+                        n_clusters=n_clusters, n_sweeps=-1,
+                        n_traversals=0, backend="tiled")

@@ -36,6 +36,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# ---------------------------------------------------------------------------
+# Version shim: the pallas TPU surface renamed ``TPUMemorySpace`` ->
+# ``MemorySpace`` and ``TPUCompilerParams`` -> ``CompilerParams``. Resolve
+# whichever this jax ships so the kernels run on both sides of the rename.
+# ---------------------------------------------------------------------------
+_MEMORY_SPACE = getattr(pltpu, "MemorySpace", None) or getattr(
+    pltpu, "TPUMemorySpace")
+SMEM = _MEMORY_SPACE.SMEM
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
 INT_MAX = jnp.iinfo(jnp.int32).max
 
 # 128 matches both the MXU systolic dimension and the VPU lane count.
@@ -113,11 +124,11 @@ def pairwise_count(points_q, points_r, eps, cap: int = INT_MAX,
             pl.BlockSpec((tile_q, d), lambda i, j: (i, 0)),
             pl.BlockSpec((tile_r, d), lambda i, j: (j, 0)),
             pl.BlockSpec((1, 1), lambda i, j: (0, 0),
-                         memory_space=pltpu.MemorySpace.SMEM),
+                         memory_space=SMEM),
         ],
         out_specs=pl.BlockSpec((tile_q,), lambda i, j: (i,)),
         out_shape=jax.ShapeDtypeStruct((q.shape[0],), jnp.int32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(q, r, eps2)
@@ -146,7 +157,7 @@ def pairwise_minlabel(points_q, points_r, labels_r, mask_r, eps,
             pl.BlockSpec((tile_r,), lambda i, j: (j,)),
             pl.BlockSpec((tile_r,), lambda i, j: (j,)),
             pl.BlockSpec((1, 1), lambda i, j: (0, 0),
-                         memory_space=pltpu.MemorySpace.SMEM),
+                         memory_space=SMEM),
         ],
         out_specs=[
             pl.BlockSpec((tile_q,), lambda i, j: (i,)),
@@ -156,7 +167,7 @@ def pairwise_minlabel(points_q, points_r, labels_r, mask_r, eps,
             jax.ShapeDtypeStruct((q.shape[0],), jnp.int32),
             jax.ShapeDtypeStruct((q.shape[0],), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(q, r, lab, mask, eps2)

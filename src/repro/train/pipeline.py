@@ -43,7 +43,8 @@ def gpipe(stage_fn, mesh, axis: str = "pod"):
         me = lax.axis_index(axis)
         n_micro = mb.shape[0]
         ticks = n_micro + n_stages - 1
-        vary = lambda x: jax.lax.pcast(x, (axis,), to="varying")
+        from repro.distributed.sharding import vary as _vary
+        vary = lambda x: _vary(x, axis)
         buf = vary(jnp.zeros(mb.shape[1:], mb.dtype))  # traveling activation
         outs = vary(jnp.zeros_like(mb))
 
@@ -69,8 +70,6 @@ def gpipe(stage_fn, mesh, axis: str = "pod"):
         outs = lax.psum(jnp.where(me == n_stages - 1, outs, 0.0), axis)
         return outs
 
-    try:
-        sm = jax.shard_map
-    except AttributeError:
-        from jax.experimental.shard_map import shard_map as sm
-    return sm(kernel, mesh=mesh, in_specs=(P(axis), P()), out_specs=P())
+    from repro.distributed.sharding import shard_map_compat
+    return shard_map_compat(kernel, mesh, in_specs=(P(axis), P()),
+                            out_specs=P())

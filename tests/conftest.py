@@ -1,5 +1,32 @@
+"""Shared fixtures + the ``fast`` marker.
+
+Tier-1 iteration: ``pytest -m fast`` (or ``make test-fast``) runs the quick
+algorithmic subset — core DBSCAN correctness, the traversal engine, the
+dispatcher, morton/LBVH — in seconds instead of the ~6-minute full suite.
+Modules listed in ``FAST_MODULES`` are auto-marked; individual tests can
+also opt in with ``@pytest.mark.fast``.
+"""
 import numpy as np
 import pytest
+
+FAST_MODULES = {
+    "test_morton",
+    "test_lbvh",
+    "test_dbscan",
+    "test_traversal_fused",
+    "test_dispatch",
+}
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "fast: quick tier-1 subset (run with `pytest -m fast`)")
+
+
+def pytest_collection_modifyitems(config, items):
+    for item in items:
+        if item.module.__name__ in FAST_MODULES:
+            item.add_marker(pytest.mark.fast)
 
 
 def separated_points(n: int, d: int, eps: float, seed: int,

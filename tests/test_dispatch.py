@@ -1,0 +1,98 @@
+"""The unified auto-dispatching backend (DESIGN.md §5)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import dbscan, dbscan_bruteforce_np, dispatch
+from repro.core.validate import check_dbscan, same_partition
+from repro.data import pointclouds
+
+from conftest import separated_points
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    dispatch.clear_cache()
+    yield
+    dispatch.clear_cache()
+
+
+def test_auto_small_n_dispatches_tiled():
+    pts = separated_points(300, 2, eps=0.1, seed=0)
+    p = dispatch.plan(pts, 0.1, 5)
+    assert p.backend == "tiled"
+    res = dbscan(pts, 0.1, 5, algorithm="auto")
+    assert res.backend == "tiled"
+    ref_labels, ref_core = dbscan_bruteforce_np(pts, 0.1, 5)
+    assert (np.asarray(res.core_mask) == ref_core).all()
+    assert same_partition(np.asarray(res.labels)[ref_core],
+                          ref_labels[ref_core])
+
+
+def test_auto_dense_2d_dispatches_densebox():
+    pts = pointclouds.trajectories_2d(3000)
+    p = dispatch.plan(pts, 0.02, 5)
+    assert p.backend == "fdbscan-densebox"
+    assert p.stats["dense_fraction"] >= dispatch.DENSE_FRACTION_MIN
+    res = dispatch.dbscan(pts, 0.02, 5, query_plan=p)
+    assert res.backend == "fdbscan-densebox"
+    assert res.n_clusters >= 1
+
+
+def test_auto_sparse_3d_dispatches_plain_tree():
+    pts = pointclouds.halos_3d(4000, seed=7)
+    p = dispatch.plan(pts, 0.02, 100)
+    assert p.backend == "fdbscan"
+    assert p.stats["dense_fraction"] < dispatch.DENSE_FRACTION_MIN
+
+
+def test_fdbscan_plan_reused_across_eps_and_minpts():
+    # The plain-tree index is eps-independent: a parameter sweep must hit
+    # the same cached Segments/Tree objects (identity, not just equality).
+    pts = separated_points(1500, 2, eps=0.05, seed=3)
+    p1 = dispatch.plan(pts, 0.03, 5, algorithm="fdbscan")
+    p2 = dispatch.plan(pts, 0.09, 20, algorithm="fdbscan")
+    assert p1.segs is p2.segs and p1.tree is p2.tree
+    r1 = dispatch.dbscan(pts, 0.03, 5, query_plan=p1)
+    r2 = dispatch.dbscan(pts, 0.09, 20, query_plan=p2)
+    for res, eps, mp in ((r1, 0.03, 5), (r2, 0.09, 20)):
+        ref_labels, ref_core = dbscan_bruteforce_np(pts, eps, mp)
+        assert (np.asarray(res.core_mask) == ref_core).all()
+        assert same_partition(np.asarray(res.labels)[ref_core],
+                              ref_labels[ref_core])
+
+
+def test_plan_cache_hit_returns_same_plan():
+    pts = separated_points(200, 2, eps=0.1, seed=5)
+    assert dispatch.plan(pts, 0.1, 5) is dispatch.plan(pts, 0.1, 5)
+
+
+@pytest.mark.parametrize("algo", ["fdbscan", "fdbscan-densebox", "tiled",
+                                  "auto"])
+def test_all_backends_agree_with_oracle(algo):
+    pts = separated_points(280, 2, eps=0.08, seed=8)
+    res = dbscan(pts, 0.08, 6, algorithm=algo)
+    ref_labels, ref_core = dbscan_bruteforce_np(pts, 0.08, 6)
+    assert (np.asarray(res.core_mask) == ref_core).all()
+    assert same_partition(np.asarray(res.labels)[ref_core],
+                          ref_labels[ref_core])
+    check_dbscan(pts, 0.08, 6, res.labels, res.core_mask)
+
+
+def test_tiled_star_no_borders():
+    pts = separated_points(220, 2, eps=0.09, seed=2)
+    res = dbscan(pts, 0.09, 8, algorithm="tiled", star=True)
+    labs = np.asarray(res.labels)
+    core = np.asarray(res.core_mask)
+    assert (labs[~core] == -1).all()
+    full = dbscan(pts, 0.09, 8, algorithm="tiled")
+    assert same_partition(labs[core], np.asarray(full.labels)[core])
+
+
+def test_unknown_algorithm_raises():
+    with pytest.raises(ValueError):
+        dbscan(separated_points(50, 2, eps=0.1, seed=0), 0.1, 5,
+               algorithm="nope")
+    with pytest.raises(ValueError):
+        dispatch.plan(separated_points(50, 2, eps=0.1, seed=0), 0.1, 5,
+                      algorithm="nope")

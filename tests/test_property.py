@@ -5,6 +5,11 @@ values, so d2 comparisons are exact in float32 — every backend must agree
 *exactly* with the brute-force oracle, including at cluster merges.
 """
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis "
+                           "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import dbscan, dbscan_bruteforce_np
