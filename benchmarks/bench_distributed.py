@@ -1,0 +1,132 @@
+"""Distributed DBSCAN: dense systolic ring vs sharded tree + eps-halo.
+
+The quantity under test is the ISSUE-2 claim: per-shard BVH traversal with
+eps-halo exchange does the clustering with a small fraction of the ring
+pass's pairwise distance evaluations (>= 10x fewer at n=16384), at equal
+labels. We report exact distance-evaluation counts (the paper's work
+metric — measured by the traversal engine for the tree path, analytic
+``(2 + sweeps) * n_pad^2`` for the dense ring, which evaluates every pair
+in every phase rotation) plus wall clock for both, and emit
+``BENCH_distributed.json``.
+
+Multi-device CPU execution needs ``XLA_FLAGS`` set before jax import, so
+``run()`` re-executes this module in a subprocess with 8 forced host
+devices; ``python -m benchmarks.bench_distributed`` does the same.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+# Above this the dense ring's wall clock is minutes on CPU; its eval count
+# stays analytic either way, so larger sizes skip the ring timing only.
+RING_MAX_N = 16384
+N_DEVICES = 8
+EPS, MINPTS = 0.02, 10
+
+
+def _inner(sizes, json_out):
+    import jax
+    import numpy as np
+    from repro.data import pointclouds
+    from repro.distributed.ring_dbscan import ring_dbscan, tree_dbscan_sharded
+    from repro.core.validate import same_partition
+    from .common import emit
+
+    ndev = len(jax.devices())
+    records = {}
+    for n in sizes:
+        pts = pointclouds.taxi_2d(n)
+        n_pad = ((n + ndev - 1) // ndev) * ndev
+
+        t0 = time.perf_counter()
+        tree_res, st = tree_dbscan_sharded(pts, EPS, MINPTS, with_stats=True)
+        tree_cold = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        tree_res, st = tree_dbscan_sharded(pts, EPS, MINPTS, with_stats=True)
+        tree_warm = time.perf_counter() - t0
+
+        rec = {
+            "n": n, "n_pad": n_pad, "ndev": ndev,
+            "eps": EPS, "minpts": MINPTS,
+            "tree_wall_s": tree_warm, "tree_wall_cold_s": tree_cold,
+            "tree_distance_evals": st["distance_evals"],
+            "tree_sweeps": st["n_sweeps"],
+            "n_clusters": tree_res.n_clusters,
+        }
+        if n <= RING_MAX_N:
+            t0 = time.perf_counter()
+            ring_res = ring_dbscan(pts, EPS, MINPTS)
+            rec["ring_wall_cold_s"] = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            ring_res = ring_dbscan(pts, EPS, MINPTS)  # warm, like the tree
+            rec["ring_wall_s"] = time.perf_counter() - t0
+            rec["ring_sweeps"] = ring_res.n_sweeps
+            assert same_partition(np.asarray(ring_res.labels),
+                                  np.asarray(tree_res.labels))
+            ring_evals = (2 + ring_res.n_sweeps) * n_pad * n_pad
+        else:
+            # analytic only: same sweep count as the tree path's fixpoint
+            # (both run min-label sweeps to convergence over one protocol)
+            rec["ring_wall_s"] = None
+            rec["ring_sweeps"] = st["n_sweeps"]
+            ring_evals = (2 + st["n_sweeps"]) * n_pad * n_pad
+        rec["ring_distance_evals"] = ring_evals
+        rec["evals_ratio_ring_over_tree"] = (
+            ring_evals / max(st["distance_evals"], 1))
+        records[f"n{n}"] = rec
+        emit(f"distributed/n{n}/tree-sharded", rec["tree_wall_s"] * 1e6,
+             f"evals={st['distance_evals']};sweeps={st['n_sweeps']}")
+        emit(f"distributed/n{n}/ring-dense",
+             (rec["ring_wall_s"] or 0.0) * 1e6,
+             f"evals={ring_evals};ratio="
+             f"{rec['evals_ratio_ring_over_tree']:.1f}x")
+    if json_out:
+        with open(json_out, "w") as f:
+            json.dump(records, f, indent=2)
+        print(f"# wrote {json_out}")
+    return records
+
+
+def run(sizes=(4096, 16384), quick: bool = False,
+        json_out: str = "BENCH_distributed.json"):
+    """Spawn the measurement under 8 forced host devices and relay output."""
+    if quick:
+        sizes = tuple(n for n in sizes if n <= 16384)
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count="
+                         f"{N_DEVICES}",
+               PYTHONPATH=os.path.join(repo, "src")
+               + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    cmd = [sys.executable, "-m", "benchmarks.bench_distributed", "--inner",
+           "--sizes", ",".join(str(n) for n in sizes)]
+    if json_out:
+        cmd += ["--json", json_out]
+    r = subprocess.run(cmd, env=env, cwd=repo, text=True,
+                       capture_output=True)
+    sys.stdout.write(r.stdout)
+    if r.returncode != 0:
+        sys.stderr.write(r.stderr)
+        raise RuntimeError("bench_distributed inner run failed")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--inner", action="store_true")
+    ap.add_argument("--sizes", default="4096,16384")
+    ap.add_argument("--json", default="BENCH_distributed.json")
+    args = ap.parse_args()
+    sizes = tuple(int(s) for s in args.sizes.split(","))
+    if args.inner:
+        _inner(sizes, args.json)
+    else:
+        run(sizes, json_out=args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -48,7 +48,7 @@ def table(recs):
             f"| {ro.get('t_memory_s', 0):.4f} "
             f"| {ro.get('t_collective_s', 0):.4f} "
             f"| {ro.get('dominant', '-')}"
-            f" | {ro.get('useful_flops_ratio') and f'{ro['useful_flops_ratio']:.2f}' or '-'}"
+            f" | {ro.get('useful_flops_ratio') and format(ro['useful_flops_ratio'], '.2f') or '-'}"
             f" | {fmt_bytes(total)} | {mp} |")
     return "\n".join(rows)
 

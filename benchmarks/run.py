@@ -17,13 +17,13 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: minpts,eps,scaling,cosmo,memory,"
-                         "phase,kernels,dist_evals")
+                         "phase,kernels,dist_evals,distributed")
     args = ap.parse_args()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
 
-    from . import (bench_cosmo, bench_distance_evals, bench_eps,
-                   bench_kernels, bench_memory, bench_minpts,
+    from . import (bench_cosmo, bench_distance_evals, bench_distributed,
+                   bench_eps, bench_kernels, bench_memory, bench_minpts,
                    bench_phase_cost, bench_scaling)
     suites = {
         "minpts": lambda: bench_minpts.run(n=16384 if args.full else 2048,
@@ -45,6 +45,12 @@ def main() -> None:
         "kernels": lambda: bench_kernels.run(quick=quick),
         "dist_evals": lambda: bench_distance_evals.run(
             n=16384 if args.full else 2048, quick=quick),
+        # ring vs sharded tree (8 virtual devices, subprocess); 16384 stays
+        # in quick mode — it is the acceptance size for the >=10x evals
+        # claim recorded in BENCH_distributed.json
+        "distributed": lambda: bench_distributed.run(
+            sizes=(4096, 16384, 65536) if args.full else (4096, 16384),
+            quick=quick),
     }
     print("name,us_per_call,derived")
     t0 = time.time()

@@ -17,16 +17,27 @@ import jax
 import jax.numpy as jnp
 
 from .fdbscan import DBSCANResult
+from .validate import neighbor_counts
 
 
 def dbscan_bruteforce_np(points, eps: float, min_pts: int):
-    """Oracle DBSCAN (labels, core_mask); labels compacted, noise = -1."""
+    """Oracle DBSCAN (labels, core_mask); labels compacted, noise = -1.
+
+    Core determination shares the blocked tiles of ``validate`` (O(n*block)
+    memory, float64-exact); the BFS recomputes one adjacency row per pop —
+    the oracle stays obviously correct yet never holds the n x n matrix.
+    """
     pts = np.asarray(points, dtype=np.float64)
     n = pts.shape[0]
-    d2 = ((pts[:, None, :] - pts[None, :, :]) ** 2).sum(-1)
-    adj = d2 <= eps * eps
-    counts = adj.sum(1)
-    core = counts >= min_pts
+    e2 = eps * eps
+    core = neighbor_counts(pts, eps) >= min_pts
+    sq = (pts * pts).sum(-1)
+
+    def row_adj(x):
+        # same Gram form as validate.adjacency_blocks: one oracle, one
+        # notion of adjacency
+        return sq + sq[x] - 2.0 * (pts @ pts[x]) <= e2
+
     labels = np.full(n, -1, np.int64)
     cid = 0
     for s in range(n):
@@ -38,7 +49,7 @@ def dbscan_bruteforce_np(points, eps: float, min_pts: int):
             x = stack.pop()
             if not core[x]:
                 continue  # border: absorbed but does not expand
-            for y in np.nonzero(adj[x])[0]:
+            for y in np.nonzero(row_adj(x))[0]:
                 if labels[y] == -1:
                     labels[y] = cid
                     if core[y]:

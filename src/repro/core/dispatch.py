@@ -1,7 +1,7 @@
 """Unified backend dispatch for DBSCAN (DESIGN.md §5).
 
 One entry point — ``dbscan(points, eps, min_pts, algorithm="auto")`` —
-serving three backends:
+serving four backends:
 
   * ``fdbscan``          — singleton-segment BVH (Morton order); the index
                            is eps-independent, so it is cached per point set
@@ -14,11 +14,20 @@ serving three backends:
   * ``tiled``            — the MXU Pallas tile backend (kernels/ops.py):
                            n^2 streamed distance tiles beat a divergent
                            tree walk when the point count is small.
+  * ``sharded``          — the multi-device tree path (DESIGN.md §6):
+                           shard-local LBVH traversal + eps-halo exchange
+                           (distributed/ring_dbscan.tree_dbscan_sharded).
+                           Auto-selected whenever a mesh is passed; its
+                           per-shard index is built inside the collective
+                           program, so the plan itself carries no index.
 
 ``plan()`` performs the (cacheable) decision + index build; ``dbscan()``
 executes a plan. Plans are memoized in a small LRU keyed by point-set
 content hash + parameters, with the eps-independent fdbscan index shared
-across all eps/min_pts entries of the same point set.
+across all eps/min_pts entries of the same point set. Sharded plans are
+index-free and mesh-determined, so they skip the content hash and the LRU
+entirely (the compiled collective programs are cached per mesh/shape in
+``repro.distributed.ring_dbscan._sharded_programs``).
 """
 from __future__ import annotations
 
@@ -42,15 +51,26 @@ DENSE_FRACTION_MIN = 0.05
 _CACHE_MAX = 32
 _plan_cache: "OrderedDict[Any, Any]" = OrderedDict()
 
-ALGORITHMS = ("auto", "fdbscan", "fdbscan-densebox", "tiled")
+ALGORITHMS = ("auto", "fdbscan", "fdbscan-densebox", "tiled", "sharded")
 
 
 class Plan(NamedTuple):
     """A resolved backend choice plus the (reusable) index that drove it."""
-    backend: str                      # "fdbscan" | "fdbscan-densebox" | "tiled"
-    segs: grid.Segments | None        # None for the tiled backend
-    tree: lbvh.Tree | None            # None for tiled or single-segment
+    backend: str                      # "fdbscan" | "fdbscan-densebox" |
+                                      # "tiled" | "sharded"
+    segs: grid.Segments | None        # None for the tiled/sharded backends
+    tree: lbvh.Tree | None            # None for tiled/sharded/single-segment
     stats: dict                       # occupancy/size stats behind the choice
+
+
+def _mesh_ndev(mesh, axis: str) -> int:
+    """Devices along ``axis`` (1 when the mesh lacks it — a mesh without a
+    data axis never routes auto dispatch to the sharded backend)."""
+    if mesh is None:
+        import jax
+        return len(jax.devices())
+    from repro.distributed.sharding import _axis_size
+    return _axis_size(mesh, axis)
 
 
 def clear_cache() -> None:
@@ -102,12 +122,15 @@ def _fdbscan_plan(points, pkey: str, stats: dict) -> Plan:
 
 
 def plan(points, eps: float, min_pts: int,
-         algorithm: str = "auto") -> Plan:
+         algorithm: str = "auto", mesh=None, axis: str = "data") -> Plan:
     """Choose a backend and build (or fetch) its index.
 
     The densebox grid build is reused as the density probe: its dense-point
     fraction decides densebox-vs-plain, and on a densebox decision the very
-    same segments become the index (no duplicated work).
+    same segments become the index (no duplicated work). An active ``mesh``
+    routes to the sharded multi-device tree path (whose per-shard index is
+    built inside the collective program — nothing to cache here beyond the
+    decision).
     """
     if algorithm not in ALGORITHMS:
         raise ValueError(f"unknown algorithm {algorithm!r}")
@@ -116,6 +139,20 @@ def plan(points, eps: float, min_pts: int,
                          " (a negative eps would be squared away silently)")
     points = jnp.asarray(points)
     n, d = points.shape
+    if mesh is not None and axis not in mesh.axis_names:
+        if algorithm == "sharded":
+            raise ValueError(f"mesh has no axis {axis!r}: {mesh.axis_names}")
+        mesh = None  # a mesh without the data axis cannot shard points
+    if (algorithm == "sharded"
+            or (algorithm == "auto" and mesh is not None
+                and _mesh_ndev(mesh, axis) > 1)):
+        # sharded plans carry no index and depend only on the mesh, so no
+        # point-content hash (an O(n) host transfer) and no cache needed
+        return Plan("sharded", None, None,
+                    {"n": n, "d": d, "ndev": _mesh_ndev(mesh, axis),
+                     "mesh": mesh, "axis": axis,
+                     "reason": ("explicit" if algorithm == "sharded"
+                                else "mesh active: shard-local trees")})
     pkey = _points_key(points)
     key = (pkey, float(eps), int(min_pts), algorithm)
     hit = _cache_get(key)
@@ -147,18 +184,29 @@ def plan(points, eps: float, min_pts: int,
 
 
 def dbscan(points, eps: float, min_pts: int, *, algorithm: str = "auto",
-           star: bool = False, frontier: bool = True,
+           star: bool = False, frontier: bool = True, mesh=None,
+           axis: str = "data",
            query_plan: Plan | None = None) -> fdbscan.DBSCANResult:
     """DBSCAN with automatic backend selection (the unified entry point).
 
     ``query_plan`` short-circuits planning entirely — pass the result of a
     previous :func:`plan` call *for the same point set* to amortize the
     index build across runs (the plan's index, not ``points``, is what a
-    tree backend clusters).
+    tree backend clusters). ``mesh`` (a jax Mesh with a data axis) routes
+    auto dispatch to the sharded multi-device tree path.
     """
     points = jnp.asarray(points)
     p = query_plan if query_plan is not None else plan(points, eps, min_pts,
-                                                       algorithm)
+                                                       algorithm, mesh=mesh,
+                                                       axis=axis)
+    if p.backend == "sharded":
+        from repro.distributed.ring_dbscan import tree_dbscan_sharded
+        if star:
+            raise NotImplementedError("sharded backend has no DBSCAN* mode")
+        res = tree_dbscan_sharded(points, eps, min_pts,
+                                  mesh=p.stats.get("mesh", mesh),
+                                  axis=p.stats.get("axis", axis))
+        return res._replace(backend="sharded")
     if p.backend == "tiled":
         import jax
         from repro.kernels import ops

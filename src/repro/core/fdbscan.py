@@ -393,20 +393,23 @@ def cluster_from_index(segs: grid.Segments, tree, eps: float, min_pts: int,
 
 
 def dbscan(points, eps: float, min_pts: int, *, algorithm: str = "auto",
-           star: bool = False, frontier: bool = True) -> DBSCANResult:
+           star: bool = False, frontier: bool = True,
+           mesh=None) -> DBSCANResult:
     """DBSCAN via the paper's tree-based algorithms.
 
     algorithm: "fdbscan" | "fdbscan-densebox" build the named tree index
-    directly; "auto" and "tiled" go through the unified dispatcher
-    (repro.core.dispatch), which probes the eps-grid occupancy and may pick
-    the MXU tile backend. star=True implements DBSCAN* (no border points;
-    non-core -> noise). frontier=False forces full (unrestricted) sweeps.
+    directly; "auto", "tiled" and "sharded" go through the unified
+    dispatcher (repro.core.dispatch), which probes the eps-grid occupancy
+    and may pick the MXU tile backend or (when a ``mesh`` is active) the
+    multi-device sharded tree path. star=True implements DBSCAN* (no border
+    points; non-core -> noise). frontier=False forces full (unrestricted)
+    sweeps.
     """
     points = jnp.asarray(points)
-    if algorithm in ("auto", "tiled"):
+    if algorithm in ("auto", "tiled", "sharded"):
         from . import dispatch
         return dispatch.dbscan(points, eps, min_pts, algorithm=algorithm,
-                               star=star, frontier=frontier)
+                               star=star, frontier=frontier, mesh=mesh)
     if eps < 0:
         raise ValueError(f"eps must be non-negative; got {eps}"
                          " (a negative eps would be squared away silently)")

@@ -52,15 +52,27 @@ class Segments(NamedTuple):
         return self.seg_start.shape[0]
 
 
+def singleton_segments(pts_sorted: jax.Array, order: jax.Array,
+                       codes_sorted: jax.Array) -> Segments:
+    """Singleton-segment index over *already sorted* points.
+
+    Fully traceable (static shapes, no host round-trips), so it can run
+    inside ``shard_map``/``jit`` — the sharded distributed path builds its
+    per-shard index with this under one jitted collective program.
+    """
+    n = pts_sorted.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    false = jnp.zeros(n, bool)
+    return Segments(pts=pts_sorted, order=order, seg_start=idx,
+                    seg_end=idx + 1, seg_of_point=idx, dense_seg=false,
+                    dense_pt=false, codes=codes_sorted, prim_lo=pts_sorted,
+                    prim_hi=pts_sorted)
+
+
 def build_segments_fdbscan(points: jax.Array) -> Segments:
     """Singleton segments in Morton order (plain FDBSCAN index)."""
     pts, order, codes = morton.morton_sort(points)
-    n = pts.shape[0]
-    idx = jnp.arange(n, dtype=jnp.int32)
-    false = jnp.zeros(n, bool)
-    return Segments(pts=pts, order=order, seg_start=idx, seg_end=idx + 1,
-                    seg_of_point=idx, dense_seg=false, dense_pt=false,
-                    codes=codes, prim_lo=pts, prim_hi=pts)
+    return singleton_segments(pts, order, codes)
 
 
 def _cell_coords(points: jax.Array, eps: float) -> tuple[jax.Array, bool]:

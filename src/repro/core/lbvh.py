@@ -37,6 +37,17 @@ from jax import lax
 _SEARCH_ITERS = 31
 
 
+def box_dist2(q, lo, hi):
+    """Squared distance from point ``q`` to the AABB ``[lo, hi]`` (0 inside).
+
+    The traversal's node test and the distributed path's eps-halo slab test
+    (is this query within eps of a shard's resident AABB?) are the same
+    geometric primitive, so it lives here with the boxes.
+    """
+    d = jnp.maximum(jnp.maximum(lo - q, q - hi), 0.0)
+    return jnp.sum(d * d, axis=-1)
+
+
 class Tree(NamedTuple):
     """Flat LBVH arrays. Internal nodes first, then leaves.
 

@@ -51,14 +51,21 @@ def quantize(points: jax.Array, n_bits: int, lo: jax.Array | None = None,
     return q.astype(jnp.uint32)
 
 
-def morton_encode(points: jax.Array) -> jax.Array:
-    """Morton codes (uint32) for (n, 2) or (n, 3) float points."""
+def morton_encode(points: jax.Array, lo: jax.Array | None = None,
+                  hi: jax.Array | None = None) -> jax.Array:
+    """Morton codes (uint32) for (n, 2) or (n, 3) float points.
+
+    ``lo``/``hi`` override the quantization bounds (default: the data's own
+    extent). The sharded distributed path passes the bounds of the *valid*
+    resident points so padding sentinels cannot stretch the grid; sentinel
+    coordinates simply clip to the top cell.
+    """
     d = points.shape[-1]
     if d == 2:
-        q = quantize(points, BITS_2D)
+        q = quantize(points, BITS_2D, lo, hi)
         return (_expand_bits_2d(q[:, 0]) << 1) | _expand_bits_2d(q[:, 1])
     if d == 3:
-        q = quantize(points, BITS_3D)
+        q = quantize(points, BITS_3D, lo, hi)
         return ((_expand_bits_3d(q[:, 0]) << 2)
                 | (_expand_bits_3d(q[:, 1]) << 1)
                 | _expand_bits_3d(q[:, 2]))

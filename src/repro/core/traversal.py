@@ -27,6 +27,13 @@ Fused single-pass engine (DESIGN.md §4):
   * Queries are addressed by an explicit ``query_ids`` vector, so frontier
     sweeps can traverse a *compacted* active subset (ECL-CC-style active-set
     restriction) instead of masking inert full-width lanes.
+
+External queries (DESIGN.md §6): ``query_pts`` decouples the query set from
+the tree's primitives — a lane traverses for an arbitrary point that is not
+(necessarily) resident in the index. The sharded distributed path runs
+eps-halo points received from other shards as external queries against the
+local tree; self-exclusion and the dense/query-rank shortcuts (which assume
+lane i <=> resident point i) are disabled for such lanes.
 """
 from __future__ import annotations
 
@@ -37,7 +44,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from .lbvh import Tree
+from .lbvh import Tree, box_dist2 as _box_dist2
 from .grid import Segments
 
 INT_MAX = jnp.iinfo(jnp.int32).max
@@ -71,13 +78,7 @@ class Trace(NamedTuple):
     iters: jax.Array
 
 
-def _box_dist2(q, lo, hi):
-    d = jnp.maximum(jnp.maximum(lo - q, q - hi), 0.0)
-    return jnp.sum(d * d)
-
-
-@partial(jax.jit, static_argnames=("mode", "use_range_mask", "unroll"))
-def traverse(tree: Tree, segs: Segments, eps: float,
+def traverse_impl(tree: Tree, segs: Segments, eps: float,
              point_vals: jax.Array,
              point_mask: jax.Array,
              query_ids: jax.Array | None = None,
@@ -88,11 +89,23 @@ def traverse(tree: Tree, segs: Segments, eps: float,
              point_mask_wide: jax.Array | None = None,
              node_mask_wide: jax.Array | None = None,
              wide_lanes: jax.Array | None = None,
+             query_pts: jax.Array | None = None,
+             query_init: jax.Array | None = None,
              unroll: int = DEFAULT_UNROLL) -> Trace:
     """Run one fused traversal per entry of ``query_ids``.
 
     query_ids: int32 sorted-order point indices; ``-1`` marks an inert
         (padding) lane. ``None`` traverses every point.
+    query_pts: optional (k, d) *external* query coordinates (DESIGN.md §6).
+        When given, lane i traverses for ``query_pts[i]`` instead of a tree
+        point; ``query_ids`` then only carries the inert-lane marker (-1
+        inert, anything else active). External lanes have no resident
+        identity, so self-exclusion is off (every masked hit counts),
+        the dense-query shortcut is off, and ``use_range_mask`` is
+        rejected. The minlabel accumulator starts from ``query_init``
+        (per lane; INT_MAX when omitted) rather than the lane's own
+        ``point_vals`` entry — a traveling query chains its running min
+        across successive shard visits this way.
     node_mask: optional (2m-1,) per-node flag; subtrees whose flag is False
         are pruned as if their boxes missed. Frontier sweeps pass the
         "subtree contains a changed point" flag (DESIGN.md §4) so lanes far
@@ -128,18 +141,39 @@ def traverse(tree: Tree, segs: Segments, eps: float,
     eps2 = jnp.asarray(eps, segs.pts.dtype) ** 2
     pts = segs.pts
     root = jnp.int32(0 if m > 1 else leaf_off)  # m==1: the single leaf
-    if query_ids is None:
-        query_ids = jnp.arange(n, dtype=jnp.int32)
+    external = query_pts is not None
+    if external:
+        if use_range_mask:
+            raise ValueError("use_range_mask needs tree-resident queries")
+        if query_ids is None:
+            query_ids = jnp.zeros(query_pts.shape[0], jnp.int32)
+        q_arr = query_pts
+        self_arr = jnp.full(query_ids.shape, -1, jnp.int32)   # never matches
+        dense_arr = jnp.zeros(query_ids.shape, bool)
+        rank_arr = jnp.zeros(query_ids.shape, jnp.int32)
+        if mode == "count":
+            acc0_arr = jnp.zeros(query_ids.shape, jnp.int32)
+        elif query_init is not None:
+            acc0_arr = query_init
+        else:
+            acc0_arr = jnp.full(query_ids.shape, INT_MAX, jnp.int32)
+    else:
+        if query_ids is None:
+            query_ids = jnp.arange(n, dtype=jnp.int32)
+        safe = jnp.maximum(query_ids, jnp.int32(0))
+        q_arr = pts[safe]
+        self_arr = query_ids
+        dense_arr = segs.dense_pt[safe]
+        rank_arr = segs.seg_of_point[safe]
+        acc0_arr = (jnp.zeros(query_ids.shape, jnp.int32)
+                    if mode == "count" else point_vals[safe])
     minlab = mode in ("minlabel", "count_minlabel")
     dual = wide_lanes is not None
     if not dual:
         wide_lanes = jnp.zeros_like(query_ids, dtype=bool)
 
-    def one_query(qid, lane_wide):
+    def one_query(qid, lane_wide, q, q_self, q_dense, q_rank, acc0):
         lane_on = qid >= 0
-        q_idx = jnp.maximum(qid, jnp.int32(0))
-        q = pts[q_idx]
-        q_dense = segs.dense_pt[q_idx]
 
         def live_of(node, acc):
             live = node >= 0
@@ -162,7 +196,7 @@ def traverse(tree: Tree, segs: Segments, eps: float,
             seg_id = jnp.where(node_safe >= leaf_off, node_safe - leaf_off, 0)
             if mode == "count":
                 acc_m = jnp.minimum(acc + jnp.where(hit, 1, 0), cap)
-                hits_m = hits + jnp.where(hit & (j != q_idx), 1, 0)
+                hits_m = hits + jnp.where(hit & (j != q_self), 1, 0)
                 stop_seg = jnp.bool_(False)
             else:
                 if dual:
@@ -171,7 +205,7 @@ def traverse(tree: Tree, segs: Segments, eps: float,
                 else:
                     ok = hit & point_mask[j]
                 acc_m = jnp.where(ok, jnp.minimum(acc, point_vals[j]), acc)
-                hits_m = hits + jnp.where(ok & (j != q_idx), 1, 0)
+                hits_m = hits + jnp.where(ok & (j != q_self), 1, 0)
                 # Dense segment: all members share one label & core status;
                 # the first hit tells us everything (paper §4.2). The fused
                 # pass additionally needs the *count*, but only up to its
@@ -193,8 +227,7 @@ def traverse(tree: Tree, segs: Segments, eps: float,
             bd2 = _box_dist2(q, tree.box_lo[node_safe], tree.box_hi[node_safe])
             overlap = bd2 <= eps2
             if use_range_mask:
-                overlap = overlap & (tree.range_r[node_safe]
-                                     >= segs.seg_of_point[q_idx])
+                overlap = overlap & (tree.range_r[node_safe] >= q_rank)
             if node_mask is not None:
                 if dual and node_mask_wide is not None:
                     overlap = overlap & jnp.where(lane_wide,
@@ -240,17 +273,23 @@ def traverse(tree: Tree, segs: Segments, eps: float,
                 inner = step(inner)
             return (*inner, iters + 1)
 
-        if mode == "count":
-            acc0 = jnp.int32(0)
-        else:
-            acc0 = point_vals[q_idx]
         start = jnp.where(lane_on, root, jnp.int32(-1))
         node, ptr, acc, hits, evals, iters = lax.while_loop(
             cond, body, (start, jnp.int32(-1), acc0, jnp.int32(0),
                          jnp.int32(0), jnp.int32(0)))
         return Trace(acc=acc, hits=hits, evals=evals, iters=iters)
 
-    return jax.vmap(one_query)(query_ids, wide_lanes)
+    return jax.vmap(one_query)(query_ids, wide_lanes, q_arr, self_arr,
+                               dense_arr, rank_arr, acc0_arr)
+
+
+# The jitted entry point. Callers already inside a traced context (the
+# sharded distributed kernel runs under shard_map) use ``traverse_impl``
+# directly: a nested jit there would launch a separate per-device module
+# whose collective-free body still participates in the host-device
+# rendezvous machinery and can wedge the outer collectives.
+traverse = partial(jax.jit, static_argnames=("mode", "use_range_mask",
+                                             "unroll"))(traverse_impl)
 
 
 def tree_left(tree: Tree, node):

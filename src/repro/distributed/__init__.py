@@ -1,3 +1,12 @@
 from . import sharding
 
-__all__ = ["sharding"]
+__all__ = ["sharding", "tree_dbscan_sharded"]
+
+
+def __getattr__(name):
+    # ring_dbscan imports repro.core (morton/fdbscan); keep that import
+    # lazy so `repro.distributed.sharding` stays usable standalone.
+    if name == "tree_dbscan_sharded":
+        from .ring_dbscan import tree_dbscan_sharded
+        return tree_dbscan_sharded
+    raise AttributeError(name)

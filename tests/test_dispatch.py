@@ -89,6 +89,22 @@ def test_tiled_star_no_borders():
     assert same_partition(labs[core], np.asarray(full.labels)[core])
 
 
+def test_sharded_backend_matches_oracle():
+    # explicit sharded dispatch on whatever devices exist (1 locally, 8 in
+    # CI via XLA_FLAGS): the halo protocol must reproduce the oracle either
+    # way, and the plan must record the decision without building an index
+    pts = separated_points(280, 2, eps=0.08, seed=8)
+    p = dispatch.plan(pts, 0.08, 6, algorithm="sharded")
+    assert p.backend == "sharded" and p.segs is None and p.tree is None
+    res = dbscan(pts, 0.08, 6, algorithm="sharded")
+    assert res.backend == "sharded"
+    ref_labels, ref_core = dbscan_bruteforce_np(pts, 0.08, 6)
+    assert (np.asarray(res.core_mask) == ref_core).all()
+    assert same_partition(np.asarray(res.labels)[ref_core],
+                          ref_labels[ref_core])
+    check_dbscan(pts, 0.08, 6, res.labels, res.core_mask)
+
+
 def test_unknown_algorithm_raises():
     with pytest.raises(ValueError):
         dbscan(separated_points(50, 2, eps=0.1, seed=0), 0.1, 5,

@@ -26,6 +26,11 @@ points_strategy = st.lists(
 eps_strategy = st.sampled_from([1.4, 2.2, 3.1])   # eps^2 never integral
 minpts_strategy = st.sampled_from([2, 3, 5])
 
+# every dispatchable backend, including the multi-device tree path (which
+# degenerates to a single shard here but still runs the full halo protocol)
+BACKENDS = ("fdbscan", "fdbscan-densebox", "tiled", "auto", "sharded")
+backend_strategy = st.sampled_from(BACKENDS)
+
 
 @settings(max_examples=20, deadline=None)
 @given(pts=points_strategy, eps=eps_strategy, mp=minpts_strategy)
@@ -66,3 +71,29 @@ def test_backends_agree_under_permutation(pts, eps, mp, seed):
     assert (core[perm] == np.asarray(b.core_mask)).all()
     assert same_partition(np.asarray(a.labels)[perm][np.asarray(b.core_mask)],
                           np.asarray(b.labels)[np.asarray(b.core_mask)])
+
+
+@settings(max_examples=25, deadline=None)
+@given(pts=points_strategy, eps=eps_strategy, mp=minpts_strategy,
+       algo=backend_strategy)
+def test_every_backend_satisfies_axioms(pts, eps, mp, algo):
+    """A1-A5 hold for every backend the dispatcher can resolve."""
+    res = dbscan(pts, eps, mp, algorithm=algo)
+    check_dbscan(pts, eps, mp, res.labels, res.core_mask)
+
+
+@settings(max_examples=25, deadline=None)
+@given(pts=points_strategy, eps=eps_strategy, mp=minpts_strategy,
+       algo=backend_strategy, seed=st.integers(0, 2**31 - 1))
+def test_core_partition_permutation_invariant(pts, eps, mp, algo, seed):
+    """Shuffling the input must not change the core mask or the core
+    partition, for any backend (labels may renumber; ``same_partition``
+    compares the induced partitions)."""
+    perm = np.random.default_rng(seed).permutation(N)
+    a = dbscan(pts, eps, mp, algorithm=algo)
+    b = dbscan(pts[perm], eps, mp, algorithm=algo)
+    core_a = np.asarray(a.core_mask)
+    core_b = np.asarray(b.core_mask)
+    assert (core_a[perm] == core_b).all()
+    assert same_partition(np.asarray(a.labels)[perm][core_b],
+                          np.asarray(b.labels)[core_b])

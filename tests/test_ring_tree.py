@@ -1,0 +1,134 @@
+"""Sharded tree-path conformance: 8 virtual devices, exact agreement.
+
+The sharded backend (shard-local LBVH traversal + eps-halo exchange,
+DESIGN.md §6) must reproduce the single-device partition *exactly*: both
+paths Morton-sort with the same global quantization and compute the same
+float32 d2 per pair, and both assign min-representative labels, so even
+border ties resolve identically — the tests assert equality, not merely
+axiom conformance.
+
+Run in subprocesses (like test_distributed) so the main pytest process
+keeps its single real device.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCENARIOS = [
+    # (dataset, n, eps, min_pts) — all five pointclouds regimes
+    ("ngsim_like", 1600, 0.01, 5),
+    ("portotaxi_like", 1600, 0.02, 5),
+    ("road3d_like", 1600, 0.01, 5),
+    ("hacc_like", 1600, 0.05, 5),
+    ("blobs", 1600, 0.05, 8),
+]
+
+
+def run_with_devices(body: str, n_devices: int = 8, timeout: int = 900):
+    code = ("import os\n"
+            f"os.environ['XLA_FLAGS'] = "
+            f"'--xla_force_host_platform_device_count={n_devices}'\n"
+            + textwrap.dedent(body))
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src")
+               + os.pathsep + os.path.join(REPO, "tests"))
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=timeout, env=env)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+@pytest.mark.parametrize("dset,n,eps,minpts", SCENARIOS,
+                         ids=[s[0] for s in SCENARIOS])
+def test_sharded_tree_matches_single_device(dset, n, eps, minpts):
+    run_with_devices(f"""
+    import numpy as np
+    from repro.core import dbscan
+    from repro.core.validate import same_partition
+    from repro.data import pointclouds
+    from repro.distributed.ring_dbscan import tree_dbscan_sharded
+
+    pts = pointclouds.load({dset!r}, {n})
+    r, st = tree_dbscan_sharded(pts, {eps}, {minpts}, with_stats=True)
+    assert st['ndev'] == 8, st
+    s = dbscan(pts, {eps}, {minpts}, algorithm='fdbscan')
+    core_r = np.asarray(r.core_mask); core_s = np.asarray(s.core_mask)
+    assert (core_r == core_s).all(), 'core mask differs'
+    lr = np.asarray(r.labels); ls = np.asarray(s.labels)
+    assert same_partition(lr, ls), 'full partition differs'
+    assert same_partition(lr[core_s], ls[core_s]), 'core partition differs'
+    assert r.n_clusters == s.n_clusters
+    # the tree path must beat the dense ring's work by a wide margin
+    assert st['distance_evals'] * 5 < st['ring_distance_evals'], st
+    print({dset!r}, 'ok', r.n_clusters, 'clusters', st['distance_evals'],
+          'evals')
+    """)
+
+
+def test_sharded_tree_cluster_straddles_many_shards():
+    """Adversarial: one thin dense strip whose single cluster crosses >= 3
+    shard boundaries of the Morton-contiguous slab partition."""
+    run_with_devices("""
+    import numpy as np
+    from repro.core import dbscan, morton
+    from repro.core.validate import same_partition
+    from repro.distributed.ring_dbscan import tree_dbscan_sharded
+
+    rng = np.random.default_rng(0)
+    eps, minpts = 0.01, 4
+    # strip along x: spacing well under eps -> one density-connected chain
+    xs = np.linspace(0.0, 1.0, 800).astype(np.float32)
+    strip = np.stack([xs, 0.5 + 1e-3 * np.sin(37.0 * xs)], -1)
+    # distant compact blob (y ~ 0.9) + sparse noise band (y in [0.05,
+    # 0.12]) — both many eps away from the strip at y ~ 0.5, so there is
+    # no eps-boundary ambiguity between groups
+    blob = rng.uniform(0.0, 0.05, size=(120, 2)).astype(np.float32) \\
+        + np.asarray([0.1, 0.9], np.float32)
+    noise = np.stack([rng.uniform(0, 1, 80),
+                      rng.uniform(0.05, 0.12, 80)], -1).astype(np.float32)
+    pts = np.concatenate([strip, blob, noise])
+
+    # the strip must occupy >= 4 distinct shards of the slab partition
+    _, order, _ = morton.morton_sort(pts)
+    pos = np.empty(len(pts), np.int64)
+    pos[np.asarray(order)] = np.arange(len(pts))
+    n_loc = -(-len(pts) // 8)
+    strip_shards = np.unique(pos[:len(strip)] // n_loc)
+    assert len(strip_shards) >= 4, strip_shards
+
+    r = tree_dbscan_sharded(pts, eps, minpts)
+    s = dbscan(pts, eps, minpts, algorithm='fdbscan')
+    assert (np.asarray(r.core_mask) == np.asarray(s.core_mask)).all()
+    assert same_partition(np.asarray(r.labels), np.asarray(s.labels))
+    # the strip is one cluster despite the shard cuts
+    strip_labels = np.unique(np.asarray(r.labels)[:len(strip)])
+    assert len(strip_labels) == 1 and strip_labels[0] >= 0, strip_labels
+    print('straddle ok: shards', strip_shards, 'clusters', r.n_clusters)
+    """)
+
+
+def test_sharded_auto_dispatch_under_mesh():
+    """dispatch.plan picks the sharded backend when a mesh is active, and
+    the unified entry point returns the identical partition."""
+    run_with_devices("""
+    import numpy as np, jax
+    from repro.core import dbscan, dispatch
+    from repro.core.validate import same_partition
+    from conftest import separated_points
+
+    pts = separated_points(1200, 2, eps=0.05, seed=4)
+    mesh = jax.make_mesh((8,), ('data',))
+    p = dispatch.plan(pts, 0.05, 6, mesh=mesh)
+    assert p.backend == 'sharded', p
+    assert p.stats['ndev'] == 8
+    res = dbscan(pts, 0.05, 6, algorithm='auto', mesh=mesh)
+    assert res.backend == 'sharded'
+    ref = dbscan(pts, 0.05, 6, algorithm='fdbscan')
+    assert (np.asarray(res.core_mask) == np.asarray(ref.core_mask)).all()
+    assert same_partition(np.asarray(res.labels), np.asarray(ref.labels))
+    print('auto mesh ok')
+    """)
