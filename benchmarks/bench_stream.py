@@ -1,0 +1,118 @@
+"""Streaming vs full-recluster: insert throughput + query latency.
+
+The ISSUE-3 acceptance claim: ingesting a 1% micro-batch into a live
+``StreamingDBSCAN`` handle (bidirectional count update + incremental label
+repair, eps-local work) must beat re-running batch ``dbscan`` on the union
+by >= 5x wall clock at n=32768. The full-recluster baseline goes through
+the unified dispatcher with the plan cache cleared per repetition — a new
+point set genuinely pays the index rebuild — while its jitted programs
+stay warm (shape-for-shape the same), so the comparison is compile-free on
+both sides. Emits ``BENCH_stream.json``.
+
+    PYTHONPATH=src python -m benchmarks.bench_stream [--n 32768]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+EPS, MINPTS = 0.02, 10          # taxi regime, same as bench_distributed
+REQUIRED_SPEEDUP = 5.0
+
+
+def _median_time(fn, repeat=3):
+    times = []
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times)), out
+
+
+def run(n: int = 32768, quick: bool = False,
+        json_out: str = "BENCH_stream.json"):
+    from repro.core import dispatch
+    from repro.core.validate import check_component_identical
+    from repro.data import pointclouds
+    from .common import emit
+
+    b = max(1, n // 100)                      # the 1% micro-batch
+    pts = pointclouds.taxi_2d(n + b)
+    initial, batch = pts[:n], pts[n:]
+    union = pts
+
+    # ---- warm every shape once (compiles excluded from timings) --------
+    dispatch.clear_cache()
+    h = dispatch.stream_handle(initial, EPS, MINPTS)
+    h.insert(batch)
+    h.query(batch)
+    snap_stream = h.snapshot()
+
+    # ---- streaming insert: fresh handle per rep (cached index -> cheap
+    # bootstrap), timing only the insert itself --------------------------
+    def one_insert():
+        hh = dispatch.stream_handle(initial, EPS, MINPTS)
+        t0 = time.perf_counter()
+        hh.insert(batch)
+        return time.perf_counter() - t0
+    insert_s = float(np.median([one_insert() for _ in range(3)]))
+
+    # ---- query latency over the live two-level handle ------------------
+    query_s, _ = _median_time(lambda: h.query(batch), repeat=5)
+
+    # ---- full-recluster baseline on the union --------------------------
+    dispatch.clear_cache()
+    ref = dispatch.dbscan(union, EPS, MINPTS)         # warm the programs
+
+    def one_full():
+        dispatch.clear_cache()                        # honest index rebuild
+        return dispatch.dbscan(union, EPS, MINPTS)
+    full_s, ref = _median_time(one_full, repeat=3)
+
+    # ---- equivalence spot check ----------------------------------------
+    check_component_identical(snap_stream.labels, snap_stream.core_mask,
+                              ref.labels, ref.core_mask)
+
+    speedup = full_s / insert_s
+    rec = {
+        "n": n, "batch": b, "eps": EPS, "minpts": MINPTS,
+        "backend_full": ref.backend,
+        "insert_wall_s": insert_s,
+        "insert_pts_per_s": b / insert_s,
+        "query_wall_s": query_s,
+        "query_pts_per_s": b / query_s,
+        "full_recluster_wall_s": full_s,
+        "speedup_vs_full": speedup,
+        "required_speedup": REQUIRED_SPEEDUP,
+        "meets_requirement": bool(speedup >= REQUIRED_SPEEDUP),
+        "n_clusters": ref.n_clusters,
+        "repair_sweeps": h.n_repair_sweeps,
+        "quick": quick,
+    }
+    with open(json_out, "w") as f:
+        json.dump(rec, f, indent=2, sort_keys=True)
+    emit(f"stream_insert_n{n}", insert_s * 1e6,
+         f"{b / insert_s:.0f} pts/s")
+    emit(f"stream_query_n{n}", query_s * 1e6,
+         f"{b / query_s:.0f} probes/s")
+    emit(f"stream_full_recluster_n{n}", full_s * 1e6,
+         f"speedup {speedup:.1f}x (need >= {REQUIRED_SPEEDUP:.0f}x)")
+    assert rec["meets_requirement"], (
+        f"streaming insert only {speedup:.1f}x faster than full recluster "
+        f"(required {REQUIRED_SPEEDUP}x)")
+    return rec
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=32768)
+    ap.add_argument("--json-out", default="BENCH_stream.json")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    rec = run(n=args.n, quick=args.n < 32768, json_out=args.json_out)
+    print(f"# speedup {rec['speedup_vs_full']:.1f}x "
+          f"({'PASS' if rec['meets_requirement'] else 'FAIL'})")

@@ -17,14 +17,14 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: minpts,eps,scaling,cosmo,memory,"
-                         "phase,kernels,dist_evals,distributed")
+                         "phase,kernels,dist_evals,distributed,stream")
     args = ap.parse_args()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
 
     from . import (bench_cosmo, bench_distance_evals, bench_distributed,
                    bench_eps, bench_kernels, bench_memory, bench_minpts,
-                   bench_phase_cost, bench_scaling)
+                   bench_phase_cost, bench_scaling, bench_stream)
     suites = {
         "minpts": lambda: bench_minpts.run(n=16384 if args.full else 2048,
                                            quick=quick),
@@ -51,6 +51,10 @@ def main() -> None:
         "distributed": lambda: bench_distributed.run(
             sizes=(4096, 16384, 65536) if args.full else (4096, 16384),
             quick=quick),
+        # streaming insert vs full recluster; 32768 is the acceptance size
+        # for the >=5x wall-clock claim recorded in BENCH_stream.json
+        "stream": lambda: bench_stream.run(n=32768 if args.full else 4096,
+                                           quick=quick),
     }
     print("name,us_per_call,derived")
     t0 = time.time()

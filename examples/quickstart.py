@@ -34,6 +34,22 @@ def main():
                               ref_labels[ref_core])
     print("all backends agree with the brute-force oracle ✓")
 
+    # --- streaming: online inserts + probe queries over a live index ---
+    from repro.core import dispatch
+    stream = dispatch.stream_handle(pts[:1500], eps, min_pts)
+    stream.insert(pts[1500:1750])           # two micro-batches arrive...
+    stream.insert(pts[1750:])
+    probes = stream.query(pts[:5])          # read-only cluster assignment
+    print(f"{'streaming':18s}: {stream.n_points} pts "
+          f"({stream.n_delta} in the delta tree), probe labels "
+          f"{probes.labels.tolist()}")
+    snap = stream.snapshot()                # ≡ batch dbscan on the union
+    batch = dbscan(pts, eps, min_pts, algorithm="fdbscan")
+    from repro.core.validate import check_component_identical
+    check_component_identical(snap.labels, snap.core_mask,
+                              batch.labels, batch.core_mask)
+    print("streaming snapshot matches batch dbscan ✓")
+
 
 if __name__ == "__main__":
     main()

@@ -6,10 +6,10 @@ indexes across eps/min_pts sweeps. The per-algorithm implementations stay
 importable via ``fdbscan`` and ``kernels.ops``.
 """
 from .fdbscan import DBSCANResult
-from .dispatch import dbscan, plan, Plan
+from .dispatch import dbscan, plan, Plan, stream_handle
 from .baselines import dbscan_bruteforce_np, gdbscan
 from . import dispatch, fdbscan, grid, lbvh, morton, traversal, unionfind, validate
 
-__all__ = ["DBSCANResult", "dbscan", "plan", "Plan", "dbscan_bruteforce_np",
-           "gdbscan", "dispatch", "fdbscan", "grid", "lbvh", "morton",
-           "traversal", "unionfind", "validate"]
+__all__ = ["DBSCANResult", "dbscan", "plan", "Plan", "stream_handle",
+           "dbscan_bruteforce_np", "gdbscan", "dispatch", "fdbscan", "grid",
+           "lbvh", "morton", "traversal", "unionfind", "validate"]

@@ -51,7 +51,8 @@ DENSE_FRACTION_MIN = 0.05
 _CACHE_MAX = 32
 _plan_cache: "OrderedDict[Any, Any]" = OrderedDict()
 
-ALGORITHMS = ("auto", "fdbscan", "fdbscan-densebox", "tiled", "sharded")
+ALGORITHMS = ("auto", "fdbscan", "fdbscan-densebox", "tiled", "sharded",
+              "stream")
 
 
 class Plan(NamedTuple):
@@ -160,6 +161,16 @@ def plan(points, eps: float, min_pts: int,
         return hit
 
     stats: dict = {"n": n, "d": d}
+    if algorithm == "stream":
+        # the streaming handle wraps the plain fdbscan index, which is
+        # eps-independent — every (eps, min_pts) stream plan for the same
+        # point set shares one cached index build
+        if d not in (2, 3):
+            raise ValueError(f"streaming index needs d in (2, 3); got {d}")
+        stats["reason"] = "explicit: streaming two-level index"
+        return _cache_put(key,
+                          _fdbscan_plan(points, pkey, stats)._replace(
+                              backend="stream"))
     if algorithm == "tiled" or (algorithm == "auto" and n <= TILED_MAX_POINTS):
         stats["reason"] = ("explicit" if algorithm == "tiled"
                            else f"n <= {TILED_MAX_POINTS}: MXU tiles win")
@@ -207,6 +218,12 @@ def dbscan(points, eps: float, min_pts: int, *, algorithm: str = "auto",
                                   mesh=p.stats.get("mesh", mesh),
                                   axis=p.stats.get("axis", axis))
         return res._replace(backend="sharded")
+    if p.backend == "stream":
+        # one-shot execution of a stream plan: bootstrap a handle over the
+        # plan's (cached, eps-independent) index and materialize labels
+        from repro.stream import StreamingDBSCAN
+        h = StreamingDBSCAN(points, eps, min_pts, index=(p.segs, p.tree))
+        return h.snapshot(star=star)
     if p.backend == "tiled":
         import jax
         from repro.kernels import ops
@@ -217,3 +234,19 @@ def dbscan(points, eps: float, min_pts: int, *, algorithm: str = "auto",
     return fdbscan.cluster_from_index(p.segs, p.tree, eps, min_pts,
                                       star=star, frontier=frontier,
                                       backend=p.backend)
+
+
+def stream_handle(points, eps: float, min_pts: int, **kwargs):
+    """Build a :class:`repro.stream.StreamingDBSCAN` handle over ``points``.
+
+    Goes through :func:`plan`, so the handle's main tree is the *cached*
+    eps-independent fdbscan index — building handles (or running batch
+    ``dbscan``) for several ``eps``/``min_pts`` values over the same point
+    set shares one index build. ``kwargs`` pass through to the handle
+    (e.g. ``merge_ratio``).
+    """
+    from repro.stream import StreamingDBSCAN
+    points = jnp.asarray(points)
+    p = plan(points, eps, min_pts, algorithm="stream")
+    return StreamingDBSCAN(points, eps, min_pts,
+                           index=(p.segs, p.tree), **kwargs)

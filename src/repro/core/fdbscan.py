@@ -398,15 +398,16 @@ def dbscan(points, eps: float, min_pts: int, *, algorithm: str = "auto",
     """DBSCAN via the paper's tree-based algorithms.
 
     algorithm: "fdbscan" | "fdbscan-densebox" build the named tree index
-    directly; "auto", "tiled" and "sharded" go through the unified
-    dispatcher (repro.core.dispatch), which probes the eps-grid occupancy
-    and may pick the MXU tile backend or (when a ``mesh`` is active) the
-    multi-device sharded tree path. star=True implements DBSCAN* (no border
-    points; non-core -> noise). frontier=False forces full (unrestricted)
-    sweeps.
+    directly; "auto", "tiled", "sharded" and "stream" go through the
+    unified dispatcher (repro.core.dispatch), which probes the eps-grid
+    occupancy and may pick the MXU tile backend, the multi-device sharded
+    tree path (when a ``mesh`` is active), or a one-shot streaming
+    snapshot (DESIGN.md §7; use ``dispatch.stream_handle`` to keep the
+    handle for inserts). star=True implements DBSCAN* (no border points;
+    non-core -> noise). frontier=False forces full (unrestricted) sweeps.
     """
     points = jnp.asarray(points)
-    if algorithm in ("auto", "tiled", "sharded"):
+    if algorithm in ("auto", "tiled", "sharded", "stream"):
         from . import dispatch
         return dispatch.dbscan(points, eps, min_pts, algorithm=algorithm,
                                star=star, frontier=frontier, mesh=mesh)

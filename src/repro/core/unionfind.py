@@ -20,11 +20,24 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 
 def jump_once(labels: jax.Array) -> jax.Array:
     return labels[labels]
+
+
+def jump_to_fixpoint_np(labels: np.ndarray) -> np.ndarray:
+    """NumPy twin of :func:`jump_to_fixpoint` for host-driven repair loops
+    (the streaming index hooks on host between jitted traversals).
+    Requires ``labels[i] <= i`` — a decreasing pointer forest — so the
+    doubling can never cycle."""
+    while True:
+        jumped = labels[labels]
+        if (jumped == labels).all():
+            return labels
+        labels = jumped
 
 
 @jax.jit

@@ -167,6 +167,25 @@ def check_dbscan(points, eps: float, min_pts: int, labels, core_mask,
                 f"carries that label")
 
 
+def check_component_identical(labels_a, core_a, labels_b, core_b) -> None:
+    """Assert two DBSCAN results are *component-identical*: exact core
+    mask, exact noise set, identical partition of the core points.
+
+    This is the strongest comparison that is well-defined across backends
+    — border points may legitimately attach to any adjacent cluster (see
+    the module docstring), so full label arrays are never compared
+    elementwise. The streaming subsystem's snapshot()-vs-batch contract
+    (DESIGN.md §7) is stated in exactly these terms; the benchmark, the
+    serving loop's ``--validate``, and the test suite all share this one
+    definition.
+    """
+    ca, cb = np.asarray(core_a), np.asarray(core_b)
+    assert (ca == cb).all(), "core mask differs"
+    la, lb = np.asarray(labels_a), np.asarray(labels_b)
+    assert ((la == -1) == (lb == -1)).all(), "noise set differs"
+    assert same_partition(la[ca], lb[ca]), "core partition differs"
+
+
 def same_partition(labels_a, labels_b) -> bool:
     """True iff two labelings induce the same partition (noise == noise)."""
     a = np.asarray(labels_a)

@@ -1,0 +1,10 @@
+"""Streaming DBSCAN subsystem: two-level LBVH index, online inserts,
+batched cluster queries, snapshots (DESIGN.md §7).
+
+``StreamingDBSCAN`` is the serving-path handle; the dispatcher's
+``repro.core.dispatch.stream_handle`` builds one that shares the cached
+eps-independent batch index.
+"""
+from .index import StreamingDBSCAN, QueryResult, MERGE_RATIO, MERGE_MIN
+
+__all__ = ["StreamingDBSCAN", "QueryResult", "MERGE_RATIO", "MERGE_MIN"]

@@ -1,0 +1,539 @@
+"""Streaming DBSCAN over a two-level LBVH index (DESIGN.md §7).
+
+``StreamingDBSCAN`` keeps density clusters live under online insertions —
+the serving path the batch pipeline cannot cover (it reclusters from
+scratch per call). Three operations:
+
+  * ``query(pts)``    — read-only cluster assignment for a batch of probe
+                        points (external-query traversal, no mutation);
+  * ``insert(pts)``   — micro-batch ingestion with bidirectional core-count
+                        updates and incremental label repair;
+  * ``snapshot()``    — materialized labels, component-identical to batch
+                        ``dbscan`` on the accumulated point set.
+
+LSM-style two-level index: one large immutable *main* LBVH (built at
+construction or at the last merge) plus one small *delta* LBVH over the
+points inserted since.  Every operation traverses both trees with the
+engine's external-query mode (``traversal.traverse(query_pts=...)``,
+chaining the running min through ``query_init`` exactly like the sharded
+path chains across shards); when the delta outgrows ``merge_ratio`` times
+the main, a jitted merge re-sorts the union along the Morton curve and
+rebuilds a single main tree.
+
+Core-count bookkeeping is *bidirectional*: a new point counts its resident
+neighbors (main + delta + within-batch), and every resident point within
+eps of the batch has its count incremented — so an insert can promote an
+existing borderline/noise point to core.  Counts saturate at ``min_pts``
+(sound for the core threshold: ``min(c, mp) + inc >= mp  <=>
+c + inc >= mp`` for ``inc >= 0``, the same saturation argument as the
+sharded path's per-visit counts).
+
+Label repair is an incremental union-find pass (``unionfind`` semantics on
+the global insert-order ids): the only new core-core edges have an
+endpoint in S = {new points} ∪ {promoted points}, all of which lie inside
+the eps-dilated AABB of the batch, so the first repair sweep runs just the
+S cores as queries gathering over the full core set; the whole seed is
+then marked *changed* (its labels are new entries in the pool), and
+subsequent sweeps run the exact frontier restriction of the batch pipeline
+(gather only from changed points, queries only eps-near the change) until
+the fixpoint — the reverse direction of every new edge is pulled in sweep
+2 at masked-gather cost. Labels always satisfy ``labels[i] <= i`` with
+component-minimum representatives at rest, so bulk pointer jumping can
+never cycle.
+
+Distance arithmetic is float32 end to end — including the NumPy brute
+paths — so boundary decisions agree bit-for-bit with the traversal engine
+and ``snapshot()`` reproduces the batch core mask exactly.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import fdbscan, grid, lbvh, morton, traversal, unionfind
+from repro.core.fdbscan import DBSCANResult
+
+INT_MAX = traversal.INT_MAX
+
+# Delta/main size ratio above which an insert triggers an automatic merge,
+# and the floor below which the delta never auto-merges (tiny deltas are
+# cheap to traverse; rebuilding the main tree for them is not).
+MERGE_RATIO = 0.25
+MERGE_MIN = 256
+
+# Sentinel padding offset in units of eps beyond the delta's own bounding
+# box: >= 3*eps along every axis keeps any real query (which can lie
+# anywhere) from ever *matching* a sentinel in masked modes and keeps the
+# box tests cheap; unmasked count mode is never run against the delta.
+_SENTINEL_EPS = 3.0
+
+
+class _Level(NamedTuple):
+    """One level of the two-level index (main or delta)."""
+    segs: grid.Segments      # singleton segments, Morton order (+ sentinels)
+    tree: lbvh.Tree | None   # None only for <2 resident points
+    gids: np.ndarray         # (n_prims,) global insert id per sorted
+                             # primitive; -1 marks a padding sentinel
+
+
+class QueryResult(NamedTuple):
+    """Read-only cluster assignment for a probe batch.
+
+    labels: component representative (global insert id of the component's
+            minimum member) of the min adjacent core point, or -1 when no
+            core point lies within eps (the probe would be noise).
+    counts: eps-neighbors among resident points, saturated at ``min_pts``.
+    would_be_core: the probe would be a core point if inserted now
+            (counts + itself >= min_pts).
+    """
+    labels: np.ndarray
+    counts: np.ndarray
+    would_be_core: np.ndarray
+
+
+@jax.jit
+def _build_index(pts, lo, hi):
+    """Jitted Morton-sort + singleton-segment LBVH build.
+
+    Serves both the merge (re-encode the union under its fresh bounds —
+    inserts can stretch the extent, so codes cannot simply be merged from
+    the two levels' old key streams) and the padded delta rebuild (``lo``/
+    ``hi`` are the *valid* points' bounds, so sentinels clip to the top
+    cell exactly like the sharded path's padding).
+    """
+    codes = morton.morton_encode(pts, lo=lo, hi=hi)
+    order = jnp.argsort(codes)
+    segs = grid.singleton_segments(pts[order], order.astype(jnp.int32),
+                                   codes[order])
+    tree = lbvh.build_tree(segs.codes, segs.prim_lo, segs.prim_hi)
+    return segs, tree
+
+
+def _hits_blocked(a: np.ndarray, b: np.ndarray, eps2: np.float32,
+                  block: int = 2048) -> np.ndarray:
+    """# rows of ``b`` within eps of each row of ``a``; float32 arithmetic
+    matching the traversal's d2 so boundary decisions cannot diverge."""
+    out = np.zeros(len(a), np.int64)
+    for lo in range(0, len(a), block):
+        diff = a[lo:lo + block, None, :] - b[None, :, :]
+        d2 = (diff * diff).sum(-1)
+        out[lo:lo + block] = (d2 <= eps2).sum(1)
+    return out
+
+
+class StreamingDBSCAN:
+    """Online DBSCAN handle: insert micro-batches, query probes, snapshot.
+
+    points: optional initial point set (clustered with the batch pipeline);
+        ``None`` starts empty (the serving loop's cold-start path).
+    index: optional prebuilt plain-FDBSCAN ``(segs, tree)`` over ``points``
+        — the dispatcher passes its cached eps-independent index here so
+        streaming composes with eps/min_pts parameter sweeps.
+    merge_ratio: delta/main size ratio that triggers an automatic merge.
+    """
+
+    def __init__(self, points, eps: float, min_pts: int, *,
+                 merge_ratio: float = MERGE_RATIO, index=None):
+        if eps <= 0:
+            raise ValueError(f"streaming index needs eps > 0; got {eps}")
+        if min_pts < 1:
+            raise ValueError(f"min_pts must be >= 1; got {min_pts}")
+        self.eps = float(eps)
+        self.min_pts = int(min_pts)
+        self._eps2 = np.float32(jnp.asarray(eps, jnp.float32) ** 2)
+        self._merge_ratio = float(merge_ratio)
+        self._pts = np.zeros((0, 2), np.float32)
+        self._counts = np.zeros(0, np.int32)   # |N_eps| incl. self, sat. mp
+        self._core = np.zeros(0, bool)
+        self._labels = np.zeros(0, np.int32)   # core: component-min gid;
+                                               # non-core: own gid
+        self._main: _Level | None = None
+        self._n_main = 0
+        self._delta: _Level | None = None
+        self.n_inserts = 0
+        self.n_merges = 0
+        self.n_repair_sweeps = 0
+        if points is not None:
+            pts = np.array(points, np.float32)   # copy: never alias callers
+            if pts.size:
+                self._bootstrap(pts, index)
+
+    # ------------------------------------------------------------------ #
+    # public surface                                                     #
+    # ------------------------------------------------------------------ #
+
+    @property
+    def n_points(self) -> int:
+        return len(self._pts)
+
+    @property
+    def n_main(self) -> int:
+        return self._n_main
+
+    @property
+    def n_delta(self) -> int:
+        return len(self._pts) - self._n_main
+
+    @property
+    def points(self) -> np.ndarray:
+        """The accumulated point set in insertion order (read-only view)."""
+        view = self._pts.view()
+        view.flags.writeable = False
+        return view
+
+    def query(self, pts) -> QueryResult:
+        """Cluster assignment for probe points; never mutates the index."""
+        qpts = self._check_pts(pts, grow=False)
+        k = len(qpts)
+        if k == 0 or self.n_points == 0:
+            return QueryResult(np.full(k, -1, np.int32),
+                               np.zeros(k, np.int32),
+                               np.ones(k, bool) if self.min_pts <= 1
+                               else np.zeros(k, bool))
+        vals = np.where(self._core, self._labels, INT_MAX).astype(np.int32)
+        acc = np.full(k, INT_MAX, np.int32)
+        for lvl in self._levels():
+            acc, _ = self._run(lvl, qpts, vals, self._core, acc,
+                               mode="minlabel")
+        counts = np.zeros(k, np.int64)
+        for lvl in self._levels():
+            counts += self._count(lvl, qpts)
+        counts = np.minimum(counts, self.min_pts).astype(np.int32)
+        return QueryResult(
+            labels=np.where(acc == INT_MAX, -1, acc).astype(np.int32),
+            counts=counts,
+            would_be_core=counts + 1 >= self.min_pts)
+
+    def insert(self, pts) -> "StreamingDBSCAN":
+        """Ingest a micro-batch: counts update bidirectionally, labels are
+        repaired incrementally, the delta tree is rebuilt (padded to a
+        bucketed size for stable jit shapes), and an oversized delta
+        triggers a merge."""
+        batch = self._check_pts(pts, grow=True)
+        b = len(batch)
+        if b == 0:
+            return self
+        n_old = self.n_points
+        gid0 = n_old
+
+        # ---- bidirectional core-count update --------------------------
+        c_new = np.zeros(b, np.int64)
+        for lvl in self._levels():          # vs main + vs *old* delta
+            c_new += self._count(lvl, batch)
+        c_new += _hits_blocked(batch, batch, self._eps2)  # within (incl self)
+        new_counts = np.minimum(c_new, self.min_pts).astype(np.int32)
+
+        # existing points eps-near the batch gain neighbors; the eps-cell
+        # dilation filter is a sound superset of "within eps of a batch
+        # point" (and a subset of the batch's eps-dilated AABB)
+        all_pts = (np.concatenate([self._pts, batch]) if n_old else batch)
+        keys = fdbscan._cell_keys(all_pts, self.eps)
+        batch_mask = np.zeros(n_old + b, bool)
+        batch_mask[n_old:] = True
+        near = fdbscan._near_changed(keys, batch.shape[1], batch_mask)
+        was_core = self._core
+        aff = np.flatnonzero(near[:n_old])
+        if len(aff):
+            inc = _hits_blocked(self._pts[aff], batch, self._eps2)
+            self._counts[aff] = np.minimum(
+                self._counts[aff] + inc, self.min_pts).astype(np.int32)
+
+        # ---- append + delta rebuild -----------------------------------
+        self._pts = all_pts
+        self._counts = np.concatenate([self._counts, new_counts])
+        core_now = self._counts >= self.min_pts
+        promoted = np.flatnonzero(core_now[:n_old] & ~was_core)
+        self._core = core_now
+        self._labels = np.concatenate(
+            [self._labels, np.arange(gid0, gid0 + b, dtype=np.int32)])
+        self._rebuild_delta()
+
+        # ---- incremental label repair ---------------------------------
+        seed = np.concatenate(
+            [promoted, np.arange(gid0, gid0 + b, dtype=np.int64)])
+        self._repair(seed, keys)
+        self.n_inserts += 1
+
+        # ---- merge policy ---------------------------------------------
+        if self.n_delta > max(MERGE_MIN,
+                              int(self._merge_ratio * self._n_main)):
+            self.merge()
+        return self
+
+    def merge(self) -> "StreamingDBSCAN":
+        """Fold the delta into the main level: one jitted Morton re-sort +
+        LBVH rebuild over the union, padded to the same shape buckets as
+        the delta so repeated merges at ever-growing point counts reuse
+        compiled programs. Index-only — labels, counts, and the core mask
+        are untouched, so a merge can never change ``snapshot``."""
+        n = self.n_points
+        if n == self._n_main:
+            return self
+        if n >= 2:
+            self._main = self._build_level(
+                self._pts, np.arange(n, dtype=np.int64))
+        else:
+            segs = grid.build_segments_fdbscan(jnp.asarray(self._pts))
+            self._main = _Level(segs, None, np.asarray(segs.order, np.int64))
+        self._n_main = n
+        self._delta = None
+        self.n_merges += 1
+        return self
+
+    def snapshot(self, *, star: bool = False) -> DBSCANResult:
+        """Materialized labels over the accumulated point set (insertion
+        order), component-identical to batch ``dbscan``: exact core mask,
+        exact noise set, identical core partition; border points take the
+        min adjacent core representative. ``star=True`` is DBSCAN* (no
+        border points)."""
+        n = self.n_points
+        if n == 0:
+            return DBSCANResult(labels=jnp.zeros(0, jnp.int32),
+                                core_mask=jnp.zeros(0, bool), n_clusters=0,
+                                n_sweeps=self.n_repair_sweeps,
+                                n_traversals=-1, backend="stream")
+        core = self._core
+        labels_full = np.where(core, self._labels, -1).astype(np.int32)
+        if not star:
+            nb = np.flatnonzero(~core)
+            if len(nb) and core.any():
+                vals = np.where(core, self._labels, INT_MAX).astype(np.int32)
+                acc = np.full(len(nb), INT_MAX, np.int32)
+                for lvl in self._levels():
+                    acc, _ = self._run(lvl, self._pts[nb], vals, core, acc,
+                                       mode="minlabel")
+                labels_full[nb] = np.where(acc == INT_MAX, -1, acc)
+        uniq = np.unique(labels_full[core]) if core.any() else \
+            np.zeros(0, np.int32)
+        out = np.full(n, -1, np.int32)
+        pos = labels_full >= 0
+        out[pos] = np.searchsorted(uniq, labels_full[pos]).astype(np.int32)
+        return DBSCANResult(labels=jnp.asarray(out),
+                            core_mask=jnp.asarray(core),
+                            n_clusters=int(len(uniq)),
+                            n_sweeps=self.n_repair_sweeps,
+                            n_traversals=-1, backend="stream")
+
+    # ------------------------------------------------------------------ #
+    # internals                                                          #
+    # ------------------------------------------------------------------ #
+
+    def _check_pts(self, pts, grow: bool) -> np.ndarray:
+        # np.array (not asarray): never alias a caller-owned buffer the
+        # caller may mutate after we have indexed its coordinates
+        arr = np.array(pts, np.float32)
+        if arr.ndim != 2 or arr.shape[1] not in (2, 3):
+            raise ValueError(f"expected (k, 2|3) points; got {arr.shape}")
+        if self.n_points and arr.shape[1] != self._pts.shape[1]:
+            raise ValueError(f"dimensionality mismatch: index is "
+                             f"{self._pts.shape[1]}-d, got {arr.shape[1]}-d")
+        if grow and self.n_points == 0 and self._pts.shape[1] != arr.shape[1]:
+            self._pts = np.zeros((0, arr.shape[1]), np.float32)
+        return arr
+
+    def _bootstrap(self, pts: np.ndarray, index) -> None:
+        """Initial batch clustering via the fused pipeline, converted to
+        global (insertion-order) ids with component-minimum reps."""
+        n = pts.shape[0]
+        self._check_pts(pts, grow=True)
+        if index is not None:
+            segs, tree = index
+            if segs.n_points != n:
+                raise ValueError(f"index covers {segs.n_points} points, "
+                                 f"got {n}")
+            if bool(np.asarray(segs.dense_seg).any()):
+                raise ValueError("streaming needs the plain (singleton) "
+                                 "fdbscan index, not a densebox index")
+            if tree is None and segs.n_segments >= 2:
+                tree = lbvh.build_tree(segs.codes, segs.prim_lo,
+                                       segs.prim_hi)
+        else:
+            segs = grid.build_segments_fdbscan(jnp.asarray(pts))
+            tree = (lbvh.build_tree(segs.codes, segs.prim_lo, segs.prim_hi)
+                    if segs.n_segments >= 2 else None)
+        self._pts = pts
+        order = np.asarray(segs.order, np.int64)
+        if n >= 2 and tree is not None:
+            core_s, labels0, vals0, absorbed, tr = fdbscan._fused_first_pass(
+                tree, segs, self.eps, self.min_pts)
+            core_labels, _, _ = fdbscan._sweep_to_fixpoint(
+                tree, segs, self.eps, core_s, labels0,
+                fused_init=(vals0, absorbed))
+            counts_s = np.minimum(np.asarray(tr.hits) + 1,
+                                  self.min_pts).astype(np.int32)
+            core_np = np.asarray(core_s)
+            roots_s = np.asarray(core_labels)
+            counts = np.empty(n, np.int32)
+            counts[order] = counts_s
+            core = np.empty(n, bool)
+            core[order] = core_np
+            labels = np.arange(n, dtype=np.int32)
+            if core_np.any():
+                # sorted-space roots -> component-minimum *global* id, the
+                # rep order the streaming hooks preserve (labels[i] <= i)
+                rep_gid = np.full(n, n, np.int64)
+                np.minimum.at(rep_gid, roots_s[core_np], order[core_np])
+                labels[order[core_np]] = \
+                    rep_gid[roots_s[core_np]].astype(np.int32)
+        else:                       # n == 1
+            counts = np.ones(n, np.int32)
+            core = counts >= self.min_pts
+            labels = np.zeros(n, np.int32)
+        self._counts, self._core, self._labels = counts, core, labels
+        self._main = _Level(segs, tree, order)
+        self._n_main = n
+
+    def _levels(self):
+        if self._main is not None:
+            yield self._main
+        if self._delta is not None:
+            yield self._delta
+
+    def _rebuild_delta(self) -> None:
+        nd = self.n_delta
+        if nd == 0:
+            self._delta = None
+            return
+        self._delta = self._build_level(
+            self._pts[self._n_main:],
+            np.arange(self._n_main, self._n_main + nd, dtype=np.int64))
+
+    def _build_level(self, dpts: np.ndarray, gids: np.ndarray) -> _Level:
+        """Jitted index build over ``dpts`` (global ids ``gids``), padded
+        to a bucketed size with out-of-range sentinels (gid -1) so every
+        level sees a bounded set of jit shapes."""
+        nd = len(dpts)
+        pad = max(fdbscan._pad_size(nd), 2)
+        lo, hi = dpts.min(0), dpts.max(0)
+        if pad > nd:
+            sent = hi + np.float32(_SENTINEL_EPS * self.eps)
+            dpts = np.concatenate(
+                [dpts, np.broadcast_to(sent, (pad - nd, dpts.shape[1]))])
+            gids = np.concatenate([gids, np.full(pad - nd, -1, np.int64)])
+        segs, tree = _build_index(jnp.asarray(dpts),
+                                  jnp.asarray(lo), jnp.asarray(hi))
+        return _Level(segs, tree, gids[np.asarray(segs.order)])
+
+    def _count(self, lvl: _Level, qpts: np.ndarray) -> np.ndarray:
+        """eps-neighbor count of external queries against one level.
+
+        A sentinel-free level uses plain ``count`` mode (early exit at
+        min_pts); a padded level (the delta, or a merged main) uses the
+        masked fused count (``count_minlabel``'s hits), which a sentinel
+        can never enter — a probe may legitimately live anywhere,
+        including near a sentinel's coordinates."""
+        if lvl.tree is None:
+            gv = lvl.gids[lvl.gids >= 0]
+            if len(gv) == 0:
+                return np.zeros(len(qpts), np.int64)
+            return np.minimum(_hits_blocked(qpts, self._pts[gv], self._eps2),
+                              self.min_pts)
+        has_sentinel = bool((lvl.gids < 0).any())
+        if not has_sentinel:
+            acc, _ = self._run(lvl, qpts,
+                               np.zeros(self.n_points, np.int32),
+                               np.ones(self.n_points, bool),
+                               np.zeros(len(qpts), np.int32),
+                               mode="count", cap=self.min_pts)
+            return acc.astype(np.int64)
+        _, hits = self._run(lvl, qpts,
+                            np.zeros(self.n_points, np.int32),
+                            np.ones(self.n_points, bool),
+                            np.full(len(qpts), INT_MAX, np.int32),
+                            mode="count_minlabel", cap=self.min_pts)
+        return hits.astype(np.int64)
+
+    def _run(self, lvl: _Level, qpts: np.ndarray, vals: np.ndarray,
+             mask: np.ndarray, init: np.ndarray, mode: str,
+             cap: int = INT_MAX):
+        """One external-query pass against one level; (acc, hits) sliced
+        to the query count. ``init`` chains the running min across levels
+        (the two-tree analogue of the sharded path's traveling
+        ``query_init``)."""
+        k = len(qpts)
+        gsafe = np.maximum(lvl.gids, 0)
+        valid = lvl.gids >= 0
+        if lvl.tree is None:        # <2 residents: trivial brute force
+            gv = lvl.gids[valid]
+            if len(gv) == 0:
+                return init.copy(), np.zeros(k, np.int64)
+            res = self._pts[gv]
+            diff = qpts[:, None, :] - res[None]
+            hit = (diff * diff).sum(-1) <= self._eps2
+            ok = hit & mask[gv][None]
+            vv = np.where(ok, vals[gv][None].astype(np.int64), INT_MAX)
+            acc = np.minimum(init.astype(np.int64), vv.min(1))
+            return acc.astype(np.int32), ok.sum(1).astype(np.int64)
+        pad = fdbscan._pad_size(k)
+        ids = np.full(pad, -1, np.int32)
+        ids[:k] = 0
+        qp = np.zeros((pad, qpts.shape[1]), np.float32)
+        qp[:k] = qpts
+        ini = np.full(pad, INT_MAX, np.int32)
+        ini[:k] = init
+        pv = np.where(valid, vals[gsafe], INT_MAX).astype(np.int32)
+        pm = valid & mask[gsafe]
+        node_mask = None
+        if mode != "count":         # count needs every resident; the
+            node_mask = lbvh.propagate_leaf_flags(   # others prune to mask
+                lvl.tree, jnp.asarray(pm))
+        tr = traversal.traverse(lvl.tree, lvl.segs, self.eps,
+                                jnp.asarray(pv), jnp.asarray(pm),
+                                query_ids=jnp.asarray(ids),
+                                query_pts=jnp.asarray(qp),
+                                query_init=jnp.asarray(ini),
+                                cap=cap, mode=mode, node_mask=node_mask)
+        return (np.asarray(tr.acc)[:k].copy(),
+                np.asarray(tr.hits)[:k].astype(np.int64))
+
+    def _repair(self, seed: np.ndarray, keys: np.ndarray) -> None:
+        """Incremental union-find repair after an insert.
+
+        Every new core-core edge has an endpoint in ``seed`` (the batch +
+        promotions). Sweep 1 runs *only the seed cores* as queries, each
+        gathering over the full core set — the expensive direction of
+        every new edge is covered once, by its seed endpoint. The reverse
+        direction needs no sweep-1 query: a seed's label is a new entry in
+        the label pool, so the whole seed is marked changed after sweep 1
+        regardless of whether its *value* moved, and the standard frontier
+        restriction (§4: gather only from changed points, query only core
+        points eps-near a change, prune unchanged subtrees) lets the
+        neighbors pull it in sweep 2 at masked-gather cost. From sweep 2
+        on this is exactly ``fdbscan._sweep_to_fixpoint``'s loop, started
+        from the old fixpoint instead of from scratch."""
+        n = self.n_points
+        core = self._core
+        if len(seed) == 0 or not core[seed].any():
+            return                  # no new core point => no new edges
+        d = self._pts.shape[1]
+        seed_mask = np.zeros(n, bool)
+        seed_mask[seed] = True
+        q_mask = core & seed_mask   # sweep 1: the seed cores only...
+        gather = core               # ...gathering over every core point
+        labels = self._labels
+        first = True
+        while True:
+            q = np.flatnonzero(q_mask)
+            if len(q) == 0:
+                break
+            acc = np.full(len(q), INT_MAX, np.int32)
+            for lvl in self._levels():
+                acc, _ = self._run(lvl, self._pts[q], labels, gather, acc,
+                                   mode="minlabel")
+            new = labels.copy()
+            new[q] = np.minimum(labels[q], acc)
+            new = unionfind.jump_to_fixpoint_np(new)
+            changed = new != labels
+            if first:               # seed labels are new to the pool:
+                changed |= q_mask   # neighbors must gather them once
+                first = False
+            labels = new
+            self.n_repair_sweeps += 1
+            if not changed.any():
+                break
+            gather = changed & core
+            q_mask = core & fdbscan._near_changed(keys, d, changed)
+        self._labels = labels

@@ -1,0 +1,232 @@
+"""Streaming DBSCAN equivalence: any interleaving of inserts and merges
+must leave ``snapshot()`` component-identical to batch ``dbscan`` on the
+accumulated point set (DESIGN.md §7).
+
+Component identity is the contract the repo's oracle philosophy defines
+(validate.py): exact core mask, exact noise set, identical partition of
+the core points. Border points may legitimately attach to any adjacent
+cluster, so full label arrays are compared via the axiom checker, not
+elementwise.
+"""
+import numpy as np
+import pytest
+
+from repro.core import dbscan, dispatch
+from repro.core.validate import (check_component_identical, check_dbscan,
+                                 same_partition)
+from repro.data import pointclouds
+from repro.stream import StreamingDBSCAN
+
+SCENARIOS = [
+    # (dataset, n, eps, min_pts) — all five pointclouds regimes
+    ("ngsim_like", 360, 0.01, 5),
+    ("portotaxi_like", 360, 0.02, 5),
+    ("road3d_like", 360, 0.01, 5),
+    ("hacc_like", 360, 0.05, 5),
+    ("blobs", 360, 0.05, 8),
+]
+
+
+def assert_component_identical(stream_res, pts, eps, min_pts, ref=None):
+    """snapshot() ≡ batch dbscan: core mask, noise set, core partition."""
+    if ref is None:
+        ref = dbscan(pts, eps, min_pts, algorithm="fdbscan")
+    check_component_identical(stream_res.labels, stream_res.core_mask,
+                              ref.labels, ref.core_mask)
+    assert stream_res.n_clusters == ref.n_clusters
+    return ref
+
+
+def random_schedule(n, seed):
+    """A randomized insert schedule: 1..8 shuffled micro-batches plus a
+    merge decision per boundary."""
+    rng = np.random.default_rng(seed)
+    nb = int(rng.integers(1, 9))
+    cuts = (np.sort(rng.choice(np.arange(1, n), size=nb - 1, replace=False))
+            if nb > 1 else np.array([], int))
+    parts = [p for p in np.split(np.arange(n), cuts)]
+    rng.shuffle(parts)
+    merges = rng.integers(0, 2, size=len(parts)).astype(bool)
+    return parts, merges
+
+
+@pytest.mark.parametrize("dset,n,eps,minpts", SCENARIOS,
+                         ids=[s[0] for s in SCENARIOS])
+def test_randomized_schedules_match_batch(dset, n, eps, minpts):
+    pts = pointclouds.load(dset, n)
+    for seed in (0, 1):
+        parts, merges = random_schedule(n, seed)
+        h = StreamingDBSCAN(pts[parts[0]], eps, minpts)
+        acc = pts[parts[0]]
+        for part, force_merge in zip(parts[1:], merges[1:]):
+            h.insert(pts[part])
+            acc = np.concatenate([acc, pts[part]])
+            if force_merge:
+                h.merge()
+        assert_component_identical(h.snapshot(), acc, eps, minpts)
+        # the axiom oracle validates the border assignments too
+        snap = h.snapshot()
+        check_dbscan(acc, eps, minpts, np.asarray(snap.labels),
+                     np.asarray(snap.core_mask))
+
+
+def test_forced_merge_at_every_boundary():
+    """Merges are index-only: forcing one after every insert must not
+    perturb the labels at any intermediate state."""
+    pts = pointclouds.blobs(360, k=5, seed=3)
+    eps, minpts = 0.05, 8
+    parts, _ = random_schedule(len(pts), seed=7)
+    h = StreamingDBSCAN(pts[parts[0]], eps, minpts)
+    acc = pts[parts[0]]
+    for part in parts[1:]:
+        h.insert(pts[part])
+        acc = np.concatenate([acc, pts[part]])
+        before = h.snapshot()
+        h.merge()
+        assert h.n_delta == 0
+        after = h.snapshot()
+        assert (np.asarray(before.labels) == np.asarray(after.labels)).all()
+        assert_component_identical(after, acc, eps, minpts)
+
+
+@pytest.mark.fast
+def test_empty_start_matches_batch():
+    pts = pointclouds.blobs(240, k=4, seed=5)
+    eps, minpts = 0.05, 6
+    h = StreamingDBSCAN(None, eps, minpts)
+    for lo in range(0, len(pts), 80):
+        h.insert(pts[lo:lo + 80])
+    assert h.n_points == len(pts)
+    assert_component_identical(h.snapshot(), pts, eps, minpts)
+
+
+@pytest.mark.fast
+def test_border_promotion_regression():
+    """An insert that turns an existing *noise* point into core: the
+    bidirectional count update must promote it and repair its labels."""
+    eps, minpts = 0.1, 4
+    # three points in an eps-chain: each sees at most 3 neighbors
+    # (incl. self) < min_pts, so the whole set starts as noise
+    base = np.array([[0.0, 0.0], [0.07, 0.0], [0.14, 0.0]], np.float32)
+    h = StreamingDBSCAN(base, eps, minpts)
+    s0 = h.snapshot()
+    assert not np.asarray(s0.core_mask).any()
+    assert (np.asarray(s0.labels) == -1).all()
+    # one new point within eps of all three: the middle ones reach 4
+    # neighbors -> core (promotion of existing noise), one cluster forms
+    h.insert(np.array([[0.07, 0.05]], np.float32))
+    pts = np.concatenate([base, [[0.07, 0.05]]]).astype(np.float32)
+    ref = assert_component_identical(h.snapshot(), pts, eps, minpts)
+    assert np.asarray(ref.core_mask).any()          # promotion happened
+    assert h.snapshot().n_clusters == 1
+
+
+@pytest.mark.fast
+def test_promotion_bridges_two_clusters():
+    """Promoted points can merge two previously separate clusters — the
+    repair pass must propagate the union beyond the inserted batch."""
+    eps, minpts = 0.1, 4
+    blob = np.array([[0.0, 0.0], [0.03, 0.0], [-0.03, 0.0], [0.0, 0.03]],
+                    np.float32)
+    left, right = blob, blob + np.float32(0.6) * np.array([1, 0], np.float32)
+    # a sparse chain between the blobs: interior links see only 2 neighbors
+    # + self < min_pts, so the chain starts broken (two clusters)
+    chain = np.array([[x, 0.0] for x in
+                      (0.09, 0.18, 0.27, 0.36, 0.45, 0.54)], np.float32)
+    h = StreamingDBSCAN(np.concatenate([left, right, chain]), eps, minpts)
+    assert h.snapshot().n_clusters == 2
+    # thicken the interior: each link gains a neighbor, promotes to core,
+    # and the promoted chain density-connects left and right
+    thick = np.array([[x, 0.05] for x in (0.18, 0.27, 0.36, 0.45)],
+                     np.float32)
+    h.insert(thick)
+    pts = np.concatenate([left, right, chain, thick]).astype(np.float32)
+    ref = assert_component_identical(h.snapshot(), pts, eps, minpts)
+    assert ref.n_clusters == 1
+
+
+@pytest.mark.fast
+def test_query_is_read_only_and_consistent():
+    pts = pointclouds.blobs(300, k=3, seed=11)
+    eps, minpts = 0.05, 6
+    h = StreamingDBSCAN(pts[:200], eps, minpts)
+    h.insert(pts[200:])
+    before = np.asarray(h.snapshot().labels)
+    core = np.asarray(h.snapshot().core_mask)
+    # probing resident core points returns their own component
+    probe_idx = np.flatnonzero(core)[:8]
+    q = h.query(pts[probe_idx])
+    assert (q.labels >= 0).all()
+    assert q.would_be_core.all()
+    # the probe's rep matches the resident point's rep
+    assert (q.labels == h._labels[probe_idx]).all()
+    # a far-away probe is noise
+    far = h.query(np.full((1, 2), 50.0, np.float32))
+    assert far.labels[0] == -1 and not far.would_be_core[0]
+    # nothing moved
+    after = np.asarray(h.snapshot().labels)
+    assert (before == after).all()
+
+
+@pytest.mark.fast
+def test_dispatch_stream_plan_and_index_reuse():
+    pts = pointclouds.blobs(500, k=4, seed=2)
+    dispatch.clear_cache()
+    p1 = dispatch.plan(pts, 0.05, 8, algorithm="stream")
+    assert p1.backend == "stream"
+    assert p1.segs is not None
+    # a different (eps, min_pts) shares the same cached eps-independent
+    # index object — no rebuild across parameter sweeps
+    p2 = dispatch.plan(pts, 0.08, 4, algorithm="stream")
+    assert p2.segs is p1.segs and p2.tree is p1.tree
+    # ...and so does the plain fdbscan plan
+    p3 = dispatch.plan(pts, 0.05, 8, algorithm="fdbscan")
+    assert p3.segs is p1.segs
+    # one-shot execution through the unified entry point
+    res = dbscan(pts, 0.05, 8, algorithm="stream")
+    assert res.backend == "stream"
+    assert_component_identical(res, pts, 0.05, 8)
+    # handle construction reuses the cache too
+    h = dispatch.stream_handle(pts, 0.05, 8)
+    assert h._main.segs is p1.segs
+    assert_component_identical(h.snapshot(), pts, 0.05, 8)
+
+
+@pytest.mark.fast
+def test_auto_merge_policy():
+    pts = pointclouds.blobs(800, k=4, seed=9)
+    eps, minpts = 0.05, 8
+    h = StreamingDBSCAN(pts[:300], eps, minpts, merge_ratio=0.25)
+    # push the delta well past max(MERGE_MIN, 0.25 * 300): auto-merge fires
+    h.insert(pts[300:700])
+    assert h.n_merges == 1 and h.n_delta == 0 and h.n_main == 700
+    h.insert(pts[700:])                      # small delta: no merge
+    assert h.n_merges == 1 and h.n_delta == 100
+    assert_component_identical(h.snapshot(), pts, eps, minpts)
+
+
+@pytest.mark.fast
+def test_snapshot_star_mode():
+    pts = pointclouds.blobs(300, k=3, seed=4)
+    eps, minpts = 0.05, 8
+    h = StreamingDBSCAN(pts[:250], eps, minpts)
+    h.insert(pts[250:])
+    ref = dbscan(pts, eps, minpts, algorithm="fdbscan", star=True)
+    snap = h.snapshot(star=True)
+    core = np.asarray(ref.core_mask)
+    ls, lb = np.asarray(snap.labels), np.asarray(ref.labels)
+    assert (np.asarray(snap.core_mask) == core).all()
+    assert (ls[~core] == -1).all() and (lb[~core] == -1).all()
+    assert same_partition(ls[core], lb[core])
+
+
+def test_serve_loop_smoke():
+    """The serving loop runs end to end on a tiny stream and validates
+    its final snapshot against batch dbscan."""
+    from repro.launch import serve
+    stats = serve.main(["--dataset", "blobs", "--n", "600",
+                        "--warm-frac", "0.5", "--eps", "0.05",
+                        "--min-pts", "8", "--batch", "64", "--steps", "8",
+                        "--insert-frac", "0.5", "--validate"])
+    assert stats["n_points"] >= 300
+    assert stats["n_queried"] > 0
