@@ -92,6 +92,41 @@ def _inner(sizes, json_out):
     return records
 
 
+def _evals_only(sizes):
+    """Deterministic work counters for the sharded tree path (no timing,
+    no ring comparator) — the ``run.py --check`` regression gate."""
+    from repro.data import pointclouds
+    from repro.distributed.ring_dbscan import tree_dbscan_sharded
+    out = {}
+    for n in sizes:
+        pts = pointclouds.taxi_2d(n)
+        _, st = tree_dbscan_sharded(pts, EPS, MINPTS, with_stats=True)
+        out[f"n{n}"] = {"tree_distance_evals": st["distance_evals"],
+                        "tree_sweeps": st["n_sweeps"]}
+    print("EVALS_JSON=" + json.dumps(out))
+
+
+def measure_evals(sizes) -> dict:
+    """Run :func:`_evals_only` under 8 forced host devices; parsed dict."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count="
+                         f"{N_DEVICES}",
+               PYTHONPATH=os.path.join(repo, "src")
+               + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    cmd = [sys.executable, "-m", "benchmarks.bench_distributed",
+           "--evals-only", "--sizes", ",".join(str(n) for n in sizes)]
+    r = subprocess.run(cmd, env=env, cwd=repo, text=True,
+                       capture_output=True)
+    if r.returncode != 0:
+        sys.stderr.write(r.stderr)
+        raise RuntimeError("bench_distributed evals-only run failed")
+    for line in r.stdout.splitlines():
+        if line.startswith("EVALS_JSON="):
+            return json.loads(line[len("EVALS_JSON="):])
+    raise RuntimeError(f"no EVALS_JSON line in output:\n{r.stdout}")
+
+
 def run(sizes=(4096, 16384), quick: bool = False,
         json_out: str = "BENCH_distributed.json"):
     """Spawn the measurement under 8 forced host devices and relay output."""
@@ -118,11 +153,14 @@ def run(sizes=(4096, 16384), quick: bool = False,
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--inner", action="store_true")
+    ap.add_argument("--evals-only", action="store_true")
     ap.add_argument("--sizes", default="4096,16384")
     ap.add_argument("--json", default="BENCH_distributed.json")
     args = ap.parse_args()
     sizes = tuple(int(s) for s in args.sizes.split(","))
-    if args.inner:
+    if args.evals_only:
+        _evals_only(sizes)
+    elif args.inner:
         _inner(sizes, args.json)
     else:
         run(sizes, json_out=args.json)

@@ -68,41 +68,111 @@ def _measure_rounds(phases: dict, rounds: int = _ROUNDS) -> dict:
     return {k: float(np.median(v)) for k, v in acc.items()}
 
 
+def _setup(dset: str, n: int, eps: float, minpts: int):
+    """(segs, tree, core, labels0, vals0, fused_init, labels_fix, sweeps,
+    stats) — the shared fixture for timing and counter collection."""
+    import jax.numpy as jnp
+    pts = jnp.asarray(pointclouds.load(dset, n))
+    segs = grid.build_segments_densebox(pts, eps, minpts)
+    tree = lbvh.build_tree(segs.codes, segs.prim_lo, segs.prim_hi)
+    core, labels0, vals0, absorbed, _ = fdbscan._fused_first_pass(
+        tree, segs, eps, minpts)
+    fused_init = (vals0, absorbed)
+    labels_fix, sweeps, stats = fdbscan._sweep_to_fixpoint(
+        tree, segs, eps, core, labels0, collect_stats=True,
+        fused_init=fused_init)
+    return segs, tree, core, labels0, vals0, fused_init, labels_fix, \
+        sweeps, stats
+
+
+def _phase_predicates(segs, core, eps):
+    """(all, loose, core) predicate batches shared by timing and counters."""
+    import jax.numpy as jnp
+    nq = segs.n_points
+    return (traversal.intersects(traversal.sphere(eps)),
+            traversal.intersects(
+                traversal.sphere(eps),
+                ids=traversal._ids_from_mask(nq, ~segs.dense_pt)),
+            traversal.intersects(
+                traversal.sphere(eps),
+                ids=traversal._ids_from_mask(nq, core)))
+
+
+def _counter_traces(tree, segs, core, labels0, vals0, eps, minpts: int):
+    """(pre, sweep1, fused) traces — THE definition of the before/after
+    fusion loop-trip counters, shared by ``run`` (BENCH_traversal.json)
+    and ``counters`` (the --check gate) so they can never diverge."""
+    import jax.numpy as jnp
+    pred_all, pred_loose, pred_core = _phase_predicates(segs, core, eps)
+    ones = jnp.ones(segs.n_points, bool)
+    pre_tr = traversal.traverse(
+        tree, segs, pred_loose, traversal.CountVisitor(cap=minpts),
+        unroll=1)
+    sweep1_tr = traversal.traverse(
+        tree, segs, pred_core, traversal.MinLabelVisitor(labels0, core),
+        unroll=1)
+    fused_tr = traversal.traverse(
+        tree, segs, pred_all,
+        traversal.CountMinLabelVisitor(vals0, ones, cap=minpts - 1))
+    return pre_tr, sweep1_tr, fused_tr
+
+
+def counters(n: int = 4096, quick: bool = False, only=None) -> dict:
+    """Deterministic work counters only (no timing rounds) — the quantity
+    ``benchmarks/run.py --check`` gates regressions on. ``only`` (a set of
+    dataset names) overrides the quick/full scenario selection so the gate
+    re-measures exactly what the committed trajectory file covers."""
+    records = {}
+    if only is not None:
+        scenarios = [s for s in SCENARIOS if s[0] in only]
+    else:
+        scenarios = SCENARIOS[:2] if quick else SCENARIOS
+    for dset, eps, minpts_full in scenarios:
+        minpts = _scaled_minpts(minpts_full, n)
+        segs, tree, core, labels0, vals0, fused_init, _, sweeps, stats = \
+            _setup(dset, n, eps, minpts)
+        nq = segs.n_points
+        pre_tr, sweep1_tr, fused_tr = _counter_traces(
+            tree, segs, core, labels0, vals0, eps, minpts)
+        records[dset] = {
+            "n": int(nq), "eps": eps, "minpts": minpts,
+            "loop_iters_before_fusion": _sum_iters(pre_tr)
+                                        + _sum_iters(sweep1_tr),
+            "loop_iters_after_fusion": _sum_iters(fused_tr),
+            "n_sweeps": 1 + sweeps,
+            "sweep_iters_per_sweep": stats["iters_per_sweep"],
+            "sweep_evals_per_sweep": stats["evals_per_sweep"],
+        }
+    return records
+
+
 def run(n: int = 4096, quick: bool = False, json_out: str | None = None):
     import jax.numpy as jnp
     records = {}
     for dset, eps, minpts_full in (SCENARIOS[:2] if quick else SCENARIOS):
         minpts = _scaled_minpts(minpts_full, n)
-        pts = jnp.asarray(pointclouds.load(dset, n))
-        segs = grid.build_segments_densebox(pts, eps, minpts)
-        tree = lbvh.build_tree(segs.codes, segs.prim_lo, segs.prim_hi)
+        segs, tree, core, labels0, vals0, fused_init, labels_fix, sweeps, \
+            stats = _setup(dset, n, eps, minpts)
         nq = segs.n_points
         ones = jnp.ones(nq, bool)
-        core, labels0, vals0, absorbed, _ = fdbscan._fused_first_pass(
-            tree, segs, eps, minpts)
-        fused_init = (vals0, absorbed)
-        labels_fix, sweeps, stats = fdbscan._sweep_to_fixpoint(
-            tree, segs, eps, core, labels0, collect_stats=True,
-            fused_init=fused_init)
-
+        pred_all, pred_loose, pred_core = _phase_predicates(segs, core, eps)
         phases = {
             # the paper's comparator: FULL neighbor determination
-            "full": lambda: traversal.traverse(tree, segs, eps, vals0, ones,
-                                               cap=INT_MAX, mode="count"),
+            "full": lambda: traversal.traverse(
+                tree, segs, pred_all, traversal.CountVisitor(cap=INT_MAX)),
             # BEFORE fusion (seed shape): early-exit count over loose
             # points + first min-label sweep over core queries gathering
             # core values — exactly the seed's two single-work-unit walks
             "pre": lambda: traversal.traverse(
-                tree, segs, eps, vals0, ones, cap=minpts, mode="count",
-                query_ids=traversal._ids_from_mask(nq, ~segs.dense_pt),
+                tree, segs, pred_loose, traversal.CountVisitor(cap=minpts),
                 unroll=1),
             "sweep1": lambda: traversal.traverse(
-                tree, segs, eps, labels0, core, mode="minlabel",
-                query_ids=traversal._ids_from_mask(nq, core), unroll=1),
+                tree, segs, pred_core,
+                traversal.MinLabelVisitor(labels0, core), unroll=1),
             # AFTER fusion: one walk, count saturating at min_pts - 1
-            "fused": lambda: traversal.traverse(tree, segs, eps, vals0,
-                                                ones, cap=minpts - 1,
-                                                mode="count_minlabel"),
+            "fused": lambda: traversal.traverse(
+                tree, segs, pred_all,
+                traversal.CountMinLabelVisitor(vals0, ones, cap=minpts - 1)),
             "main": lambda: fdbscan._sweep_to_fixpoint(
                 tree, segs, eps, core, labels0, fused_init=fused_init)[0],
             "border": lambda: fdbscan._assign_borders(tree, segs, eps,
@@ -112,14 +182,8 @@ def run(n: int = 4096, quick: bool = False, json_out: str | None = None):
         t_full, t_pre, t_sweep1 = t["full"], t["pre"], t["sweep1"]
         t_fused, t_main, t_border = t["fused"], t["main"], t["border"]
 
-        pre_tr = traversal.traverse(
-            tree, segs, eps, vals0, ones, cap=minpts, mode="count",
-            query_ids=traversal._ids_from_mask(nq, ~segs.dense_pt), unroll=1)
-        sweep1_tr = traversal.traverse(
-            tree, segs, eps, labels0, core, mode="minlabel",
-            query_ids=traversal._ids_from_mask(nq, core), unroll=1)
-        fused_tr = traversal.traverse(tree, segs, eps, vals0, ones,
-                                      cap=minpts - 1, mode="count_minlabel")
+        pre_tr, sweep1_tr, fused_tr = _counter_traces(
+            tree, segs, core, labels0, vals0, eps, minpts)
         iters_before = _sum_iters(pre_tr) + _sum_iters(sweep1_tr)
         iters_after = _sum_iters(fused_tr)
 

@@ -22,18 +22,24 @@ def time_fn(fn, *args, warmup: int = 1, repeat: int = 3, **kw):
 
 
 def algorithms(include_gdbscan=True, include_tiled=True, include_auto=False):
-    from repro.core import dbscan, gdbscan
+    # everything routable goes through the stable top-level surface
+    # (repro.dbscan); only the comparator baselines reach deeper
+    import repro
+    from repro.core import gdbscan
     from repro.kernels import dbscan_tiled
     algos = {
-        "fdbscan": lambda p, e, m: dbscan(p, e, m, algorithm="fdbscan"),
+        "fdbscan": lambda p, e, m: repro.dbscan(p, e, m,
+                                                algorithm="fdbscan"),
         "fdbscan-densebox":
-            lambda p, e, m: dbscan(p, e, m, algorithm="fdbscan-densebox"),
+            lambda p, e, m: repro.dbscan(p, e, m,
+                                         algorithm="fdbscan-densebox"),
     }
     if include_tiled:
         algos["tiled-mxu"] = lambda p, e, m: dbscan_tiled(p, e, m)
     if include_auto:
         # the unified dispatcher: backend choice + plan cache across eps
-        algos["auto"] = lambda p, e, m: dbscan(p, e, m, algorithm="auto")
+        algos["auto"] = lambda p, e, m: repro.dbscan(p, e, m,
+                                                     algorithm="auto")
     if include_gdbscan:
         algos["gdbscan"] = gdbscan
     return algos

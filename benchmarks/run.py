@@ -2,23 +2,122 @@
 
 ``python -m benchmarks.run``          — smoke sizes (CI-friendly)
 ``python -m benchmarks.run --full``   — paper-scale sizes (n=16384 etc.)
+``python -m benchmarks.run --check``  — regression gate: re-measure the
+    *deterministic* work counters (traversal loop trips, sharded distance
+    evaluations) and fail if any regresses more than ``CHECK_THRESHOLD``x
+    against the committed ``BENCH_*.json`` trajectory files. Wall-clock
+    numbers are never gated (CI machines drift); counters cannot.
 
 Output: ``name,us_per_call,derived`` CSV lines.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+CHECK_THRESHOLD = 1.5
+
+
+def _check_ratio(failures: list, name: str, got: float, committed: float):
+    ratio = got / max(committed, 1)
+    status = "FAIL" if ratio > CHECK_THRESHOLD else "ok"
+    print(f"check,{name},{committed},{got},{ratio:.3f},{status}")
+    if ratio > CHECK_THRESHOLD:
+        failures.append(f"{name}: {committed} -> {got} "
+                        f"({ratio:.2f}x > {CHECK_THRESHOLD}x)")
+
+
+def check() -> None:
+    """The ``--check`` gate over the committed BENCH_*.json counters."""
+    failures: list[str] = []
+    print("check,name,committed,measured,ratio,status")
+
+    trav_path = os.path.join(REPO, "BENCH_traversal.json")
+    if os.path.exists(trav_path):
+        with open(trav_path) as f:
+            committed = json.load(f)
+        from . import bench_phase_cost
+        n = next(iter(committed.values()))["n"]
+        # re-measure exactly the committed scenario set; a committed
+        # scenario the suite no longer knows is a gate failure, not a
+        # silent skip
+        got = bench_phase_cost.counters(n=n, only=set(committed))
+        for dset in committed:
+            if dset not in got:
+                failures.append(f"traversal/{dset}: committed in "
+                                "BENCH_traversal.json but no longer "
+                                "measurable (scenario renamed/removed?)")
+                print(f"check,traversal/{dset},-,-,-,FAIL (unmeasured)")
+                continue
+            rec, ref = got[dset], committed[dset]
+            if (rec["eps"], rec["minpts"]) != (ref["eps"], ref["minpts"]):
+                failures.append(
+                    f"traversal/{dset}: workload drifted (committed "
+                    f"eps={ref['eps']}/minpts={ref['minpts']}, bench now "
+                    f"uses eps={rec['eps']}/minpts={rec['minpts']}) — "
+                    "regenerate BENCH_traversal.json")
+                continue
+            for key in ("loop_iters_before_fusion",
+                        "loop_iters_after_fusion"):
+                _check_ratio(failures, f"traversal/{dset}/{key}",
+                             rec[key], ref[key])
+            _check_ratio(failures, f"traversal/{dset}/sweep_iters_total",
+                         sum(rec["sweep_iters_per_sweep"]),
+                         sum(ref["sweep_iters_per_sweep"]))
+    else:
+        print("check,traversal,-,-,-,skipped (no BENCH_traversal.json)")
+
+    dist_path = os.path.join(REPO, "BENCH_distributed.json")
+    if os.path.exists(dist_path):
+        with open(dist_path) as f:
+            committed = json.load(f)
+        from . import bench_distributed
+        # gate on the smallest committed size only: counters are exact at
+        # any n, and CI shouldn't pay for the 16k+ collective programs
+        key = min(committed, key=lambda k: committed[k]["n"])
+        n = committed[key]["n"]
+        if (committed[key]["eps"], committed[key]["minpts"]) != \
+                (bench_distributed.EPS, bench_distributed.MINPTS):
+            failures.append(
+                f"distributed/n{n}: workload drifted (committed "
+                f"eps={committed[key]['eps']}/minpts="
+                f"{committed[key]['minpts']}, bench now uses "
+                f"eps={bench_distributed.EPS}/minpts="
+                f"{bench_distributed.MINPTS}) — regenerate "
+                "BENCH_distributed.json")
+        else:
+            got = bench_distributed.measure_evals((n,))
+            _check_ratio(failures, f"distributed/n{n}/tree_distance_evals",
+                         got[f"n{n}"]["tree_distance_evals"],
+                         committed[key]["tree_distance_evals"])
+    else:
+        print("check,distributed,-,-,-,skipped (no BENCH_distributed.json)")
+
+    if failures:
+        print("# REGRESSION GATE FAILED:", file=sys.stderr)
+        for f_ in failures:
+            print(f"#   {f_}", file=sys.stderr)
+        sys.exit(1)
+    print("# regression gate passed")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--check", action="store_true",
+                    help="regression-gate the deterministic counters "
+                         "against the committed BENCH_*.json files")
     ap.add_argument("--only", default=None,
                     help="comma list: minpts,eps,scaling,cosmo,memory,"
                          "phase,kernels,dist_evals,distributed,stream")
     args = ap.parse_args()
+    if args.check:
+        check()
+        return
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
 

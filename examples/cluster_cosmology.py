@@ -12,7 +12,7 @@ import time
 
 import numpy as np
 
-from repro.core import dbscan
+import repro
 from repro.core.grid import build_segments_densebox
 from repro.data import pointclouds
 
@@ -32,12 +32,12 @@ def main():
         row = [f"minpts={min_pts:3d}  dense-cell pts {100*dense_frac:5.1f}%"]
         for algo in ("fdbscan", "fdbscan-densebox"):
             t0 = time.time()
-            res = dbscan(pts, eps, min_pts, algorithm=algo)
+            res = repro.dbscan(pts, eps, min_pts, algorithm=algo)
             dt = time.time() - t0
             row.append(f"{algo}: {res.n_clusters:4d} halos {dt:6.2f}s")
         print("  " + " | ".join(row))
 
-    res = dbscan(pts, eps, 2)
+    res = repro.dbscan(pts, eps, 2)
     labels = np.asarray(res.labels)
     sizes = np.bincount(labels[labels >= 0])
     print(f"FoF mass function (top 5 halos): {sorted(sizes)[-5:][::-1]}")

@@ -1,11 +1,17 @@
-"""Quickstart: cluster 2-D points with the paper's two algorithms.
+"""Quickstart: the stable top-level ``repro`` surface.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Everything here uses only the package root's exports (``repro.dbscan``,
+``repro.plan``, ``repro.stream_handle``, ``repro.neighbors``,
+``repro.DBSCANResult``) — the API contract DESIGN.md §8.1 documents.
 """
 import numpy as np
 
-from repro.core import dbscan, dbscan_bruteforce_np
-from repro.core.validate import check_dbscan, same_partition
+import repro
+from repro.core.validate import (check_component_identical, check_dbscan,
+                                 same_partition)
+from repro.core import dbscan_bruteforce_np
 from repro.data import pointclouds
 
 
@@ -13,30 +19,29 @@ def main():
     pts = pointclouds.blobs(2000, k=6, seed=42)
     eps, min_pts = 0.04, 8
 
-    for algo in ("fdbscan", "fdbscan-densebox"):
-        res = dbscan(pts, eps, min_pts, algorithm=algo)
+    for algo in ("fdbscan", "fdbscan-densebox", "tiled"):
+        res = repro.dbscan(pts, eps, min_pts, algorithm=algo)
+        assert isinstance(res, repro.DBSCANResult)
         noise = int((np.asarray(res.labels) == -1).sum())
         print(f"{algo:18s}: {res.n_clusters} clusters, {noise} noise pts, "
               f"{res.n_sweeps} union-find sweeps")
         # validate against the DBSCAN axioms (oracle-backed)
         check_dbscan(pts, eps, min_pts, res.labels, res.core_mask)
 
-    # the MXU tile backend (Pallas kernels, interpret mode on CPU)
-    from repro.kernels import dbscan_tiled
-    res_t = dbscan_tiled(pts, eps, min_pts)
-    print(f"{'tiled (Pallas)':18s}: {res_t.n_clusters} clusters")
+    # parameter sweeps reuse one cached eps-independent index via plan()
+    p = repro.plan(pts, eps, min_pts, algorithm="fdbscan")
+    res = repro.dbscan(pts, eps, min_pts, query_plan=p)
+    print(f"{'planned (cached)':18s}: backend={res.backend}")
 
     # brute-force oracle agreement on the core partition
     ref_labels, ref_core = dbscan_bruteforce_np(pts, eps, min_pts)
-    for res in (dbscan(pts, eps, min_pts),):
-        assert (np.asarray(res.core_mask) == ref_core).all()
-        assert same_partition(np.asarray(res.labels)[ref_core],
-                              ref_labels[ref_core])
+    assert (np.asarray(res.core_mask) == ref_core).all()
+    assert same_partition(np.asarray(res.labels)[ref_core],
+                          ref_labels[ref_core])
     print("all backends agree with the brute-force oracle ✓")
 
     # --- streaming: online inserts + probe queries over a live index ---
-    from repro.core import dispatch
-    stream = dispatch.stream_handle(pts[:1500], eps, min_pts)
+    stream = repro.stream_handle(pts[:1500], eps, min_pts)
     stream.insert(pts[1500:1750])           # two micro-batches arrive...
     stream.insert(pts[1750:])
     probes = stream.query(pts[:5])          # read-only cluster assignment
@@ -44,11 +49,19 @@ def main():
           f"({stream.n_delta} in the delta tree), probe labels "
           f"{probes.labels.tolist()}")
     snap = stream.snapshot()                # ≡ batch dbscan on the union
-    batch = dbscan(pts, eps, min_pts, algorithm="fdbscan")
-    from repro.core.validate import check_component_identical
+    batch = repro.dbscan(pts, eps, min_pts, algorithm="fdbscan")
     check_component_identical(snap.labels, snap.core_mask,
                               batch.labels, batch.core_mask)
     print("streaming snapshot matches batch dbscan ✓")
+
+    # --- neighbor queries over the same shared index (DESIGN.md §8) ---
+    counts = repro.neighbors.neighbor_count(pts, eps)
+    nn = repro.neighbors.knn(pts, k=min_pts)
+    kth = np.asarray(nn.distances)[:, -1]
+    print(f"{'neighbors':18s}: mean |N_eps| = "
+          f"{float(np.asarray(counts).mean()):.1f}, "
+          f"median {min_pts}-NN radius = {float(np.median(kth)):.4f} "
+          f"(eps = {eps})")
 
 
 if __name__ == "__main__":

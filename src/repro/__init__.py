@@ -3,5 +3,29 @@
 JAX + Pallas reproduction and extension of Prokopenko, Lebrun-Grandie,
 Arndt: "Fast tree-based algorithms for DBSCAN for low-dimensional data on
 GPUs" (2021), embedded in a multi-pod training/serving framework.
+
+Stable public surface — everything an application needs lives here:
+
+  * :func:`dbscan`        — clustering with automatic backend selection
+                            (tree walk, MXU tiles, sharded multi-device,
+                            or a one-shot streaming snapshot);
+  * :func:`plan`          — backend decision + cached index build, for
+                            amortizing eps/min_pts parameter sweeps;
+  * :func:`stream_handle` — an online insert/query/snapshot handle over
+                            the same cached index;
+  * :mod:`neighbors`      — fixed-radius counts, k-nearest-neighbor
+                            queries, and raw visitor traversals over the
+                            shared tree index;
+  * :class:`DBSCANResult` — the result record every backend returns.
+
+Deeper layers (``repro.core.traversal``'s predicate/callback engine,
+``repro.distributed``, ``repro.stream``) stay importable for power users;
+see DESIGN.md.
 """
-__version__ = "1.0.0"
+from .core import DBSCANResult, dbscan, plan, stream_handle
+from .core import neighbors
+
+__all__ = ["DBSCANResult", "dbscan", "plan", "stream_handle", "neighbors",
+           "__version__"]
+
+__version__ = "1.1.0"

@@ -8,8 +8,10 @@ importable via ``fdbscan`` and ``kernels.ops``.
 from .fdbscan import DBSCANResult
 from .dispatch import dbscan, plan, Plan, stream_handle
 from .baselines import dbscan_bruteforce_np, gdbscan
-from . import dispatch, fdbscan, grid, lbvh, morton, traversal, unionfind, validate
+from . import (dispatch, fdbscan, grid, lbvh, morton, neighbors, traversal,
+               unionfind, validate)
 
 __all__ = ["DBSCANResult", "dbscan", "plan", "Plan", "stream_handle",
            "dbscan_bruteforce_np", "gdbscan", "dispatch", "fdbscan", "grid",
-           "lbvh", "morton", "traversal", "unionfind", "validate"]
+           "lbvh", "morton", "neighbors", "traversal", "unionfind",
+           "validate"]

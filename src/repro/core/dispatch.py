@@ -138,6 +138,11 @@ def plan(points, eps: float, min_pts: int,
     if eps < 0:
         raise ValueError(f"eps must be non-negative; got {eps}"
                          " (a negative eps would be squared away silently)")
+    if mesh is not None and algorithm not in ("auto", "sharded"):
+        raise ValueError(
+            f"mesh= is incompatible with algorithm={algorithm!r}: the "
+            f"{algorithm} backend is single-device and would silently "
+            "ignore it (use algorithm='sharded' or 'auto' to shard)")
     points = jnp.asarray(points)
     n, d = points.shape
     if mesh is not None and axis not in mesh.axis_names:
@@ -210,6 +215,13 @@ def dbscan(points, eps: float, min_pts: int, *, algorithm: str = "auto",
     p = query_plan if query_plan is not None else plan(points, eps, min_pts,
                                                        algorithm, mesh=mesh,
                                                        axis=axis)
+    if p.backend in ("tiled", "stream", "sharded") and frontier is not True:
+        raise ValueError(
+            f"frontier={frontier!r} is incompatible with the {p.backend} "
+            "backend: frontier restriction only applies to the single-"
+            "device tree-sweep backends and would silently be ignored "
+            "(drop the kwarg, or pick "
+            "algorithm='fdbscan'/'fdbscan-densebox')")
     if p.backend == "sharded":
         from repro.distributed.ring_dbscan import tree_dbscan_sharded
         if star:

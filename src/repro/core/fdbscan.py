@@ -134,8 +134,10 @@ def _compact_ids(mask_np: np.ndarray) -> jax.Array:
 def _gather_minlabel(tree, segs, eps, labels, gather_mask, ids,
                      node_mask=None):
     """One (possibly compacted/pruned) min-label sweep, full-width output."""
-    tr = traversal.traverse(tree, segs, eps, labels, gather_mask,
-                            query_ids=ids, mode="minlabel",
+    tr = traversal.traverse(tree, segs,
+                            traversal.intersects(traversal.sphere(eps),
+                                                 ids=ids),
+                            traversal.MinLabelVisitor(labels, gather_mask),
                             node_mask=node_mask)
     n = segs.n_points
     safe = jnp.where(ids >= 0, ids, jnp.int32(n))  # padding -> dropped
@@ -239,6 +241,7 @@ def _sweep_to_fixpoint(tree, segs, eps, core, labels0, *,
     # (still exact) gather-mask + node-mask frontier restriction
     cell_keys = _cell_keys(segs.pts, eps) if frontier and eps > 0 else None
     dual = None
+    gather_wide = None            # wide lanes' gather mask (split sweep 1)
     if frontier and fused_init is not None:
         # Split first sweep: queries that absorbed every initial value in
         # the fused pass gather changed-since-init points only (narrow);
@@ -257,17 +260,22 @@ def _sweep_to_fixpoint(tree, segs, eps, core, labels0, *,
             lane_wide = jnp.asarray(
                 np.where(ids_np >= 0, wide_np[np.maximum(ids_np, 0)], False))
             gather_mask = changed0
-            dual = dict(point_mask_wide=core, wide_lanes=lane_wide,
+            gather_wide = core
+            dual = dict(wide_lanes=lane_wide,
                         node_mask_wide=node_mask_core)
             node_mask = _frontier_node_mask(tree, segs, changed0)
     sweeps = 0
     stats = {"frontier_per_sweep": [], "active_per_sweep": [],
              "iters_per_sweep": [], "evals_per_sweep": []}
     while True:
-        tr = traversal.traverse(tree, segs, eps, labels, gather_mask,
-                                query_ids=ids, mode="minlabel",
-                                node_mask=node_mask, **(dual or {}))
+        tr = traversal.traverse(
+            tree, segs,
+            traversal.intersects(traversal.sphere(eps), ids=ids),
+            traversal.MinLabelVisitor(labels, gather_mask,
+                                      mask_wide=gather_wide),
+            node_mask=node_mask, **(dual or {}))
         dual = None               # only the first sweep may be split
+        gather_wide = None
         new, changed, changed_flags = _post_sweep(tree, segs, labels, core,
                                                   ids, tr.acc)
         sweeps += 1

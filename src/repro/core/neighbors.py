@@ -1,0 +1,169 @@
+"""Neighbor-query workloads over the predicate/callback engine.
+
+The redesigned traversal layer (DESIGN.md §8) makes the DBSCAN epilogues
+*instances* of a generic query engine; this module exposes the other
+workloads that engine now opens — the fixed-radius searches of
+Wang/Gu/Shun's parallel-DBSCAN framing and the k-nearest-neighbor graphs
+of KNN-DBSCAN (Chen et al.) — behind three entry points:
+
+  * :func:`neighbor_count`   — |N_r(q)| per query (early-exit capable);
+  * :func:`radius_visit`     — run *your own* visitor over every in-radius
+                               neighbor (the raw extensibility hook);
+  * :func:`knn`              — exact k nearest neighbors, optionally
+                               radius-capped (``nearest(k)`` predicates).
+
+All three route through :mod:`repro.core.dispatch`'s plan cache, so the
+(eps-independent) plain-FDBSCAN index is shared with ``dbscan`` runs and
+across repeated neighbor queries on the same point set. Queries may be the
+resident points themselves or an external batch (``query_pts=``), exactly
+like the clustering engine's halo/stream queries.
+
+Inputs outside the tree's reach — d not in (2, 3) (no Morton curve) or
+fewer than two points — fall back to an exact brute-force path with the
+same tie rules, so the API is total.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import traversal
+
+INT_MAX = traversal.INT_MAX
+
+
+class KNNResult(NamedTuple):
+    """k nearest neighbors per query, ascending by (distance, index).
+
+    indices:   (q, k) int32 neighbor ids in *original* point order; -1
+               pads slots beyond the reachable neighbor count (k > n, or a
+               radius cap excluded the rest).
+    distances: (q, k) euclidean distances (+inf on padded slots).
+
+    A resident query (``query_pts=None``) is its own nearest neighbor at
+    distance 0 — slice it off if self-matches are unwanted.
+    """
+    indices: jax.Array
+    distances: jax.Array
+
+
+def _tree_plan(points):
+    """The cached eps-independent plain-FDBSCAN index for ``points``."""
+    from . import dispatch
+    return dispatch.plan(points, 0.0, 1, algorithm="fdbscan")
+
+
+def _predicate_lanes(segs, query_pts):
+    """(ids, pts) for a resident-or-external predicate batch."""
+    if query_pts is None:
+        return None, None
+    return None, jnp.asarray(query_pts, segs.pts.dtype)
+
+
+def _scatter_resident(segs, per_lane):
+    """Map a sorted-order per-lane array back to original point order."""
+    n = segs.n_points
+    out_shape = (n,) + per_lane.shape[1:]
+    return jnp.zeros(out_shape, per_lane.dtype).at[segs.order].set(per_lane)
+
+
+def radius_visit(points, r: float, callback, carry=None, *,
+                 query_pts=None) -> traversal.Trace:
+    """Run ``callback`` over every neighbor within ``r`` of each query.
+
+    The raw engine hook: ``callback`` is any :class:`traversal.Visitor`
+    and the returned :class:`traversal.Trace` holds its final carry (in
+    the index's *sorted* lane order for resident queries — the visitor
+    sees sorted point ids ``j``; ``segs.order[j]`` maps them back).
+    Builds (or fetches) the cached tree index for ``points``.
+    """
+    points = jnp.asarray(points)
+    p = _tree_plan(points)
+    if p.tree is None:
+        raise ValueError("radius_visit needs a tree index (>= 2 points "
+                         "with d in (2, 3)); use neighbor_count/knn, whose "
+                         "brute-force fallbacks cover degenerate inputs")
+    ids, pts = _predicate_lanes(p.segs, query_pts)
+    return traversal.traverse(
+        p.tree, p.segs,
+        traversal.intersects(traversal.sphere(r), ids=ids, pts=pts),
+        callback, carry=carry)
+
+
+def neighbor_count(points, r: float, *, query_pts=None,
+                   cap: int = INT_MAX) -> jax.Array:
+    """|N_r(q)| per query point, saturated at ``cap`` (early exit).
+
+    Resident queries count themselves (|N_r| includes the center, as in
+    DBSCAN's core test); external queries count every resident match.
+    Results are in original point order (resident) or ``query_pts`` order.
+    """
+    points = jnp.asarray(points)
+    n, d = points.shape
+    if n < 2 or d not in (2, 3):
+        q = points if query_pts is None else jnp.asarray(query_pts)
+        d2 = jnp.sum((q[:, None, :] - points[None, :, :]) ** 2, -1)
+        r2 = jnp.asarray(r, points.dtype) ** 2
+        return jnp.minimum(jnp.sum(d2 <= r2, axis=1), cap).astype(jnp.int32)
+    p = _tree_plan(points)      # one plan fetch serves traverse + scatter
+    ids, pts = _predicate_lanes(p.segs, query_pts)
+    tr = traversal.traverse(
+        p.tree, p.segs,
+        traversal.intersects(traversal.sphere(r), ids=ids, pts=pts),
+        traversal.CountVisitor(cap=cap))
+    if query_pts is not None:
+        return tr.acc
+    return _scatter_resident(p.segs, tr.acc)
+
+
+def knn(points, k: int, *, query_pts=None, radius=None) -> KNNResult:
+    """Exact k nearest neighbors via the ``nearest(k)`` predicate.
+
+    Distance-bounded rope traversal: each lane prunes subtrees farther
+    than its current k-th best (shrinking ball), optionally capped at
+    ``radius``. Ties at the k-th distance resolve to the smaller original
+    index — identical to a stable sort of the brute-force distance row.
+    """
+    if k < 1:
+        raise ValueError(f"k must be >= 1; got {k}")
+    points = jnp.asarray(points)
+    n, d = points.shape
+    q = points if query_pts is None else jnp.asarray(query_pts, points.dtype)
+    if n < 2 or d not in (2, 3):
+        return _knn_brute(points, q, k, radius)
+    p = _tree_plan(points)
+    ids, pts = _predicate_lanes(p.segs, query_pts)
+    # id_map=segs.order makes the visitor select AND record by *original*
+    # index, so exact-distance tie sets at the k-th radius match a stable
+    # brute-force argsort (not just the ordering within the set)
+    tr = traversal.traverse(
+        p.tree, p.segs, traversal.nearest(k, r=radius, ids=ids, pts=pts),
+        traversal.KNNVisitor(k, id_map=p.segs.order))
+    idx, dist = tr.carry.ids, tr.carry.d2
+    if query_pts is None:
+        idx = _scatter_resident(p.segs, idx)
+        dist = _scatter_resident(p.segs, dist)
+    return KNNResult(indices=idx, distances=jnp.sqrt(dist))
+
+
+def _knn_brute(points, q, k: int, radius) -> KNNResult:
+    """Exact fallback with the same (d2, id) tie rule (host NumPy)."""
+    pts = np.asarray(points, np.float32)
+    qs = np.asarray(q, np.float32)
+    n = len(pts)
+    kk = min(k, n) if n else 0
+    diff = qs[:, None, :] - pts[None, :, :]
+    d2 = (diff * diff).sum(-1)
+    if radius is not None:
+        d2 = np.where(d2 <= np.float32(radius) ** 2, d2, np.inf)
+    idx = np.argsort(d2, axis=1, kind="stable")[:, :kk]
+    dd = np.take_along_axis(d2, idx, axis=1)
+    out_i = np.full((len(qs), k), -1, np.int32)
+    out_d = np.full((len(qs), k), np.inf, np.float32)
+    out_i[:, :kk] = np.where(np.isinf(dd), -1, idx)
+    out_d[:, :kk] = dd
+    return KNNResult(indices=jnp.asarray(out_i),
+                     distances=jnp.sqrt(jnp.asarray(out_d)))

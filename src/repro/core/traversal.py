@@ -1,44 +1,69 @@
-"""Batched stackless BVH traversal fused with DBSCAN epilogues.
+"""Predicate/callback BVH traversal engine fused with visitor epilogues.
 
-This is the heart of FDBSCAN: the tree walk and the clustering update are a
-single fused loop per query — neighbors are consumed *on the fly* and never
-materialized (the paper's O(n)-memory claim; DESIGN.md §3).
+This is the heart of FDBSCAN, redesigned the way the paper's framework
+(ArborX) exposes it: a *generic* fused-traversal engine
 
-GPU -> TPU mapping:
+    ``traverse(tree, segs, predicates, callback, carry) -> Trace``
+
+where a **predicate batch** describes the queries and their geometry —
+``intersects(sphere(eps))`` for fixed-radius search, ``nearest(k)`` for
+distance-bounded k-nearest-neighbor search — and a **callback** is a
+JAX-traceable visitor consuming matched neighbors *on the fly* over an
+arbitrary accumulator pytree (the ``carry``); neighbor lists are never
+materialized (the paper's O(n)-memory claim; DESIGN.md §3, §8).
+
+The DBSCAN epilogues that used to be a closed ``mode=`` string enum are
+now just visitor instances over this engine (DESIGN.md §8):
+
+  * :class:`CountVisitor`         — |N_eps(q)| with early exit at ``cap``;
+  * :class:`MinLabelVisitor`      — min gathered label over masked
+                                    neighbors (hook sweeps, border gather);
+  * :class:`CountMinLabelVisitor` — the fused first pass: count *and*
+                                    min-label candidate in one walk;
+  * :class:`KNNVisitor`           — the k-best (dist2, id) list that powers
+                                    ``repro.neighbors.knn``.
+
+Custom workloads implement the same four hooks (``init_carry`` /
+``visit`` / ``done`` / ``segment_done``) — see DESIGN.md §8 for the
+contract and why the K-unrolled dead-guarding survives arbitrary
+callbacks.
+
+GPU -> TPU mapping (unchanged by the redesign):
   * one CUDA thread per query  ->  one vmap lane per query; the vmapped
     ``lax.while_loop`` lowers to a single masked loop (lanes that finish go
     inert), the TPU analogue of a warp of independent traversals;
   * per-thread traversal stack  ->  precomputed ropes (``Tree.miss``), O(1)
     state per lane;
-  * early exit (``count >= minpts``)  ->  loop-mask condition;
+  * early exit  ->  the callback's ``done(carry)`` hook feeds the loop-mask
+    condition;
   * the paper's "hide leaves j < i" mask  ->  a range test on
     ``Tree.range_r`` (skip subtrees whose max primitive index is below the
-    query's own), used by the edge-once extraction mode.
+    query's own), via ``use_range_mask``.
 
 Fused single-pass engine (DESIGN.md §4):
-  * ``mode="count_minlabel"`` computes the neighbor count *and* the
-    min-neighbor-label candidate in one walk, collapsing core-point
-    preprocessing and the first main-phase sweep into a single traversal
-    (the paper's phase-fusion claim made real).
   * Each ``while_loop`` trip executes ``unroll`` work units (box tests or
-    member distances) instead of one, amortizing the loop-carried overhead
-    that otherwise dominates a one-unit-per-trip masked loop. Sub-steps are
-    dead-guarded so lanes freeze exactly where the one-unit engine would.
-  * Queries are addressed by an explicit ``query_ids`` vector, so frontier
-    sweeps can traverse a *compacted* active subset (ECL-CC-style active-set
-    restriction) instead of masking inert full-width lanes.
+    member distances) instead of one, amortizing the loop-carried overhead.
+    Sub-steps are dead-guarded — every state select is masked by the lane's
+    liveness — so lanes freeze exactly where the one-unit engine would,
+    for *any* callback.
+  * Queries are addressed by the predicate batch's explicit ``ids`` vector,
+    so frontier sweeps can traverse a *compacted* active subset
+    (ECL-CC-style active-set restriction) instead of masking inert
+    full-width lanes.
 
-External queries (DESIGN.md §6): ``query_pts`` decouples the query set from
-the tree's primitives — a lane traverses for an arbitrary point that is not
-(necessarily) resident in the index. The sharded distributed path runs
-eps-halo points received from other shards as external queries against the
-local tree; self-exclusion and the dense/query-rank shortcuts (which assume
-lane i <=> resident point i) are disabled for such lanes.
+External queries (DESIGN.md §6): ``intersects(sphere(eps), pts=...)``
+decouples the query set from the tree's primitives — a lane traverses for
+an arbitrary point that is not (necessarily) resident in the index. The
+sharded distributed path runs eps-halo points received from other shards
+as external queries against the local tree; the stream index chains one
+query batch across its two trees by threading the carry. External lanes
+have no resident identity, so self-exclusion and the dense/query-rank
+shortcuts (which assume lane i <=> resident point i) are disabled.
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -56,91 +81,389 @@ INT_MAX = jnp.iinfo(jnp.int32).max
 # masked sub-steps are pure overhead, so the default stays 1 there.
 DEFAULT_UNROLL = 4 if jax.default_backend() in ("tpu", "gpu") else 1
 
-MODES = ("count", "minlabel", "count_minlabel")
+
+# --------------------------------------------------------------------- #
+# predicates                                                            #
+# --------------------------------------------------------------------- #
+
+class Sphere(NamedTuple):
+    """Search geometry: a ball of radius ``r`` around each query point."""
+    r: Any
 
 
-class Trace(NamedTuple):
-    """Per-query traversal outputs (all shaped like ``query_ids``).
+def sphere(r) -> Sphere:
+    """The eps-ball geometry for :func:`intersects` predicates."""
+    return Sphere(r)
 
-    acc:   mode accumulator — the saturated neighbor count (incl. self) for
-           ``count``; the min gathered ``point_vals`` (init: the query's own
-           value) for ``minlabel``/``count_minlabel``.
-    hits:  matched neighbors *excluding* the query itself (mask-filtered in
-           the minlabel modes; partial when a pass early-exits or a dense
-           short-circuit fires).
-    evals: member distance evaluations — the paper's work metric.
-    iters: while_loop trips taken (after unrolling); the loop-overhead
-           metric that ``unroll`` amortizes.
+
+class Intersects(NamedTuple):
+    """A batch of fixed-radius queries (ArborX's ``intersects(sphere)``).
+
+    geometry: the shared :class:`Sphere` (its radius is a traced value —
+        eps sweeps reuse one compiled program).
+    ids: int32 sorted-order point indices; ``-1`` marks an inert (padding)
+        lane. ``None`` traverses every resident point.
+    pts: optional (k, d) *external* query coordinates (DESIGN.md §6). When
+        given, lane i traverses for ``pts[i]`` instead of a tree point and
+        ``ids`` only carries the inert-lane marker (-1 inert, anything
+        else active).
+    """
+    geometry: Sphere
+    ids: Any = None
+    pts: Any = None
+
+
+def intersects(geometry, ids=None, pts=None) -> Intersects:
+    """Fixed-radius predicate batch: ``intersects(sphere(eps))``."""
+    if not isinstance(geometry, Sphere):
+        geometry = Sphere(geometry)
+    return Intersects(geometry, ids, pts)
+
+
+class Nearest:
+    """A batch of k-nearest-neighbor queries (ArborX's ``nearest(k)``).
+
+    Traversal is *distance-bounded*: a lane's box tests and member tests
+    prune against ``min(r^2, worst-so-far)`` where worst-so-far is the
+    callback's current k-th best distance (``worst_d2`` hook), so the
+    search ball shrinks as better neighbors are found. ``r`` optionally
+    caps the search radius (``None`` = unbounded). ``k`` is static (it
+    sizes the carry); ``ids``/``pts`` work as in :class:`Intersects`.
+    """
+
+    def __init__(self, k: int, r=None, ids=None, pts=None):
+        self.k = int(k)
+        self.r = r
+        self.ids = ids
+        self.pts = pts
+
+    def tree_flatten(self):
+        return (self.r, self.ids, self.pts), self.k
+
+    @classmethod
+    def tree_unflatten(cls, k, children):
+        r, ids, pts = children
+        return cls(k, r=r, ids=ids, pts=pts)
+
+
+jax.tree_util.register_pytree_node_class(Nearest)
+
+
+def nearest(k: int, r=None, ids=None, pts=None) -> Nearest:
+    """k-NN predicate batch: ``nearest(k)``, optionally radius-capped."""
+    return Nearest(k, r=r, ids=ids, pts=pts)
+
+
+# --------------------------------------------------------------------- #
+# callback protocol                                                     #
+# --------------------------------------------------------------------- #
+
+class QueryCtx(NamedTuple):
+    """Per-lane engine context handed to every callback hook.
+
+    self_id: the lane's own sorted point index (-1 for external lanes —
+             self-exclusion tests are vacuously false there).
+    dense:   the query point lives in a dense segment (core by
+             construction under DenseBox).
+    rank:    the query's segment rank (``use_range_mask`` support).
+    wide:    this lane uses the callback's *wide* gather mask (the split
+             first sweep, DESIGN.md §4).
+    """
+    self_id: jax.Array
+    dense: jax.Array
+    rank: jax.Array
+    wide: jax.Array
+
+
+class AccHits(NamedTuple):
+    """The standard DBSCAN carry: a scalar accumulator + a match counter.
+
+    acc:  the visitor's accumulator — saturated neighbor count (incl.
+          self) for :class:`CountVisitor`; min gathered value for the
+          min-label visitors. Seeding ``acc`` via an explicit ``carry``
+          chains a traveling query across trees/shards (DESIGN.md §6, §7).
+    hits: matched neighbors *excluding* the query itself (mask-filtered by
+          the min-label visitors; partial when a pass early-exits or a
+          dense short-circuit fires).
     """
     acc: jax.Array
     hits: jax.Array
+
+
+class Trace(NamedTuple):
+    """Traversal outputs: the final callback carry + engine work counters.
+
+    carry: the callback's accumulator pytree, one entry per lane.
+    evals: member distance evaluations — the paper's work metric.
+    iters: while_loop trips taken (after unrolling); the loop-overhead
+           metric that ``unroll`` amortizes.
+
+    ``acc``/``hits`` forward into an :class:`AccHits` carry so the DBSCAN
+    epilogues read like the pre-redesign engine's outputs.
+    """
+    carry: Any
     evals: jax.Array
     iters: jax.Array
 
+    @property
+    def acc(self):
+        return self.carry.acc
 
-def traverse_impl(tree: Tree, segs: Segments, eps: float,
-             point_vals: jax.Array,
-             point_mask: jax.Array,
-             query_ids: jax.Array | None = None,
-             cap: int | jax.Array = INT_MAX,
-             mode: str = "count",
-             use_range_mask: bool = False,
-             node_mask: jax.Array | None = None,
-             point_mask_wide: jax.Array | None = None,
-             node_mask_wide: jax.Array | None = None,
-             wide_lanes: jax.Array | None = None,
-             query_pts: jax.Array | None = None,
-             query_init: jax.Array | None = None,
-             unroll: int = DEFAULT_UNROLL) -> Trace:
-    """Run one fused traversal per entry of ``query_ids``.
+    @property
+    def hits(self):
+        return self.carry.hits
 
-    query_ids: int32 sorted-order point indices; ``-1`` marks an inert
-        (padding) lane. ``None`` traverses every point.
-    query_pts: optional (k, d) *external* query coordinates (DESIGN.md §6).
-        When given, lane i traverses for ``query_pts[i]`` instead of a tree
-        point; ``query_ids`` then only carries the inert-lane marker (-1
-        inert, anything else active). External lanes have no resident
-        identity, so self-exclusion is off (every masked hit counts),
-        the dense-query shortcut is off, and ``use_range_mask`` is
-        rejected. The minlabel accumulator starts from ``query_init``
-        (per lane; INT_MAX when omitted) rather than the lane's own
-        ``point_vals`` entry — a traveling query chains its running min
-        across successive shard visits this way.
-    node_mask: optional (2m-1,) per-node flag; subtrees whose flag is False
-        are pruned as if their boxes missed. Frontier sweeps pass the
-        "subtree contains a changed point" flag (DESIGN.md §4) so lanes far
-        from any change die within a few box tests.
-    point_mask_wide / node_mask_wide / wide_lanes: optional second
-        (gather-mask, node-mask) pair selected per lane by the boolean
-        ``wide_lanes`` (aligned with ``query_ids``). The split first main
-        sweep runs narrow (changed-only) lanes and wide (full-core) lanes
-        in one walk (DESIGN.md §4).
 
-    mode="count":    acc = |N_eps(q)| (incl. self) saturated at ``cap``
-                     (early exit: the lane dies once ``acc`` reaches cap).
-    mode="minlabel": acc = min(point_vals[j]) over neighbors j with
-                     point_mask[j] (init: the query's own value); entering a
-                     *dense* segment stops at the first member hit (all
-                     members share one label — the paper's dense-cell
-                     short-circuit).
-    mode="count_minlabel": the fused first pass (DESIGN.md §4) — acc as in
-                     minlabel *and* hits = neighbor count saturated at
-                     ``cap`` in the same walk. The lane itself never exits
-                     early (the gather needs the full neighborhood), but
-                     the dense short-circuit fires for dense queries and
-                     for lanes whose count has saturated — one member hit
-                     still yields a dense cell's unified label, so the
-                     gather stays exact while the count work collapses to
-                     the paper's early-exit budget.
+class Visitor:
+    """Base callback: visits every predicate match of every live lane.
+
+    Hooks (all JAX-traceable, called per lane inside the vmapped loop):
+
+      init_carry(ids, external, segs) -> carry
+          Build the batch-wide initial accumulator pytree (leading dim =
+          lane count). Only used when ``traverse`` gets ``carry=None``;
+          callers chain multi-tree queries by passing the previous tree's
+          carry instead.
+      visit(carry, j, d2, hit, ctx) -> (carry, matched)
+          Consume one member: ``j`` is the sorted point index, ``d2`` the
+          squared distance, ``hit`` whether the predicate matched (the
+          hook runs unconditionally — dead lanes/misses must be masked
+          with ``jnp.where``, which keeps the K-unroll dead-guarding
+          intact). ``matched`` reports whether the visitor *accepted* the
+          neighbor (drives the dense-segment short-circuit).
+      done(carry, ctx) -> bool
+          Lane early-exit: a True lane stops traversing (feeds the
+          while-loop mask — the engine never asks again).
+      segment_done(carry, matched, seg_dense, ctx) -> bool
+          After a visit: may the rest of the current segment be skipped?
+          (The dense-cell short-circuit: all members of a dense segment
+          share one label and core status, so one accepted hit can stand
+          for the whole cell — paper §4.2.)
+
+    Subclasses must be registered as pytrees whose leaves are the arrays
+    the hooks close over (labels, masks, caps...) so the jitted engine
+    caches on visitor *structure*, not identity.
     """
-    if mode not in MODES:
-        raise ValueError(f"unknown traversal mode {mode!r}")
+
+    def init_carry(self, ids, external: bool, segs: Segments):
+        raise NotImplementedError
+
+    def visit(self, carry, j, d2, hit, ctx):
+        raise NotImplementedError
+
+    def done(self, carry, ctx):
+        return jnp.bool_(False)
+
+    def segment_done(self, carry, matched, seg_dense, ctx):
+        return jnp.bool_(False)
+
+
+@jax.tree_util.register_pytree_node_class
+class CountVisitor(Visitor):
+    """acc = |N_eps(q)| (incl. self) saturated at ``cap``; the lane dies
+    once ``acc`` reaches ``cap`` (the paper's min_pts early exit). hits
+    counts matches excluding the query itself."""
+
+    def __init__(self, cap=INT_MAX):
+        self.cap = cap
+
+    def tree_flatten(self):
+        return (self.cap,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    def init_carry(self, ids, external, segs):
+        z = jnp.zeros(ids.shape, jnp.int32)
+        return AccHits(acc=z, hits=z)
+
+    def visit(self, carry, j, d2, hit, ctx):
+        acc = jnp.minimum(carry.acc + jnp.where(hit, 1, 0), self.cap)
+        hits = carry.hits + jnp.where(hit & (j != ctx.self_id), 1, 0)
+        return AccHits(acc=acc, hits=hits), hit
+
+    def done(self, carry, ctx):
+        return carry.acc >= self.cap
+
+
+@jax.tree_util.register_pytree_node_class
+class MinLabelVisitor(Visitor):
+    """acc = min(vals[j]) over neighbors j with mask[j] (init: the query's
+    own value); entering a *dense* segment stops at the first accepted
+    member (all members share one label — the paper's dense-cell
+    short-circuit). ``mask_wide`` + the engine's ``wide_lanes`` run the
+    split first sweep's narrow/wide gather choice per lane."""
+
+    def __init__(self, vals, mask, mask_wide=None):
+        self.vals = vals
+        self.mask = mask
+        self.mask_wide = mask_wide
+
+    def tree_flatten(self):
+        return (self.vals, self.mask, self.mask_wide), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    def init_carry(self, ids, external, segs):
+        hits = jnp.zeros(ids.shape, jnp.int32)
+        if external:
+            return AccHits(acc=jnp.full(ids.shape, INT_MAX, jnp.int32),
+                           hits=hits)
+        safe = jnp.maximum(ids, jnp.int32(0))
+        return AccHits(acc=self.vals[safe], hits=hits)
+
+    def _accept(self, j, hit, ctx):
+        if self.mask_wide is not None:
+            return hit & jnp.where(ctx.wide, self.mask_wide[j], self.mask[j])
+        return hit & self.mask[j]
+
+    def visit(self, carry, j, d2, hit, ctx):
+        ok = self._accept(j, hit, ctx)
+        acc = jnp.where(ok, jnp.minimum(carry.acc, self.vals[j]), carry.acc)
+        hits = carry.hits + jnp.where(ok & (j != ctx.self_id), 1, 0)
+        return AccHits(acc=acc, hits=hits), ok
+
+    def segment_done(self, carry, matched, seg_dense, ctx):
+        return matched & seg_dense
+
+
+@jax.tree_util.register_pytree_node_class
+class CountMinLabelVisitor(MinLabelVisitor):
+    """The fused first pass (DESIGN.md §4) — acc as in
+    :class:`MinLabelVisitor` *and* hits = neighbor count saturated at
+    ``cap`` in the same walk. The lane itself never exits early (the
+    gather needs the full neighborhood), but the dense short-circuit
+    fires for dense queries and for lanes whose count has saturated —
+    one member hit still yields a dense cell's unified label, so the
+    gather stays exact while the count work collapses to the paper's
+    early-exit budget."""
+
+    def __init__(self, vals, mask, cap=INT_MAX):
+        super().__init__(vals, mask)
+        self.cap = cap
+
+    def tree_flatten(self):
+        return (self.vals, self.mask, self.cap), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    def visit(self, carry, j, d2, hit, ctx):
+        ok = hit & self.mask[j]
+        acc = jnp.where(ok, jnp.minimum(carry.acc, self.vals[j]), carry.acc)
+        hits = jnp.minimum(
+            carry.hits + jnp.where(ok & (j != ctx.self_id), 1, 0), self.cap)
+        return AccHits(acc=acc, hits=hits), ok
+
+    def segment_done(self, carry, matched, seg_dense, ctx):
+        return matched & seg_dense & (ctx.dense | (carry.hits >= self.cap))
+
+
+class KNNCarry(NamedTuple):
+    """Per-lane k-best list, ascending by (d2, id); empty slots are
+    (+inf, -1). ``ids`` are sorted-space point indices."""
+    d2: jax.Array   # (k,) per lane
+    ids: jax.Array  # (k,) per lane
+
+
+@jax.tree_util.register_pytree_node_class
+class KNNVisitor(Visitor):
+    """Maintains the k nearest neighbors per lane under a shrinking
+    distance bound (pairs with the :class:`Nearest` predicate).
+
+    Selection is lexicographic on (d2, id) — exactly a stable argsort of
+    the brute-force distance row — so ties at the k-th radius resolve
+    deterministically to the smaller index, and tie *sets* match brute
+    force. ``id_map`` remaps the engine's sorted point index before the
+    comparison and the carry (pass ``segs.order`` to select/record by
+    original index); ``None`` keeps sorted-space ids. ``worst_d2`` feeds
+    the engine's per-lane pruning bound: subtrees (and members) farther
+    than the current k-th best cannot improve the list. The query point
+    itself is a neighbor at d2 = 0 (callers drop it if unwanted)."""
+
+    def __init__(self, k: int, id_map=None):
+        self.k = int(k)
+        self.id_map = id_map
+
+    def tree_flatten(self):
+        return (self.id_map,), self.k
+
+    @classmethod
+    def tree_unflatten(cls, k, children):
+        return cls(k, id_map=children[0])
+
+    def init_carry(self, ids, external, segs):
+        n = ids.shape[0]
+        return KNNCarry(
+            d2=jnp.full((n, self.k), jnp.inf, segs.pts.dtype),
+            ids=jnp.full((n, self.k), -1, jnp.int32))
+
+    def worst_d2(self, carry):
+        return carry.d2[self.k - 1]
+
+    def visit(self, carry, j, d2, hit, ctx):
+        dd, ii = carry.d2, carry.ids
+        jid = j if self.id_map is None else self.id_map[j].astype(jnp.int32)
+        # slots strictly better than the candidate under (d2, id) order
+        better = (dd < d2) | ((dd == d2) & (ii < jid))
+        pos = jnp.sum(better.astype(jnp.int32))
+        ar = jnp.arange(self.k, dtype=jnp.int32)
+        d_sh, i_sh = jnp.roll(dd, 1), jnp.roll(ii, 1)
+        nd = jnp.where(ar < pos, dd, jnp.where(ar == pos, d2, d_sh))
+        ni = jnp.where(ar < pos, ii, jnp.where(ar == pos, jid, i_sh))
+        take = hit & (pos < self.k)
+        return KNNCarry(d2=jnp.where(take, nd, dd),
+                        ids=jnp.where(take, ni, ii)), take
+
+
+# --------------------------------------------------------------------- #
+# the engine                                                            #
+# --------------------------------------------------------------------- #
+
+def traverse_impl(tree: Tree, segs: Segments, predicates, callback,
+                  carry=None,
+                  node_mask: jax.Array | None = None,
+                  node_mask_wide: jax.Array | None = None,
+                  wide_lanes: jax.Array | None = None,
+                  use_range_mask: bool = False,
+                  unroll: int = DEFAULT_UNROLL) -> Trace:
+    """Run one fused traversal per predicate lane, driving ``callback``.
+
+    predicates: an :func:`intersects` or :func:`nearest` batch. Its
+        ``ids``/``pts`` select resident vs external queries and mark inert
+        (-1) padding lanes; its geometry sets the (initial) search radius.
+    callback: a :class:`Visitor`; its hooks consume matches on the fly
+        over the ``carry`` accumulator pytree.
+    carry: initial accumulator (leading dim = lane count). ``None`` asks
+        the callback (``init_carry``). Passing the previous tree's final
+        carry chains one query batch across several trees — the stream
+        index's two-level reads and the sharded path's traveling halo
+        queries (their running min rides the carry between shard visits).
+    node_mask: optional (2m-1,) per-node flag; subtrees whose flag is
+        False are pruned as if their boxes missed. Frontier sweeps pass
+        the "subtree contains a changed point" flag (DESIGN.md §4) so
+        lanes far from any change die within a few box tests.
+    node_mask_wide / wide_lanes: optional second node mask selected per
+        lane by the boolean ``wide_lanes``; lanes flagged wide also get
+        ``ctx.wide`` so a dual-mask visitor switches its gather mask
+        (the split first main sweep, DESIGN.md §4).
+    """
     n = segs.n_points
     m = segs.n_segments
     leaf_off = m - 1
-    eps2 = jnp.asarray(eps, segs.pts.dtype) ** 2
     pts = segs.pts
     root = jnp.int32(0 if m > 1 else leaf_off)  # m==1: the single leaf
+    is_nearest = isinstance(predicates, Nearest)
+    if is_nearest:
+        r2 = (jnp.asarray(jnp.inf, pts.dtype) if predicates.r is None
+              else jnp.asarray(predicates.r, pts.dtype) ** 2)
+    else:
+        r2 = jnp.asarray(predicates.geometry.r, pts.dtype) ** 2
+    query_ids, query_pts = predicates.ids, predicates.pts
     external = query_pts is not None
     if external:
         if use_range_mask:
@@ -151,12 +474,6 @@ def traverse_impl(tree: Tree, segs: Segments, eps: float,
         self_arr = jnp.full(query_ids.shape, -1, jnp.int32)   # never matches
         dense_arr = jnp.zeros(query_ids.shape, bool)
         rank_arr = jnp.zeros(query_ids.shape, jnp.int32)
-        if mode == "count":
-            acc0_arr = jnp.zeros(query_ids.shape, jnp.int32)
-        elif query_init is not None:
-            acc0_arr = query_init
-        else:
-            acc0_arr = jnp.full(query_ids.shape, INT_MAX, jnp.int32)
     else:
         if query_ids is None:
             query_ids = jnp.arange(n, dtype=jnp.int32)
@@ -165,58 +482,43 @@ def traverse_impl(tree: Tree, segs: Segments, eps: float,
         self_arr = query_ids
         dense_arr = segs.dense_pt[safe]
         rank_arr = segs.seg_of_point[safe]
-        acc0_arr = (jnp.zeros(query_ids.shape, jnp.int32)
-                    if mode == "count" else point_vals[safe])
-    minlab = mode in ("minlabel", "count_minlabel")
-    dual = wide_lanes is not None
-    if not dual:
+    if carry is None:
+        carry = callback.init_carry(query_ids, external, segs)
+    if wide_lanes is None:
         wide_lanes = jnp.zeros_like(query_ids, dtype=bool)
+    dual_nodes = node_mask_wide is not None
 
-    def one_query(qid, lane_wide, q, q_self, q_dense, q_rank, acc0):
+    def one_query(qid, lane_wide, q, q_self, q_dense, q_rank, carry0):
         lane_on = qid >= 0
+        ctx = QueryCtx(self_id=q_self, dense=q_dense, rank=q_rank,
+                       wide=lane_wide)
 
-        def live_of(node, acc):
-            live = node >= 0
-            if mode == "count":
-                live = live & (acc < cap)
-            return live
+        def bound2(carry):
+            """Per-lane squared search radius at this instant."""
+            if is_nearest:
+                return jnp.minimum(r2, callback.worst_d2(carry))
+            return r2
+
+        def live_of(node, carry):
+            return (node >= 0) & ~callback.done(carry, ctx)
 
         def step(state):
             """One unit of work; a no-op for lanes that already finished."""
-            node, ptr, acc, hits, evals = state
-            live = live_of(node, acc)
+            node, ptr, carry, evals = state
+            live = live_of(node, carry)
             node_safe = jnp.maximum(node, 0)
             is_member = live & (ptr >= 0)
+            bnd = bound2(carry)
 
             # ---- member step: one distance test against sorted point ptr --
             j = jnp.where(is_member, ptr, 0)
             diff = q - pts[j]
             d2 = jnp.sum(diff * diff)
-            hit = is_member & (d2 <= eps2)
+            hit = is_member & (d2 <= bnd)
             seg_id = jnp.where(node_safe >= leaf_off, node_safe - leaf_off, 0)
-            if mode == "count":
-                acc_m = jnp.minimum(acc + jnp.where(hit, 1, 0), cap)
-                hits_m = hits + jnp.where(hit & (j != q_self), 1, 0)
-                stop_seg = jnp.bool_(False)
-            else:
-                if dual:
-                    ok = hit & jnp.where(lane_wide, point_mask_wide[j],
-                                         point_mask[j])
-                else:
-                    ok = hit & point_mask[j]
-                acc_m = jnp.where(ok, jnp.minimum(acc, point_vals[j]), acc)
-                hits_m = hits + jnp.where(ok & (j != q_self), 1, 0)
-                # Dense segment: all members share one label & core status;
-                # the first hit tells us everything (paper §4.2). The fused
-                # pass additionally needs the *count*, but only up to its
-                # saturation point ``cap`` (= min_pts - 1): once a lane's
-                # count saturates — or the query is itself dense (core by
-                # construction) — the dense short-circuit re-arms, since
-                # one member hit still yields the cell's unified label.
-                stop_seg = ok & segs.dense_seg[seg_id]
-                if mode == "count_minlabel":
-                    hits_m = jnp.minimum(hits_m, cap)
-                    stop_seg = stop_seg & (q_dense | (hits_m >= cap))
+            carry_m, matched = callback.visit(carry, j, d2, hit, ctx)
+            stop_seg = callback.segment_done(carry_m, matched,
+                                             segs.dense_seg[seg_id], ctx)
             seg_done = (ptr + 1 >= segs.seg_end[seg_id]) | stop_seg
             member_next_node = jnp.where(seg_done, tree.miss[node_safe], node)
             member_next_ptr = jnp.where(seg_done, jnp.int32(-1), ptr + 1)
@@ -225,11 +527,11 @@ def traverse_impl(tree: Tree, segs: Segments, eps: float,
             is_leaf = node_safe >= leaf_off
             seg = jnp.where(is_leaf, node_safe - leaf_off, 0)
             bd2 = _box_dist2(q, tree.box_lo[node_safe], tree.box_hi[node_safe])
-            overlap = bd2 <= eps2
+            overlap = bd2 <= bnd
             if use_range_mask:
                 overlap = overlap & (tree.range_r[node_safe] >= q_rank)
             if node_mask is not None:
-                if dual and node_mask_wide is not None:
+                if dual_nodes:
                     overlap = overlap & jnp.where(lane_wide,
                                                   node_mask_wide[node_safe],
                                                   node_mask[node_safe])
@@ -252,44 +554,47 @@ def traverse_impl(tree: Tree, segs: Segments, eps: float,
 
             node_new = jnp.where(is_member, member_next_node, node_next_node)
             ptr_new = jnp.where(is_member, member_next_ptr, node_next_ptr)
-            acc_new = jnp.where(is_member, acc_m, acc)
-            hits_new = jnp.where(is_member, hits_m, hits)
+            carry_new = jax.tree.map(
+                lambda cm, c: jnp.where(is_member, cm, c), carry_m, carry)
             evals_new = evals + jnp.where(is_member, 1, 0)
             # freeze finished lanes so unrolled sub-steps are no-ops
             return (jnp.where(live, node_new, node),
                     jnp.where(live, ptr_new, ptr),
-                    jnp.where(live, acc_new, acc),
-                    jnp.where(live, hits_new, hits),
+                    jax.tree.map(lambda cn, c: jnp.where(live, cn, c),
+                                 carry_new, carry),
                     jnp.where(live, evals_new, evals))
 
         def cond(state):
-            node, ptr, acc, hits, evals, iters = state
-            return live_of(node, acc)
+            node, ptr, carry, evals, iters = state
+            return live_of(node, carry)
 
         def body(state):
-            node, ptr, acc, hits, evals, iters = state
-            inner = (node, ptr, acc, hits, evals)
+            node, ptr, carry, evals, iters = state
+            inner = (node, ptr, carry, evals)
             for _ in range(unroll):
                 inner = step(inner)
             return (*inner, iters + 1)
 
         start = jnp.where(lane_on, root, jnp.int32(-1))
-        node, ptr, acc, hits, evals, iters = lax.while_loop(
-            cond, body, (start, jnp.int32(-1), acc0, jnp.int32(0),
-                         jnp.int32(0), jnp.int32(0)))
-        return Trace(acc=acc, hits=hits, evals=evals, iters=iters)
+        node, ptr, carry, evals, iters = lax.while_loop(
+            cond, body, (start, jnp.int32(-1), carry0, jnp.int32(0),
+                         jnp.int32(0)))
+        return Trace(carry=carry, evals=evals, iters=iters)
 
     return jax.vmap(one_query)(query_ids, wide_lanes, q_arr, self_arr,
-                               dense_arr, rank_arr, acc0_arr)
+                               dense_arr, rank_arr, carry)
 
 
 # The jitted entry point. Callers already inside a traced context (the
 # sharded distributed kernel runs under shard_map) use ``traverse_impl``
 # directly: a nested jit there would launch a separate per-device module
 # whose collective-free body still participates in the host-device
-# rendezvous machinery and can wedge the outer collectives.
-traverse = partial(jax.jit, static_argnames=("mode", "use_range_mask",
-                                             "unroll"))(traverse_impl)
+# rendezvous machinery and can wedge the outer collectives. Predicates and
+# callbacks are pytrees — their array leaves (labels, masks, caps, eps)
+# are traced operands, their structure (visitor class, k) is the cache
+# key — so parameter sweeps reuse one compiled program per visitor shape.
+traverse = partial(jax.jit,
+                   static_argnames=("use_range_mask", "unroll"))(traverse_impl)
 
 
 def tree_left(tree: Tree, node):
@@ -304,6 +609,10 @@ def _ids_from_mask(n: int, query_active) -> jax.Array:
     return jnp.where(query_active, ids, jnp.int32(-1))
 
 
+# --------------------------------------------------------------------- #
+# DBSCAN epilogue helpers (visitor instances over the engine)           #
+# --------------------------------------------------------------------- #
+
 def count_neighbors(tree: Tree, segs: Segments, eps: float, cap: int,
                     query_active=None) -> jax.Array:
     """|N_eps(x)| per sorted point, saturated at ``cap`` (early exit)."""
@@ -314,10 +623,9 @@ def count_neighbors_with_work(tree: Tree, segs: Segments, eps: float,
                               cap: int, query_active=None):
     """(counts, distance_evaluations) — the paper's work metric."""
     n = segs.n_points
-    dummy = jnp.zeros((n,), jnp.int32)
-    tr = traverse(tree, segs, eps, dummy, jnp.ones(n, bool),
-                  query_ids=_ids_from_mask(n, query_active),
-                  cap=cap, mode="count")
+    tr = traverse(tree, segs,
+                  intersects(sphere(eps), ids=_ids_from_mask(n, query_active)),
+                  CountVisitor(cap=cap))
     return tr.acc, tr.evals
 
 
@@ -329,9 +637,10 @@ def minlabel_sweep(tree: Tree, segs: Segments, eps: float, labels: jax.Array,
     its own ``labels`` value (no-op hook). ``labels`` must already be
     consistent within dense segments (the caller re-unifies after updates).
     """
-    tr = traverse(tree, segs, eps, labels, gather_mask,
-                  query_ids=_ids_from_mask(segs.n_points, query_active),
-                  mode="minlabel")
+    tr = traverse(tree, segs,
+                  intersects(sphere(eps),
+                             ids=_ids_from_mask(segs.n_points, query_active)),
+                  MinLabelVisitor(labels, gather_mask))
     # inactive lanes carry no query identity inside the engine; restore
     # the own-value contract here where lane i <=> point i
     acc = jnp.where(query_active, tr.acc, labels)
@@ -352,8 +661,8 @@ def fused_count_minlabel(tree: Tree, segs: Segments, eps: float,
     """
     if point_mask is None:
         point_mask = jnp.ones(segs.n_points, bool)
-    return traverse(tree, segs, eps, point_vals, point_mask,
-                    query_ids=query_ids, cap=cap, mode="count_minlabel")
+    return traverse(tree, segs, intersects(sphere(eps), ids=query_ids),
+                    CountMinLabelVisitor(point_vals, point_mask, cap=cap))
 
 
 def border_gather(tree: Tree, segs: Segments, eps: float, root_labels,
@@ -361,9 +670,10 @@ def border_gather(tree: Tree, segs: Segments, eps: float, root_labels,
     """Min core-neighbor root label per non-core query; INT_MAX if none."""
     sentinel = jnp.full_like(root_labels, INT_MAX)
     vals = jnp.where(core_mask, root_labels, sentinel)
-    tr = traverse(tree, segs, eps, vals, core_mask,
-                  query_ids=_ids_from_mask(segs.n_points, query_active),
-                  mode="minlabel")
+    tr = traverse(tree, segs,
+                  intersects(sphere(eps),
+                             ids=_ids_from_mask(segs.n_points, query_active)),
+                  MinLabelVisitor(vals, core_mask))
     # active lanes start from vals[q] (INT_MAX for non-core queries), so
     # acc == INT_MAX <=> no core neighbor (noise); inactive lanes return
     # their own vals[q] to keep the lane i <=> point i contract.

@@ -3,8 +3,8 @@
 The paper's exact datasets (NGSIM trajectories, PortoTaxi, 3D Road, HACC
 cosmology) are not redistributable in this offline container; these
 generators produce statistically analogous surrogates with matched density
-regimes (DESIGN.md §8.5). The benchmark harness accepts real files when
-present (``--data path.npy``).
+regimes. The benchmark harness accepts real files when present
+(``--data path.npy``).
 
 * ``trajectories_2d``  — NGSIM-like: a few extremely dense lane strips
   (>95% of points fall into dense cells, the regime where DenseBox wins).

@@ -256,9 +256,13 @@ def _sharded_programs(mesh, axis: str, n: int, n_pad: int, eps: float,
         def count_body(i, carry):
             blk_pts, blk_on, blk_cnt, blk_ev = carry
             qids, active = halo_ids(idx, blk_pts, blk_on)
+            # the traveling slab is an external-predicate batch against the
+            # resident tree; only halo lanes (qids >= 0) traverse
             tr = traversal.traverse_impl(
-                tree, segs, eps, zero_i, idx["lvalid"], query_ids=qids,
-                query_pts=blk_pts, cap=min_pts, mode="count")
+                tree, segs,
+                traversal.intersects(traversal.sphere(eps), ids=qids,
+                                     pts=blk_pts),
+                traversal.CountVisitor(cap=min_pts))
             blk_cnt = blk_cnt + jnp.where(active, tr.acc, 0)
             return rotate(blk_pts, blk_on, blk_cnt, blk_ev + tr.evals)
 
@@ -277,10 +281,15 @@ def _sharded_programs(mesh, axis: str, n: int, n_pad: int, eps: float,
         def ring_step(i, carry):
             blk_pts, on, blk_acc, blk_ev = carry
             qids, active = halo_ids(idx, blk_pts, on)
+            # seed the carry with the traveling partial min: a query chains
+            # its running answer across successive shard visits this way
             tr = traversal.traverse_impl(
-                idx["tree"], idx["segs"], eps, point_vals, gather_mask,
-                query_ids=qids, query_pts=blk_pts, query_init=blk_acc,
-                mode="minlabel")
+                idx["tree"], idx["segs"],
+                traversal.intersects(traversal.sphere(eps), ids=qids,
+                                     pts=blk_pts),
+                traversal.MinLabelVisitor(point_vals, gather_mask),
+                carry=traversal.AccHits(acc=blk_acc,
+                                        hits=jnp.zeros_like(blk_acc)))
             blk_acc = jnp.where(active, tr.acc, blk_acc)
             return rotate(blk_pts, on, blk_acc, blk_ev + tr.evals)
 

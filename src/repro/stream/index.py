@@ -14,11 +14,12 @@ scratch per call). Three operations:
 LSM-style two-level index: one large immutable *main* LBVH (built at
 construction or at the last merge) plus one small *delta* LBVH over the
 points inserted since.  Every operation traverses both trees with the
-engine's external-query mode (``traversal.traverse(query_pts=...)``,
-chaining the running min through ``query_init`` exactly like the sharded
-path chains across shards); when the delta outgrows ``merge_ratio`` times
-the main, a jitted merge re-sorts the union along the Morton curve and
-rebuilds a single main tree.
+engine's external predicate batches
+(``traversal.intersects(sphere(eps), pts=...)``, DESIGN.md §8), chaining
+the running accumulator through the visitor carry exactly like the
+sharded path chains across shards; when the delta outgrows
+``merge_ratio`` times the main, a jitted merge re-sorts the union along
+the Morton curve and rebuilds a single main tree.
 
 Core-count bookkeeping is *bidirectional*: a new point counts its resident
 neighbors (main + delta + within-batch), and every resident point within
@@ -450,9 +451,9 @@ class StreamingDBSCAN:
              mask: np.ndarray, init: np.ndarray, mode: str,
              cap: int = INT_MAX):
         """One external-query pass against one level; (acc, hits) sliced
-        to the query count. ``init`` chains the running min across levels
-        (the two-tree analogue of the sharded path's traveling
-        ``query_init``)."""
+        to the query count. ``init`` seeds the visitor's carry, chaining
+        the running accumulator across levels (the two-tree analogue of
+        the sharded path's traveling carry)."""
         k = len(qpts)
         gsafe = np.maximum(lvl.gids, 0)
         valid = lvl.gids >= 0
@@ -480,12 +481,20 @@ class StreamingDBSCAN:
         if mode != "count":         # count needs every resident; the
             node_mask = lbvh.propagate_leaf_flags(   # others prune to mask
                 lvl.tree, jnp.asarray(pm))
-        tr = traversal.traverse(lvl.tree, lvl.segs, self.eps,
-                                jnp.asarray(pv), jnp.asarray(pm),
-                                query_ids=jnp.asarray(ids),
-                                query_pts=jnp.asarray(qp),
-                                query_init=jnp.asarray(ini),
-                                cap=cap, mode=mode, node_mask=node_mask)
+        if mode == "count":
+            cb = traversal.CountVisitor(cap=cap)
+        elif mode == "minlabel":
+            cb = traversal.MinLabelVisitor(jnp.asarray(pv), jnp.asarray(pm))
+        else:
+            cb = traversal.CountMinLabelVisitor(jnp.asarray(pv),
+                                                jnp.asarray(pm), cap=cap)
+        preds = traversal.intersects(traversal.sphere(self.eps),
+                                     ids=jnp.asarray(ids),
+                                     pts=jnp.asarray(qp))
+        carry = traversal.AccHits(acc=jnp.asarray(ini),
+                                  hits=jnp.zeros(pad, jnp.int32))
+        tr = traversal.traverse(lvl.tree, lvl.segs, preds, cb, carry=carry,
+                                node_mask=node_mask)
         return (np.asarray(tr.acc)[:k].copy(),
                 np.asarray(tr.hits)[:k].astype(np.int64))
 

@@ -15,6 +15,7 @@ FAST_MODULES = {
     "test_dbscan",
     "test_traversal_fused",
     "test_dispatch",
+    "test_neighbors",
 }
 
 

@@ -1,0 +1,120 @@
+"""Generate the golden equivalence fixtures (tests/golden/golden.npz).
+
+The fixtures were produced at the pre-redesign commit (the last `mode=`
+string-enum traversal engine) and pin the exact outputs — labels, core
+mask, neighbor counts, sweep counts — that the predicate/callback engine
+must reproduce bit-for-bit on every backend (tests/test_golden.py).
+
+Uses only surfaces that are stable across the redesign (the top-level
+``dbscan`` / ``stream_handle`` entry points and the ``count_neighbors``
+helper), so re-running it at any later commit must regenerate an
+identical file:
+
+    PYTHONPATH=src:tests python tests/golden/make_golden.py
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+REPO = os.path.dirname(os.path.dirname(HERE))
+OUT = os.path.join(HERE, "golden.npz")
+
+# (dataset, n, eps, min_pts) — the five pointclouds scenario regimes
+SCENARIOS = [
+    ("ngsim_like", 800, 0.01, 5),
+    ("portotaxi_like", 800, 0.02, 5),
+    ("road3d_like", 800, 0.01, 5),
+    ("hacc_like", 800, 0.05, 5),
+    ("blobs", 800, 0.05, 8),
+]
+
+# sharded runs in a subprocess with 8 forced host devices (XLA_FLAGS must
+# precede jax import); two regimes bound the runtime while still covering
+# both dimensionalities of the halo exchange
+SHARDED = {"portotaxi_like", "hacc_like"}
+
+_SHARDED_BODY = """
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+import numpy as np
+from repro.core import dbscan
+from repro.data import pointclouds
+pts = pointclouds.load({dset!r}, {n})
+res = dbscan(pts, {eps}, {mp}, algorithm="sharded")
+np.savez({out!r}, labels=np.asarray(res.labels),
+         core=np.asarray(res.core_mask),
+         n_clusters=np.int32(res.n_clusters),
+         n_sweeps=np.int32(res.n_sweeps))
+"""
+
+
+def _in_process_cases(dset, n, eps, mp):
+    from repro.core import dbscan, stream_handle, traversal
+    from repro.core.dispatch import plan
+    from repro.data import pointclouds
+
+    pts = pointclouds.load(dset, n)
+    out = {}
+    for algo in ("fdbscan", "fdbscan-densebox", "tiled"):
+        res = dbscan(pts, eps, mp, algorithm=algo)
+        out[f"{dset}/{algo}/labels"] = np.asarray(res.labels)
+        out[f"{dset}/{algo}/core"] = np.asarray(res.core_mask)
+        out[f"{dset}/{algo}/n_clusters"] = np.int32(res.n_clusters)
+        out[f"{dset}/{algo}/n_sweeps"] = np.int32(res.n_sweeps)
+
+    # streaming: bootstrap + two micro-batches + forced merge — the
+    # external-query (query_pts/query_init chained two-tree) path
+    cut = n * 5 // 8
+    h = stream_handle(pts[:cut], eps, mp)
+    h.insert(pts[cut:cut + (n - cut) // 2])
+    h.insert(pts[cut + (n - cut) // 2:])
+    h.merge()
+    res = h.snapshot()
+    out[f"{dset}/stream/labels"] = np.asarray(res.labels)
+    out[f"{dset}/stream/core"] = np.asarray(res.core_mask)
+    out[f"{dset}/stream/n_clusters"] = np.int32(res.n_clusters)
+
+    # engine-level golden: exact (uncapped) neighbor counts over the plain
+    # tree index, in original point order
+    p = plan(pts, eps, mp, algorithm="fdbscan")
+    counts_sorted = np.asarray(traversal.count_neighbors(
+        p.tree, p.segs, eps, cap=traversal.INT_MAX))
+    counts = np.zeros(n, np.int64)
+    counts[np.asarray(p.segs.order)] = counts_sorted
+    out[f"{dset}/counts"] = counts
+    return out
+
+
+def _sharded_case(dset, n, eps, mp):
+    tmp = os.path.join(HERE, f"_sharded_{dset}.npz")
+    code = textwrap.dedent(_SHARDED_BODY).format(dset=dset, n=n, eps=eps,
+                                                 mp=mp, out=tmp)
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=900, env=env)
+    if r.returncode != 0:
+        raise RuntimeError(f"sharded golden for {dset} failed:\n{r.stderr}")
+    with np.load(tmp) as z:
+        out = {f"{dset}/sharded/{k}": z[k] for k in z.files}
+    os.remove(tmp)
+    return out
+
+
+def main():
+    out = {}
+    for dset, n, eps, mp in SCENARIOS:
+        print(f"[golden] {dset} n={n} eps={eps} mp={mp}", flush=True)
+        out.update(_in_process_cases(dset, n, eps, mp))
+        if dset in SHARDED:
+            out.update(_sharded_case(dset, n, eps, mp))
+    np.savez_compressed(OUT, **out)
+    print(f"[golden] wrote {OUT} ({len(out)} arrays)")
+
+
+if __name__ == "__main__":
+    main()

@@ -112,3 +112,33 @@ def test_unknown_algorithm_raises():
     with pytest.raises(ValueError):
         dispatch.plan(separated_points(50, 2, eps=0.1, seed=0), 0.1, 5,
                       algorithm="nope")
+
+
+def test_mesh_with_single_device_backend_raises():
+    # these backends are single-device: a mesh= would silently be ignored
+    import jax
+    pts = separated_points(120, 2, eps=0.1, seed=4)
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    for algo in ("stream", "tiled", "fdbscan", "fdbscan-densebox"):
+        with pytest.raises(ValueError, match="mesh"):
+            dbscan(pts, 0.1, 5, algorithm=algo, mesh=mesh)
+        with pytest.raises(ValueError, match="mesh"):
+            dispatch.plan(pts, 0.1, 5, algorithm=algo, mesh=mesh)
+
+
+def test_frontier_with_non_tree_backend_raises():
+    # frontier restriction only exists on the single-device tree-sweep
+    # backends; everywhere else the kwarg would silently be ignored
+    pts = separated_points(120, 2, eps=0.1, seed=5)
+    with pytest.raises(ValueError, match="frontier"):
+        dbscan(pts, 0.1, 5, algorithm="tiled", frontier=False)
+    with pytest.raises(ValueError, match="frontier"):
+        dbscan(pts, 0.1, 5, frontier=False)  # auto resolves to tiled here
+    with pytest.raises(ValueError, match="frontier"):
+        dbscan(pts, 0.1, 5, algorithm="stream", frontier=False)
+    with pytest.raises(ValueError, match="frontier"):
+        dbscan(pts, 0.1, 5, algorithm="sharded", frontier=False)
+    # the tree backends accept it, through auto dispatch too
+    big = separated_points(1100, 2, eps=0.05, seed=6)
+    assert dbscan(big, 0.05, 5, frontier=False).backend in (
+        "fdbscan", "fdbscan-densebox")

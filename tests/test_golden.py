@@ -1,0 +1,116 @@
+"""Golden equivalence: the predicate/callback engine vs the pre-redesign
+``mode=`` enum engine, pinned bit-for-bit.
+
+``tests/golden/golden.npz`` was generated at the last pre-redesign commit
+(see tests/golden/make_golden.py); these tests re-run every backend on the
+five scenario datasets and assert byte equality on labels, core masks,
+neighbor counts, and sweep counts — including the external-query/halo
+path (stream's chained two-tree reads, sharded's traveling slabs) and the
+frontier-compacted sweep path (the tree backends' default).
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import dbscan, stream_handle, traversal
+from repro.core.dispatch import plan
+from repro.data import pointclouds
+
+from test_ring_tree import run_with_devices
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+GOLDEN = np.load(os.path.join(HERE, "golden", "golden.npz"))
+
+# (dataset, n, eps, min_pts) — must match tests/golden/make_golden.py
+SCENARIOS = [
+    ("ngsim_like", 800, 0.01, 5),
+    ("portotaxi_like", 800, 0.02, 5),
+    ("road3d_like", 800, 0.01, 5),
+    ("hacc_like", 800, 0.05, 5),
+    ("blobs", 800, 0.05, 8),
+]
+SHARDED = ["portotaxi_like", "hacc_like"]
+
+
+def _case(dset):
+    return next(c for c in SCENARIOS if c[0] == dset)
+
+
+def _assert_result(dset, backend, res):
+    np.testing.assert_array_equal(np.asarray(res.labels),
+                                  GOLDEN[f"{dset}/{backend}/labels"])
+    np.testing.assert_array_equal(np.asarray(res.core_mask),
+                                  GOLDEN[f"{dset}/{backend}/core"])
+    assert res.n_clusters == int(GOLDEN[f"{dset}/{backend}/n_clusters"])
+
+
+@pytest.mark.parametrize("dset", [c[0] for c in SCENARIOS])
+@pytest.mark.parametrize("backend", ["fdbscan", "fdbscan-densebox"])
+def test_tree_backends_bit_identical(dset, backend):
+    # default frontier=True: the compacted/pruned sweep path is on
+    dset, n, eps, mp = _case(dset)
+    res = dbscan(pointclouds.load(dset, n), eps, mp, algorithm=backend)
+    _assert_result(dset, backend, res)
+    # the fused-pass traversal budget survives the callback engine
+    assert res.n_sweeps == int(GOLDEN[f"{dset}/{backend}/n_sweeps"])
+    assert res.n_traversals == res.n_sweeps + 1
+
+
+@pytest.mark.parametrize("dset", [c[0] for c in SCENARIOS])
+def test_tiled_backend_bit_identical(dset):
+    dset, n, eps, mp = _case(dset)
+    res = dbscan(pointclouds.load(dset, n), eps, mp, algorithm="tiled")
+    _assert_result(dset, "tiled", res)
+
+
+@pytest.mark.parametrize("dset", [c[0] for c in SCENARIOS])
+def test_stream_backend_bit_identical(dset):
+    # bootstrap + two micro-batches + forced merge: the chained two-tree
+    # external-query path, exactly as the goldens were generated
+    dset, n, eps, mp = _case(dset)
+    pts = pointclouds.load(dset, n)
+    cut = n * 5 // 8
+    h = stream_handle(pts[:cut], eps, mp)
+    h.insert(pts[cut:cut + (n - cut) // 2])
+    h.insert(pts[cut + (n - cut) // 2:])
+    h.merge()
+    res = h.snapshot()
+    np.testing.assert_array_equal(np.asarray(res.labels),
+                                  GOLDEN[f"{dset}/stream/labels"])
+    np.testing.assert_array_equal(np.asarray(res.core_mask),
+                                  GOLDEN[f"{dset}/stream/core"])
+    assert res.n_clusters == int(GOLDEN[f"{dset}/stream/n_clusters"])
+
+
+@pytest.mark.parametrize("dset", [c[0] for c in SCENARIOS])
+def test_engine_counts_bit_identical(dset):
+    # engine-level golden: exact uncapped neighbor counts over the plain
+    # tree index (original point order)
+    dset, n, eps, mp = _case(dset)
+    pts = pointclouds.load(dset, n)
+    p = plan(pts, eps, mp, algorithm="fdbscan")
+    counts_sorted = np.asarray(traversal.count_neighbors(
+        p.tree, p.segs, eps, cap=traversal.INT_MAX))
+    counts = np.zeros(n, np.int64)
+    counts[np.asarray(p.segs.order)] = counts_sorted
+    np.testing.assert_array_equal(counts, GOLDEN[f"{dset}/counts"])
+
+
+@pytest.mark.parametrize("dset", SHARDED)
+def test_sharded_backend_bit_identical(dset):
+    # the eps-halo external-query path, under 8 forced host devices
+    dset, n, eps, mp = _case(dset)
+    run_with_devices(f"""
+    import numpy as np
+    from repro.core import dbscan
+    from repro.data import pointclouds
+    z = np.load({os.path.join(HERE, 'golden', 'golden.npz')!r})
+    pts = pointclouds.load({dset!r}, {n})
+    res = dbscan(pts, {eps}, {mp}, algorithm="sharded")
+    np.testing.assert_array_equal(np.asarray(res.labels),
+                                  z[{dset!r} + "/sharded/labels"])
+    np.testing.assert_array_equal(np.asarray(res.core_mask),
+                                  z[{dset!r} + "/sharded/core"])
+    assert res.n_sweeps == int(z[{dset!r} + "/sharded/n_sweeps"])
+    """)

@@ -1,0 +1,188 @@
+"""The neighbor-query workloads over the predicate/callback engine.
+
+knn / neighbor_count vs NumPy brute force — including exact-tie groups at
+the k-th radius (integer coordinates: d2 is exact, so ties are real),
+k > n, radius caps, external query batches, and a custom visitor through
+``radius_visit`` (the engine's extensibility contract).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro
+from repro.core import dispatch, neighbors, traversal
+from repro.data import pointclouds
+
+from conftest import separated_points
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    dispatch.clear_cache()
+    yield
+    dispatch.clear_cache()
+
+
+def _brute_knn(pts, q, k, radius=None):
+    pts = np.asarray(pts, np.float32)
+    q = np.asarray(q, np.float32)
+    d2 = ((q[:, None, :] - pts[None, :, :]) ** 2).sum(-1)
+    if radius is not None:
+        d2 = np.where(d2 <= np.float32(radius) ** 2, d2, np.inf)
+    idx = np.argsort(d2, axis=1, kind="stable")[:, :k]
+    dd = np.take_along_axis(d2, idx, axis=1)
+    idx = np.where(np.isinf(dd), -1, idx)
+    return idx, np.sqrt(dd)
+
+
+def _check_knn(pts, k, query_pts=None, radius=None):
+    res = neighbors.knn(pts, k, query_pts=query_pts, radius=radius)
+    q = pts if query_pts is None else query_pts
+    ref_i, ref_d = _brute_knn(pts, q, min(k, len(np.asarray(pts))),
+                              radius=radius)
+    got_i = np.asarray(res.indices)[:, :ref_i.shape[1]]
+    got_d = np.asarray(res.distances)[:, :ref_i.shape[1]]
+    np.testing.assert_array_equal(got_i, ref_i)
+    np.testing.assert_allclose(got_d, ref_d, rtol=1e-6)
+    # slots beyond n are padding
+    assert (np.asarray(res.indices)[:, ref_i.shape[1]:] == -1).all()
+
+
+@pytest.mark.parametrize("dset,n", [("blobs", 700), ("hacc_like", 600)])
+def test_knn_matches_bruteforce(dset, n):
+    pts = pointclouds.load(dset, n)
+    _check_knn(pts, 5)
+    # a resident query's nearest neighbor is itself at distance 0
+    res = neighbors.knn(pts, 1)
+    np.testing.assert_array_equal(np.asarray(res.indices)[:, 0],
+                                  np.arange(n))
+    np.testing.assert_array_equal(np.asarray(res.distances)[:, 0],
+                                  np.zeros(n, np.float32))
+
+
+def test_knn_external_queries():
+    pts = pointclouds.blobs(500, seed=3)
+    rng = np.random.default_rng(0)
+    q = rng.uniform(-0.1, 1.1, size=(64, 2)).astype(np.float32)
+    _check_knn(pts, 4, query_pts=q)
+
+
+def test_knn_ties_at_radius_resolve_by_index():
+    # integer lattice: d2 is exact, so equidistant rings are true ties.
+    # k cuts *inside* a tie group — selection must match the stable
+    # brute-force argsort (smallest original index wins).
+    xy = np.stack(np.meshgrid(np.arange(7.0), np.arange(7.0)), -1)
+    pts = xy.reshape(-1, 2).astype(np.float32)
+    rng = np.random.default_rng(1)
+    pts = pts[rng.permutation(len(pts))]          # ids decoupled from geometry
+    for k in (2, 3, 4, 6):   # cuts a 4-point unit ring at various depths
+        _check_knn(pts, k)
+    q = np.array([[3.0, 3.0]], np.float32)        # center: 4-way ties
+    _check_knn(pts, 3, query_pts=q)
+
+
+def test_knn_k_exceeds_n():
+    pts = pointclouds.blobs(40, seed=5)
+    res = neighbors.knn(pts, 64)
+    _check_knn(pts, 64)
+    assert (np.asarray(res.indices)[:, 40:] == -1).all()
+    assert np.isinf(np.asarray(res.distances)[:, 40:]).all()
+
+
+def test_knn_radius_capped():
+    pts = separated_points(400, 2, eps=0.05, seed=2)
+    _check_knn(pts, 8, radius=0.05)
+
+
+def test_knn_degenerate_inputs():
+    one = np.zeros((1, 2), np.float32)
+    res = neighbors.knn(one, 3)
+    assert np.asarray(res.indices).tolist() == [[0, -1, -1]]
+    with pytest.raises(ValueError):
+        neighbors.knn(one, 0)
+    # d outside the Morton range takes the exact brute fallback
+    pts5 = np.random.default_rng(4).normal(size=(50, 5)).astype(np.float32)
+    _check_knn(pts5, 4)
+
+
+def test_neighbor_count_matches_bruteforce():
+    pts = pointclouds.blobs(600, seed=7)
+    r = 0.05
+    d2 = ((pts[:, None, :] - pts[None, :, :]) ** 2).sum(-1)
+    ref = (d2 <= np.float32(r) ** 2).sum(1)
+    np.testing.assert_array_equal(np.asarray(neighbors.neighbor_count(pts, r)),
+                                  ref)
+    # saturating cap (the DBSCAN early exit)
+    np.testing.assert_array_equal(
+        np.asarray(neighbors.neighbor_count(pts, r, cap=5)),
+        np.minimum(ref, 5))
+    # external probes count every resident match
+    q = pts[:32] + np.float32(1e-3)
+    d2q = ((q[:, None, :] - pts[None, :, :]) ** 2).sum(-1)
+    np.testing.assert_array_equal(
+        np.asarray(neighbors.neighbor_count(pts, r, query_pts=q)),
+        (d2q <= np.float32(r) ** 2).sum(1))
+
+
+def test_neighbors_share_the_dispatch_index():
+    # knn, neighbor_count, and dbscan runs on the same point set must hit
+    # one cached eps-independent index build
+    pts = separated_points(1500, 2, eps=0.05, seed=9)
+    p0 = dispatch.plan(pts, 0.05, 5, algorithm="fdbscan")
+    neighbors.knn(pts, 3)
+    neighbors.neighbor_count(pts, 0.02)
+    p1 = dispatch.plan(pts, 0.09, 3, algorithm="fdbscan")
+    assert p0.segs is p1.segs and p0.tree is p1.tree
+
+
+@jax.tree_util.register_pytree_node_class
+class _WeightSumVisitor(traversal.Visitor):
+    """Test double: accumulates sum(weights[j]) over in-radius neighbors —
+    a workload none of the built-in visitors cover."""
+
+    def __init__(self, weights):
+        self.weights = weights
+
+    def tree_flatten(self):
+        return (self.weights,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    def init_carry(self, ids, external, segs):
+        return jnp.zeros(ids.shape, self.weights.dtype)
+
+    def visit(self, carry, j, d2, hit, ctx):
+        return carry + jnp.where(hit, self.weights[j], 0), hit
+
+
+def test_radius_visit_custom_callback():
+    # the extensibility contract: an arbitrary accumulator pytree driven
+    # by the same engine, validated against a dense oracle
+    pts = separated_points(300, 2, eps=0.07, seed=11)
+    w = np.random.default_rng(3).integers(1, 10, size=300).astype(np.int32)
+    p = dispatch.plan(pts, 0.07, 5, algorithm="fdbscan")
+    w_sorted = jnp.asarray(w)[p.segs.order]
+    tr = neighbors.radius_visit(pts, 0.07, _WeightSumVisitor(w_sorted))
+    got = np.zeros(300, np.int32)
+    got[np.asarray(p.segs.order)] = np.asarray(tr.carry)
+    d2 = ((pts[:, None, :] - pts[None, :, :]) ** 2).sum(-1)
+    ref = np.where(d2 <= np.float32(0.07) ** 2, w[None, :], 0).sum(1)
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_top_level_exports():
+    # the stable public surface (ISSUE 4): everything an application needs
+    assert set(repro.__all__) == {"DBSCANResult", "dbscan", "plan",
+                                  "stream_handle", "neighbors",
+                                  "__version__"}
+    pts = pointclouds.blobs(300, seed=1)
+    res = repro.dbscan(pts, 0.05, 5)
+    assert isinstance(res, repro.DBSCANResult)
+    p = repro.plan(pts, 0.05, 5)
+    assert repro.dbscan(pts, 0.05, 5, query_plan=p).backend == p.backend
+    h = repro.stream_handle(pts, 0.05, 5)
+    assert h.n_points == 300
+    assert repro.neighbors.knn(pts, 2).indices.shape == (300, 2)

@@ -90,15 +90,24 @@ def test_frontier_matches_oracle_end_to_end():
         check_dbscan(pts, 0.07, 4, res.labels, res.core_mask)
 
 
-@pytest.mark.parametrize("mode", ["count", "minlabel", "count_minlabel"])
-def test_unroll_invariance(mode):
+def _visitor(kind, n, cap=6):
+    vals = jnp.arange(n, dtype=jnp.int32)
+    mask = jnp.ones(n, bool)
+    return {"count": traversal.CountVisitor(cap=cap),
+            "minlabel": traversal.MinLabelVisitor(vals, mask),
+            "count_minlabel": traversal.CountMinLabelVisitor(vals, mask,
+                                                             cap=cap),
+            }[kind]
+
+
+@pytest.mark.parametrize("kind", ["count", "minlabel", "count_minlabel"])
+def test_unroll_invariance(kind):
     pts = separated_points(150, 2, eps=0.12, seed=3)
     segs, tree = _index(pts, "fdbscan-densebox", eps=0.12, mp=4)
     n = segs.n_points
-    vals = jnp.arange(n, dtype=jnp.int32)
-    mask = jnp.ones(n, bool)
-    outs = [traversal.traverse(tree, segs, 0.12, vals, mask, cap=6,
-                               mode=mode, unroll=u) for u in (1, 4, 7)]
+    pred = traversal.intersects(traversal.sphere(0.12))
+    outs = [traversal.traverse(tree, segs, pred, _visitor(kind, n),
+                               unroll=u) for u in (1, 4, 7)]
     for other in outs[1:]:
         np.testing.assert_array_equal(np.asarray(outs[0].acc),
                                       np.asarray(other.acc))
@@ -108,6 +117,39 @@ def test_unroll_invariance(mode):
                                       np.asarray(other.evals))
     # unrolling shrinks loop trips ~unroll-fold
     assert int(outs[1].iters.sum()) < int(outs[0].iters.sum())
+
+
+@pytest.mark.parametrize("kind", ["count", "minlabel", "count_minlabel",
+                                  "nearest"])
+def test_external_queries_match_resident(kind):
+    # an external predicate batch at the resident coordinates must see the
+    # same neighborhoods (modulo self-identity, which externals lack)
+    pts = separated_points(160, 2, eps=0.1, seed=8)
+    segs, tree = _index(pts)
+    n = segs.n_points
+    if kind == "nearest":
+        cb = traversal.KNNVisitor(4)
+        res = traversal.traverse(tree, segs, traversal.nearest(4), cb)
+        ext = traversal.traverse(tree, segs,
+                                 traversal.nearest(4, pts=segs.pts), cb)
+        np.testing.assert_array_equal(np.asarray(res.carry.ids),
+                                      np.asarray(ext.carry.ids))
+        np.testing.assert_array_equal(np.asarray(res.carry.d2),
+                                      np.asarray(ext.carry.d2))
+        return
+    cb = _visitor(kind, n, cap=traversal.INT_MAX)
+    res = traversal.traverse(tree, segs,
+                             traversal.intersects(traversal.sphere(0.1)), cb)
+    ext = traversal.traverse(
+        tree, segs,
+        traversal.intersects(traversal.sphere(0.1), pts=segs.pts), cb,
+        carry=(None if kind == "count"
+               else traversal.AccHits(acc=jnp.arange(n, dtype=jnp.int32),
+                                      hits=jnp.zeros(n, jnp.int32))))
+    np.testing.assert_array_equal(np.asarray(res.acc), np.asarray(ext.acc))
+    # externals have no self to exclude: exactly one extra hit per lane
+    np.testing.assert_array_equal(np.asarray(res.hits) + 1,
+                                  np.asarray(ext.hits))
 
 
 @pytest.mark.parametrize("cap", [1, 3, 7])
@@ -124,10 +166,10 @@ def test_node_mask_all_true_is_noop():
     pts = separated_points(120, 2, eps=0.1, seed=9)
     segs, tree = _index(pts)
     n = segs.n_points
-    vals = jnp.arange(n, dtype=jnp.int32)
-    mask = jnp.ones(n, bool)
-    a = traversal.traverse(tree, segs, 0.1, vals, mask, mode="minlabel")
-    b = traversal.traverse(tree, segs, 0.1, vals, mask, mode="minlabel",
+    pred = traversal.intersects(traversal.sphere(0.1))
+    cb = _visitor("minlabel", n)
+    a = traversal.traverse(tree, segs, pred, cb)
+    b = traversal.traverse(tree, segs, pred, cb,
                            node_mask=jnp.ones(2 * segs.n_segments - 1, bool))
     np.testing.assert_array_equal(np.asarray(a.acc), np.asarray(b.acc))
     np.testing.assert_array_equal(np.asarray(a.hits), np.asarray(b.hits))
