@@ -1,9 +1,11 @@
 # Developer entry points. `make test-fast` is the tier-1 iteration loop
-# (seconds, -m fast subset); `make test` is the full suite (~minutes).
+# (seconds, -m fast subset); `make test` is the full suite (~minutes);
+# `make docs` regenerates the API reference, `make docs-check` runs the
+# same gates CI does (doctest + links + api.md freshness).
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench bench-full
+.PHONY: test test-fast bench bench-full docs docs-check
 
 test:
 	$(PY) -m pytest -q --continue-on-collection-errors
@@ -16,3 +18,11 @@ bench:
 
 bench-full:
 	$(PY) -m benchmarks.run --full
+
+docs:
+	$(PY) docs/gen_api.py
+
+docs-check:
+	$(PY) docs/run_doctest.py
+	$(PY) docs/check_links.py
+	$(PY) docs/gen_api.py --check

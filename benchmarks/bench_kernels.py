@@ -3,7 +3,7 @@
 Wall time here is the *interpret-mode* (CPU) figure — meaningful only for
 relative tracking. The derived column reports the kernel's FLOPs and the
 VMEM tile-resident bytes/ratio used by the TPU roofline discussion in
-EXPERIMENTS.md §Roofline (tile kernels section).
+DESIGN.md §3 (memory model).
 """
 from __future__ import annotations
 

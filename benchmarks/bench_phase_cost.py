@@ -99,10 +99,15 @@ def _phase_predicates(segs, core, eps):
 
 
 def _counter_traces(tree, segs, core, labels0, vals0, eps, minpts: int):
-    """(pre, sweep1, fused) traces — THE definition of the before/after
-    fusion loop-trip counters, shared by ``run`` (BENCH_traversal.json)
-    and ``counters`` (the --check gate) so they can never diverge."""
+    """(pre, sweep1, fused, pallas) traces — THE definition of the
+    before/after fusion loop-trip counters and the Pallas kernel's work
+    counters, shared by ``run`` (BENCH_traversal.json) and ``counters``
+    (the --check gate) so they can never diverge. ``pallas`` is the same
+    fused walk executed by the lane-tiled kernel (kernels/traverse.py);
+    its ``evals`` must equal the engine's and its ``iters`` come out of
+    the kernel as a per-lane output."""
     import jax.numpy as jnp
+    from repro.kernels import traverse as pallas_traverse
     pred_all, pred_loose, pred_core = _phase_predicates(segs, core, eps)
     ones = jnp.ones(segs.n_points, bool)
     pre_tr = traversal.traverse(
@@ -114,7 +119,10 @@ def _counter_traces(tree, segs, core, labels0, vals0, eps, minpts: int):
     fused_tr = traversal.traverse(
         tree, segs, pred_all,
         traversal.CountMinLabelVisitor(vals0, ones, cap=minpts - 1))
-    return pre_tr, sweep1_tr, fused_tr
+    pallas_tr = pallas_traverse.traverse(
+        tree, segs, pred_all,
+        traversal.CountMinLabelVisitor(vals0, ones, cap=minpts - 1))
+    return pre_tr, sweep1_tr, fused_tr, pallas_tr
 
 
 def counters(n: int = 4096, quick: bool = False, only=None) -> dict:
@@ -132,13 +140,18 @@ def counters(n: int = 4096, quick: bool = False, only=None) -> dict:
         segs, tree, core, labels0, vals0, fused_init, _, sweeps, stats = \
             _setup(dset, n, eps, minpts)
         nq = segs.n_points
-        pre_tr, sweep1_tr, fused_tr = _counter_traces(
+        pre_tr, sweep1_tr, fused_tr, pallas_tr = _counter_traces(
             tree, segs, core, labels0, vals0, eps, minpts)
+        assert int(np.asarray(pallas_tr.evals).sum()) == \
+            int(np.asarray(fused_tr.evals).sum()), \
+            "pallas kernel evals drifted from the reference engine"
         records[dset] = {
             "n": int(nq), "eps": eps, "minpts": minpts,
             "loop_iters_before_fusion": _sum_iters(pre_tr)
                                         + _sum_iters(sweep1_tr),
             "loop_iters_after_fusion": _sum_iters(fused_tr),
+            "pallas_loop_iters": _sum_iters(pallas_tr),
+            "pallas_evals": int(np.asarray(pallas_tr.evals).sum()),
             "n_sweeps": 1 + sweeps,
             "sweep_iters_per_sweep": stats["iters_per_sweep"],
             "sweep_evals_per_sweep": stats["evals_per_sweep"],
@@ -148,6 +161,7 @@ def counters(n: int = 4096, quick: bool = False, only=None) -> dict:
 
 def run(n: int = 4096, quick: bool = False, json_out: str | None = None):
     import jax.numpy as jnp
+    from repro.kernels import traverse as pallas_traverse
     records = {}
     for dset, eps, minpts_full in (SCENARIOS[:2] if quick else SCENARIOS):
         minpts = _scaled_minpts(minpts_full, n)
@@ -173,6 +187,12 @@ def run(n: int = 4096, quick: bool = False, json_out: str | None = None):
             "fused": lambda: traversal.traverse(
                 tree, segs, pred_all,
                 traversal.CountMinLabelVisitor(vals0, ones, cap=minpts - 1)),
+            # the same fused walk through the Pallas kernel engine
+            # (interpret mode off-TPU — a lowering comparator, not a
+            # wall-clock claim there)
+            "fused_pallas": lambda: pallas_traverse.traverse(
+                tree, segs, pred_all,
+                traversal.CountMinLabelVisitor(vals0, ones, cap=minpts - 1)),
             "main": lambda: fdbscan._sweep_to_fixpoint(
                 tree, segs, eps, core, labels0, fused_init=fused_init)[0],
             "border": lambda: fdbscan._assign_borders(tree, segs, eps,
@@ -182,7 +202,7 @@ def run(n: int = 4096, quick: bool = False, json_out: str | None = None):
         t_full, t_pre, t_sweep1 = t["full"], t["pre"], t["sweep1"]
         t_fused, t_main, t_border = t["fused"], t["main"], t["border"]
 
-        pre_tr, sweep1_tr, fused_tr = _counter_traces(
+        pre_tr, sweep1_tr, fused_tr, pallas_tr = _counter_traces(
             tree, segs, core, labels0, vals0, eps, minpts)
         iters_before = _sum_iters(pre_tr) + _sum_iters(sweep1_tr)
         iters_after = _sum_iters(fused_tr)
@@ -194,6 +214,7 @@ def run(n: int = 4096, quick: bool = False, json_out: str | None = None):
             "n": int(nq), "eps": eps, "minpts": minpts,
             "t_neighbor_determination_us": t_full * 1e6,
             "t_fused_first_pass_us": t_fused * 1e6,
+            "t_fused_first_pass_pallas_us": t["fused_pallas"] * 1e6,
             "t_separate_pre_plus_sweep_us": (t_pre + t_sweep1) * 1e6,
             "t_main_sweeps_us": t_main * 1e6,
             "t_border_us": t_border * 1e6,
@@ -201,6 +222,8 @@ def run(n: int = 4096, quick: bool = False, json_out: str | None = None):
             "ratio_clustering_vs_nd": ratio,
             "loop_iters_before_fusion": iters_before,
             "loop_iters_after_fusion": iters_after,
+            "pallas_loop_iters": _sum_iters(pallas_tr),
+            "pallas_evals": int(np.asarray(pallas_tr.evals).sum()),
             "iters_speedup": iters_before / max(iters_after, 1),
             "n_sweeps": n_sweeps,
             "n_traversals": n_sweeps + 1,
@@ -215,6 +238,10 @@ def run(n: int = 4096, quick: bool = False, json_out: str | None = None):
         emit(f"phase_cost/{dset}/first-pass-fused", t_fused * 1e6,
              f"vs_separate={(t_pre + t_sweep1) * 1e6:.1f}us;"
              f"iters {iters_before}->{iters_after}")
+        emit(f"phase_cost/{dset}/first-pass-pallas",
+             t["fused_pallas"] * 1e6,
+             f"kernel iters={_sum_iters(pallas_tr)};"
+             f"evals={int(np.asarray(pallas_tr.evals).sum())}")
         emit(f"phase_cost/{dset}/total-clustering", t_cluster * 1e6,
              f"ratio_vs_nd={ratio:.2f};sweeps={n_sweeps};"
              f"traversals={n_sweeps + 1}")

@@ -62,7 +62,10 @@ def check() -> None:
                     "regenerate BENCH_traversal.json")
                 continue
             for key in ("loop_iters_before_fusion",
-                        "loop_iters_after_fusion"):
+                        "loop_iters_after_fusion",
+                        "pallas_loop_iters", "pallas_evals"):
+                if key not in ref:
+                    continue  # pre-kernel trajectory file
                 _check_ratio(failures, f"traversal/{dset}/{key}",
                              rec[key], ref[key])
             _check_ratio(failures, f"traversal/{dset}/sweep_iters_total",

@@ -1,0 +1,117 @@
+"""Fail on broken intra-repo markdown links (the docs CI gate).
+
+    python docs/check_links.py [files...]
+
+Defaults to README.md, DESIGN.md, and docs/*.md. Checks every
+``[text](target)`` link whose target is not an external URL:
+
+  * relative file targets must exist on disk (resolved against the
+    containing file's directory);
+  * ``#anchor`` fragments (same-file or on a ``.md`` target) must match
+    a heading, using GitHub's slugification rules.
+
+External (``http(s)://``, ``mailto:``) links are out of scope — CI must
+not flake on network state.
+"""
+from __future__ import annotations
+
+import functools
+import glob
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# [text](target) — ignores images' leading ! harmlessly (same rules)
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$")
+_CODE_FENCE = re.compile(r"^(```|~~~)")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, drop punctuation (keep word
+    chars and hyphens), spaces become hyphens."""
+    h = heading.strip().lower()
+    h = re.sub(r"`", "", h)
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+@functools.lru_cache(maxsize=None)
+def anchors_of(path: str) -> set[str]:
+    slugs: set[str] = set()
+    counts: dict[str, int] = {}
+    in_fence = False
+    for line in open(path, encoding="utf-8"):
+        if _CODE_FENCE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = _HEADING.match(line)
+        if not m:
+            continue
+        slug = github_slug(m.group(1))
+        k = counts.get(slug, 0)
+        counts[slug] = k + 1
+        slugs.add(slug if k == 0 else f"{slug}-{k}")
+    return slugs
+
+
+def links_of(path: str):
+    in_fence = False
+    for ln, line in enumerate(open(path, encoding="utf-8"), 1):
+        if _CODE_FENCE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in _LINK.finditer(line):
+            yield ln, m.group(1)
+
+
+def check_file(path: str) -> tuple[list[str], int]:
+    errors = []
+    n_links = 0
+    base = os.path.dirname(os.path.abspath(path))
+    for ln, target in links_of(path):
+        n_links += 1
+        if re.match(r"^[a-z][a-z0-9+.-]*:", target):   # http:, mailto:, ...
+            continue
+        frag = None
+        if "#" in target:
+            target, frag = target.split("#", 1)
+        if target:
+            dest = os.path.normpath(os.path.join(base, target))
+            if not os.path.exists(dest):
+                errors.append(f"{path}:{ln}: broken link target {target!r}")
+                continue
+        else:
+            dest = path
+        if frag is not None and dest.endswith(".md"):
+            if frag not in anchors_of(dest):
+                errors.append(f"{path}:{ln}: broken anchor "
+                              f"{'#' + frag!r} in {os.path.relpath(dest, REPO)}")
+    return errors, n_links
+
+
+def main(argv=None) -> int:
+    files = (argv or sys.argv[1:]) or (
+        [os.path.join(REPO, "README.md"), os.path.join(REPO, "DESIGN.md")]
+        + sorted(glob.glob(os.path.join(REPO, "docs", "*.md"))))
+    errors = []
+    n_links = 0
+    for f in files:
+        errs, n = check_file(f)
+        errors.extend(errs)
+        n_links += n
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(files)} files, {n_links} links, "
+          f"{len(errors)} broken")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

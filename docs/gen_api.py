@@ -1,0 +1,166 @@
+"""Generate docs/api.md from the live docstrings of the stable surface.
+
+    PYTHONPATH=src python docs/gen_api.py            # (re)write docs/api.md
+    PYTHONPATH=src python docs/gen_api.py --check    # CI: fail if stale
+
+The reference is *generated*, never hand-edited: it covers everything in
+``repro.__all__`` plus the extension surface DESIGN.md §8 documents (the
+visitor contract and the predicate constructors). The CI docs job runs
+``--check`` so the committed file can't drift from the docstrings.
+"""
+from __future__ import annotations
+
+import argparse
+import inspect
+import os
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+OUT = os.path.join(HERE, "api.md")
+
+HEADER = """\
+# repro API reference
+
+*Generated from docstrings by `docs/gen_api.py` — do not edit by hand
+(`PYTHONPATH=src python docs/gen_api.py` regenerates; CI checks it is
+current).*
+
+The stable public surface is what `repro.__all__` exports; everything
+else (including the `repro.core.*` modules documented at the end for
+extension authors) is importable but not part of the stability
+contract. See [README.md](../README.md) for the quickstart and
+[DESIGN.md](../DESIGN.md) for the architecture.
+"""
+
+
+def _signature(obj) -> str:
+    try:
+        return str(inspect.signature(obj))
+    except (TypeError, ValueError):
+        return "(...)"
+
+
+def _doc(obj) -> str:
+    return inspect.getdoc(obj) or "*(no docstring)*"
+
+
+def _entry(title: str, obj, kind: str = "function",
+           sig: str | None = None) -> str:
+    lines = [f"### `{title}`", ""]
+    if kind == "function":
+        name = title.rsplit(".", 1)[-1]
+        lines += ["```python", f"{name}{sig or _signature(obj)}", "```", ""]
+    lines += [_doc(obj), ""]
+    return "\n".join(lines)
+
+
+def _method_entries(cls, names, prefix: str) -> list[str]:
+    out = []
+    for name in names:
+        member = inspect.getattr_static(cls, name)
+        if isinstance(member, property):
+            out.append(_entry(f"{prefix}.{name}", member.fget,
+                              kind="property"))
+        else:
+            out.append(_entry(f"{prefix}.{name}", getattr(cls, name)))
+    return out
+
+
+def generate() -> str:
+    import repro
+    from repro.core import traversal
+    from repro.core import neighbors
+    from repro.kernels import traverse as pallas_traverse
+    from repro.stream import StreamingDBSCAN
+
+    parts = [HEADER]
+
+    parts.append("## Top level (`repro.__all__`)\n")
+    parts.append(_entry("repro.dbscan", repro.dbscan))
+    parts.append(_entry("repro.plan", repro.plan))
+    parts.append(_entry("repro.stream_handle", repro.stream_handle))
+    parts.append(_entry("repro.DBSCANResult", repro.DBSCANResult,
+                        kind="class"))
+
+    parts.append("## Streaming handle (`repro.stream_handle(...)`)\n")
+    parts.append(_entry("StreamingDBSCAN", StreamingDBSCAN, kind="class"))
+    parts.extend(_method_entries(
+        StreamingDBSCAN,
+        ["insert", "query", "snapshot", "merge",
+         "n_points", "n_main", "n_delta", "points"],
+        "StreamingDBSCAN"))
+
+    parts.append("## Neighbor queries (`repro.neighbors`)\n")
+    parts.append(_doc(neighbors) + "\n")
+    parts.append(_entry("repro.neighbors.neighbor_count",
+                        neighbors.neighbor_count))
+    parts.append(_entry("repro.neighbors.knn", neighbors.knn))
+    parts.append(_entry("repro.neighbors.radius_visit",
+                        neighbors.radius_visit))
+    parts.append(_entry("repro.neighbors.KNNResult", neighbors.KNNResult,
+                        kind="class"))
+
+    parts.append("## Predicates (`repro.core.traversal`)\n")
+    parts.append(
+        "Predicate batches name the queries a traversal runs and their\n"
+        "search geometry (DESIGN.md §8). They are pytrees: array leaves\n"
+        "(radii, id vectors, external coordinates) are traced operands,\n"
+        "so parameter sweeps reuse one compiled program.\n")
+    parts.append(_entry("traversal.intersects", traversal.intersects))
+    parts.append(_entry("traversal.sphere", traversal.sphere))
+    parts.append(_entry("traversal.nearest", traversal.nearest))
+
+    parts.append("## The visitor contract (`repro.core.traversal`)\n")
+    parts.append(_entry("traversal.Visitor", traversal.Visitor,
+                        kind="class"))
+    parts.extend(_method_entries(
+        traversal.Visitor,
+        ["init_carry", "visit", "done", "segment_done"],
+        "Visitor"))
+    for cls in (traversal.CountVisitor, traversal.MinLabelVisitor,
+                traversal.CountMinLabelVisitor, traversal.KNNVisitor):
+        parts.append(_entry(f"traversal.{cls.__name__}", cls, kind="class"))
+
+    parts.append("## Traversal engines\n")
+    # DEFAULT_UNROLL resolves per backend (4 on TPU/GPU, 1 on CPU);
+    # render the symbol so the generated file is machine-independent
+    # (annotations render quoted under `from __future__ import annotations`)
+    engine_sig = _signature(traversal.traverse_impl).replace(
+        f"unroll: 'int' = {traversal.DEFAULT_UNROLL}",
+        "unroll: 'int' = DEFAULT_UNROLL")
+    parts.append(_entry("repro.core.traversal.traverse",
+                        traversal.traverse_impl, sig=engine_sig))
+    parts.append(_entry("repro.kernels.traverse.traverse",
+                        pallas_traverse.traverse))
+    parts.append(_entry("traversal.Trace", traversal.Trace, kind="class"))
+    parts.append(_entry("traversal.QueryCtx", traversal.QueryCtx,
+                        kind="class"))
+    parts.append(_entry("traversal.AccHits", traversal.AccHits,
+                        kind="class"))
+
+    return "\n".join(parts).rstrip() + "\n"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--check", action="store_true",
+                    help="fail (exit 1) if docs/api.md is stale")
+    args = ap.parse_args()
+    content = generate()
+    if args.check:
+        on_disk = open(OUT).read() if os.path.exists(OUT) else ""
+        if on_disk != content:
+            print("docs/api.md is stale — regenerate with "
+                  "`PYTHONPATH=src python docs/gen_api.py`",
+                  file=sys.stderr)
+            return 1
+        print("docs/api.md is current")
+        return 0
+    with open(OUT, "w") as f:
+        f.write(content)
+    print(f"wrote {OUT} ({len(content.splitlines())} lines)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -19,7 +19,7 @@ def main():
     pts = pointclouds.blobs(2000, k=6, seed=42)
     eps, min_pts = 0.04, 8
 
-    for algo in ("fdbscan", "fdbscan-densebox", "tiled"):
+    for algo in ("fdbscan", "fdbscan-densebox", "tiled", "pallas-tree"):
         res = repro.dbscan(pts, eps, min_pts, algorithm=algo)
         assert isinstance(res, repro.DBSCANResult)
         noise = int((np.asarray(res.labels) == -1).sum())

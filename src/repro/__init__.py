@@ -1,8 +1,10 @@
 """repro: tree-based DBSCAN (FDBSCAN / FDBSCAN-DenseBox) for TPU pods.
 
 JAX + Pallas reproduction and extension of Prokopenko, Lebrun-Grandie,
-Arndt: "Fast tree-based algorithms for DBSCAN for low-dimensional data on
-GPUs" (2021), embedded in a multi-pod training/serving framework.
+Arndt: "Fast tree-based algorithms for DBSCAN for low-dimensional data
+on GPUs" (2021): LBVH-fused traversal backends (including a lane-tiled
+Pallas traversal kernel), multi-device sharding, and a streaming index,
+behind one auto-dispatching entry point. See README.md and docs/api.md.
 
 Stable public surface — everything an application needs lives here:
 

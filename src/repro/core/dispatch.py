@@ -1,7 +1,7 @@
 """Unified backend dispatch for DBSCAN (DESIGN.md §5).
 
 One entry point — ``dbscan(points, eps, min_pts, algorithm="auto")`` —
-serving four backends:
+serving the backends:
 
   * ``fdbscan``          — singleton-segment BVH (Morton order); the index
                            is eps-independent, so it is cached per point set
@@ -14,6 +14,13 @@ serving four backends:
   * ``tiled``            — the MXU Pallas tile backend (kernels/ops.py):
                            n^2 streamed distance tiles beat a divergent
                            tree walk when the point count is small.
+  * ``pallas-tree``      — the same tree algorithms with every traversal
+                           run as the lane-tiled Pallas kernel
+                           (kernels/traverse.py; DESIGN.md §9). Auto
+                           dispatch upgrades any tree decision to this
+                           backend on TPU (where the DBSCAN visitors are
+                           kernel-fusible and the index fits VMEM);
+                           bit-identical labels.
   * ``sharded``          — the multi-device tree path (DESIGN.md §6):
                            shard-local LBVH traversal + eps-halo exchange
                            (distributed/ring_dbscan.tree_dbscan_sharded).
@@ -52,16 +59,69 @@ _CACHE_MAX = 32
 _plan_cache: "OrderedDict[Any, Any]" = OrderedDict()
 
 ALGORITHMS = ("auto", "fdbscan", "fdbscan-densebox", "tiled", "sharded",
-              "stream")
+              "stream", "pallas-tree")
+
+
+# The traversal kernel keeps the whole index (points, boxes, ropes,
+# segment tables) VMEM-resident; past roughly half a core's ~16 MB the
+# upgrade would trade a working vmapped walk for a compile failure, so
+# auto dispatch stays on the reference engine beyond this footprint.
+# Explicit algorithm="pallas-tree" bypasses the guard (the caller asked).
+PALLAS_MAX_INDEX_BYTES = 8 << 20
+
+
+def _accel() -> bool:
+    """Does jit target the TPU Pallas lowering? (the pallas-tree auto
+    heuristic; split out so tests can pin it). GPU is deliberately
+    excluded: the kernel's TPU compiler params make Pallas fall back to
+    interpret mode there, which would silently replace the fast vmapped
+    engine with an emulated kernel."""
+    import jax
+    return jax.default_backend() == "tpu"
+
+
+def _index_vmem_bytes(p: "Plan") -> int | None:
+    """Rough whole-index footprint the kernel pins in VMEM (int32/float32
+    arrays: points, per-point ids, segment tables, node boxes + links)."""
+    if p.segs is None or p.tree is None:
+        return None
+    n, d = p.segs.pts.shape
+    m = p.segs.seg_start.shape[0]
+    n_nodes = p.tree.miss.shape[0]
+    return 4 * (n * d + n + 3 * m + 2 * n_nodes * d + 4 * n_nodes)
+
+
+def _maybe_pallas(p: "Plan", algorithm: str) -> "Plan":
+    """Upgrade an auto tree decision to the Pallas kernel engine on TPU.
+    The kernel runs the same index with the same visitor callbacks
+    (always fusible for the DBSCAN epilogues), so the upgrade changes
+    only the walk's lowering — labels stay bit-identical. Skipped when
+    the index would overflow the kernel's VMEM residency budget."""
+    if algorithm != "auto" or not _accel():
+        return p
+    footprint = _index_vmem_bytes(p)
+    if footprint is None or footprint > PALLAS_MAX_INDEX_BYTES:
+        return p
+    stats = dict(p.stats)
+    stats["reason"] = (stats.get("reason", "") +
+                       "; accelerator: pallas traversal kernel")
+    return p._replace(backend="pallas-tree", stats=stats)
 
 
 class Plan(NamedTuple):
-    """A resolved backend choice plus the (reusable) index that drove it."""
-    backend: str                      # "fdbscan" | "fdbscan-densebox" |
-                                      # "tiled" | "sharded"
-    segs: grid.Segments | None        # None for the tiled/sharded backends
-    tree: lbvh.Tree | None            # None for tiled/sharded/single-segment
-    stats: dict                       # occupancy/size stats behind the choice
+    """A resolved backend choice plus the (reusable) index that drove it.
+
+    backend: one of "fdbscan", "fdbscan-densebox", "pallas-tree",
+        "tiled", "sharded", "stream".
+    segs / tree: the segment index and its LBVH (None for the index-free
+        tiled/sharded backends, and tree is None below two segments).
+    stats: occupancy/size stats behind the choice; ``stats["reason"]``
+        states why this backend won.
+    """
+    backend: str
+    segs: grid.Segments | None
+    tree: lbvh.Tree | None
+    stats: dict
 
 
 def _mesh_ndev(mesh, axis: str) -> int:
@@ -131,7 +191,28 @@ def plan(points, eps: float, min_pts: int,
     same segments become the index (no duplicated work). An active ``mesh``
     routes to the sharded multi-device tree path (whose per-shard index is
     built inside the collective program — nothing to cache here beyond the
-    decision).
+    decision). On TPU an auto tree decision upgrades to the
+    ``pallas-tree`` kernel engine when the index fits its VMEM
+    residency budget (DESIGN.md §9).
+
+    Args:
+        points: (n, d) point array (any array-like; converted to jnp).
+        eps: DBSCAN radius (non-negative).
+        min_pts: DBSCAN density threshold (the query point counts).
+        algorithm: one of :data:`ALGORITHMS`; ``"auto"`` probes and picks.
+        mesh: optional ``jax.sharding.Mesh``; with a ``axis`` data axis of
+            size > 1 it routes auto dispatch to the sharded backend.
+        axis: the mesh axis points are sharded over (default ``"data"``).
+
+    Returns:
+        A :class:`Plan` — resolved backend name, the (cacheable) index
+        (``segs``/``tree``, ``None`` for index-free backends), and the
+        stats dict that drove the decision (``stats["reason"]`` says why).
+
+    Raises:
+        ValueError: unknown ``algorithm``; negative ``eps``; ``mesh=``
+            combined with a single-device algorithm; a sharded request
+            whose mesh lacks ``axis``; or a stream request with d ∉ {2, 3}.
     """
     if algorithm not in ALGORITHMS:
         raise ValueError(f"unknown algorithm {algorithm!r}")
@@ -181,10 +262,19 @@ def plan(points, eps: float, min_pts: int,
                            else f"n <= {TILED_MAX_POINTS}: MXU tiles win")
         return _cache_put(key, Plan("tiled", None, None, stats))
 
+    if algorithm == "pallas-tree":
+        # the Pallas traversal kernel over the plain (eps-independent,
+        # cached) fdbscan index — the explicit form of the auto upgrade
+        stats["reason"] = "explicit: Pallas traversal kernel"
+        return _cache_put(key,
+                          _fdbscan_plan(points, pkey, stats)._replace(
+                              backend="pallas-tree"))
+
     if algorithm == "fdbscan" or d not in (2, 3):
         stats["reason"] = ("explicit" if algorithm == "fdbscan"
                            else "no eps-grid for this dimensionality")
-        return _cache_put(key, _fdbscan_plan(points, pkey, stats))
+        return _cache_put(key, _maybe_pallas(
+            _fdbscan_plan(points, pkey, stats), algorithm))
 
     # eps-grid build: density probe and (potentially) the index itself
     segs = grid.build_segments_densebox(points, eps, min_pts)
@@ -193,10 +283,12 @@ def plan(points, eps: float, min_pts: int,
     if algorithm == "fdbscan-densebox" or dense_frac >= DENSE_FRACTION_MIN:
         stats["reason"] = ("explicit" if algorithm == "fdbscan-densebox"
                            else f"dense_fraction >= {DENSE_FRACTION_MIN}")
-        return _cache_put(key,
-                          Plan("fdbscan-densebox", segs, _tree_of(segs), stats))
+        return _cache_put(key, _maybe_pallas(
+            Plan("fdbscan-densebox", segs, _tree_of(segs), stats),
+            algorithm))
     stats["reason"] = f"dense_fraction < {DENSE_FRACTION_MIN}: plain tree"
-    return _cache_put(key, _fdbscan_plan(points, pkey, stats))
+    return _cache_put(key, _maybe_pallas(
+        _fdbscan_plan(points, pkey, stats), algorithm))
 
 
 def dbscan(points, eps: float, min_pts: int, *, algorithm: str = "auto",
@@ -210,6 +302,30 @@ def dbscan(points, eps: float, min_pts: int, *, algorithm: str = "auto",
     index build across runs (the plan's index, not ``points``, is what a
     tree backend clusters). ``mesh`` (a jax Mesh with a data axis) routes
     auto dispatch to the sharded multi-device tree path.
+
+    Args:
+        points: (n, d) point array.
+        eps: DBSCAN radius (non-negative).
+        min_pts: DBSCAN density threshold (the query point counts, so a
+            point with ``min_pts - 1`` neighbors is core).
+        algorithm: backend request, see :func:`plan`.
+        star: DBSCAN* variant — no border points, non-core points are
+            noise (not supported by the sharded backend).
+        frontier: restrict label sweeps to the changed-point frontier
+            (exact, default True); only meaningful for the single-device
+            tree backends.
+        mesh / axis: multi-device routing, see :func:`plan`.
+        query_plan: a previous :func:`plan` result for the same points.
+
+    Returns:
+        A :class:`repro.core.fdbscan.DBSCANResult`; ``labels[i] == -1``
+        marks noise, ``backend`` names the backend that actually ran.
+
+    Raises:
+        ValueError: invalid parameters (see :func:`plan`), or
+            ``frontier``/``star`` combined with a backend that would
+            silently ignore them.
+        NotImplementedError: ``star=True`` on the sharded backend.
     """
     points = jnp.asarray(points)
     p = query_plan if query_plan is not None else plan(points, eps, min_pts,
@@ -254,8 +370,24 @@ def stream_handle(points, eps: float, min_pts: int, **kwargs):
     Goes through :func:`plan`, so the handle's main tree is the *cached*
     eps-independent fdbscan index — building handles (or running batch
     ``dbscan``) for several ``eps``/``min_pts`` values over the same point
-    set shares one index build. ``kwargs`` pass through to the handle
-    (e.g. ``merge_ratio``).
+    set shares one index build.
+
+    Args:
+        points: (n, d) initial points, d in (2, 3), n >= 2.
+        eps: DBSCAN radius (non-negative).
+        min_pts: DBSCAN density threshold.
+        **kwargs: passed to the handle (e.g. ``merge_ratio``, the
+            delta/main size ratio that triggers an index merge).
+
+    Returns:
+        A live ``StreamingDBSCAN`` handle exposing ``insert`` / ``query``
+        / ``snapshot`` / ``merge`` (DESIGN.md §7); after any interleaving
+        of inserts and merges, ``snapshot()`` is component-identical to
+        batch :func:`dbscan` on the accumulated points.
+
+    Raises:
+        ValueError: d outside (2, 3), negative ``eps``, or inserts that
+            change dimensionality (raised by the handle).
     """
     from repro.stream import StreamingDBSCAN
     points = jnp.asarray(points)

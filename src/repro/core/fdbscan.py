@@ -43,12 +43,28 @@ _PAD_MIN = 64
 
 
 class DBSCANResult(NamedTuple):
-    labels: jax.Array      # (n,) cluster id in [0, n_clusters) or -1 (noise)
-    core_mask: jax.Array   # (n,) point is a core point
+    """The result record every DBSCAN backend returns.
+
+    labels: (n,) int32 cluster id in [0, n_clusters), or -1 for noise,
+        in the caller's original point order. Cluster ids are compact and
+        deterministic (derived from each component's smallest original
+        index), so equal inputs give byte-equal labels across runs.
+    core_mask: (n,) bool — the point has >= min_pts neighbors within eps
+        (itself included).
+    n_clusters: number of distinct non-noise labels.
+    n_sweeps: main-phase label sweeps until fixpoint, including the fused
+        first pass (DESIGN.md §4).
+    n_traversals: total tree walks this run (``n_sweeps + 1`` for the
+        tree backends with border assignment; -1 where not applicable,
+        e.g. the tiled backend).
+    backend: the resolved backend name that produced this result.
+    """
+    labels: jax.Array
+    core_mask: jax.Array
     n_clusters: int
-    n_sweeps: int          # main-phase sweeps until fixpoint (incl. fused)
-    n_traversals: int = -1  # total tree walks this run (-1: not applicable)
-    backend: str = ""      # resolved backend that produced the result
+    n_sweeps: int
+    n_traversals: int = -1
+    backend: str = ""
 
 
 def _unify_dense(labels, segs: grid.Segments):
@@ -73,8 +89,9 @@ def _preprocess(tree, segs, eps, min_pts: int):
     return core
 
 
-@jax.jit
-def _fused_first_pass_jit(tree, segs, eps, min_pts):
+@partial(jax.jit, static_argnames=("traverse_fn",))
+def _fused_first_pass_jit(tree, segs, eps, min_pts,
+                          traverse_fn=traversal.traverse):
     n = segs.n_points
     idx = jnp.arange(n, dtype=jnp.int32)
     # Candidate labels as if every point were core: own index, unified
@@ -85,7 +102,8 @@ def _fused_first_pass_jit(tree, segs, eps, min_pts):
     # so the count may saturate at min_pts - 1 (re-arming the dense
     # short-circuit for saturated lanes — the fused early exit).
     tr = traversal.fused_count_minlabel(tree, segs, eps, vals0,
-                                        cap=min_pts - 1)
+                                        cap=min_pts - 1,
+                                        traverse_fn=traverse_fn)
     core = segs.dense_pt | (tr.hits >= min_pts - 1)
     # Validate the candidate: vals0 maps loose points to themselves and
     # dense points to a dense (hence core) member, so core[cand] holds iff
@@ -104,10 +122,17 @@ def _fused_first_pass_jit(tree, segs, eps, min_pts):
     return core, labels0, vals0, absorbed, tr
 
 
-def _fused_first_pass(tree, segs, eps, min_pts: int):
-    """(core, labels0, vals0, absorbed, trace) from a single traversal."""
+def _fused_first_pass(tree, segs, eps, min_pts: int,
+                      traverse_fn=traversal.traverse):
+    """(core, labels0, vals0, absorbed, trace) from a single traversal.
+
+    ``traverse_fn`` selects the walk's execution engine — default the
+    vmapped reference engine; the ``pallas-tree`` backend passes
+    ``repro.kernels.traverse.traverse`` (bit-identical results).
+    """
     return _fused_first_pass_jit(tree, segs, eps,
-                                 jnp.asarray(min_pts, jnp.int32))
+                                 jnp.asarray(min_pts, jnp.int32),
+                                 traverse_fn=traverse_fn)
 
 
 def _pad_size(k: int) -> int:
@@ -132,13 +157,12 @@ def _compact_ids(mask_np: np.ndarray) -> jax.Array:
 
 
 def _gather_minlabel(tree, segs, eps, labels, gather_mask, ids,
-                     node_mask=None):
+                     node_mask=None, traverse_fn=traversal.traverse):
     """One (possibly compacted/pruned) min-label sweep, full-width output."""
-    tr = traversal.traverse(tree, segs,
-                            traversal.intersects(traversal.sphere(eps),
-                                                 ids=ids),
-                            traversal.MinLabelVisitor(labels, gather_mask),
-                            node_mask=node_mask)
+    tr = traverse_fn(tree, segs,
+                     traversal.intersects(traversal.sphere(eps), ids=ids),
+                     traversal.MinLabelVisitor(labels, gather_mask),
+                     node_mask=node_mask)
     n = segs.n_points
     safe = jnp.where(ids >= 0, ids, jnp.int32(n))  # padding -> dropped
     gathered = jnp.full(n, INT_MAX, jnp.int32).at[safe].set(
@@ -205,7 +229,7 @@ def _near_changed(keys: np.ndarray, d: int, changed_np: np.ndarray
 
 def _sweep_to_fixpoint(tree, segs, eps, core, labels0, *,
                        frontier: bool = True, collect_stats: bool = False,
-                       fused_init=None):
+                       fused_init=None, traverse_fn=traversal.traverse):
     """Hook+jump sweeps until the core-core components stabilize.
 
     Frontier restriction (DESIGN.md §4): labels only ever decrease and the
@@ -268,7 +292,7 @@ def _sweep_to_fixpoint(tree, segs, eps, core, labels0, *,
     stats = {"frontier_per_sweep": [], "active_per_sweep": [],
              "iters_per_sweep": [], "evals_per_sweep": []}
     while True:
-        tr = traversal.traverse(
+        tr = traverse_fn(
             tree, segs,
             traversal.intersects(traversal.sphere(eps), ids=ids),
             traversal.MinLabelVisitor(labels, gather_mask,
@@ -315,7 +339,8 @@ def _main_phase(tree, segs, eps, core, *, frontier: bool = True):
     return labels, sweeps
 
 
-def _assign_borders(tree, segs, eps, core, core_labels):
+def _assign_borders(tree, segs, eps, core, core_labels,
+                    traverse_fn=traversal.traverse):
     """Borders take the min adjacent core root; isolated non-core -> noise.
 
     Traverses a compacted non-core query set (usually a small minority),
@@ -325,7 +350,8 @@ def _assign_borders(tree, segs, eps, core, core_labels):
     vals = jnp.where(core, core_labels, jnp.int32(INT_MAX))
     gathered, _ = _gather_minlabel(tree, segs, eps, vals, core, ids,
                                    node_mask=_frontier_node_mask(tree, segs,
-                                                                 core))
+                                                                 core),
+                                   traverse_fn=traverse_fn)
     labels = jnp.where(core, core_labels, gathered)
     return jnp.where(labels == INT_MAX, jnp.int32(-1), labels)
 
@@ -352,9 +378,18 @@ def cluster_from_index(segs: grid.Segments, tree, eps: float, min_pts: int,
     ``tree`` may be None when ``segs.n_segments == 1`` (single dense cell).
     This is the entry the dispatcher (repro.core.dispatch) reuses so an
     index cached across ``eps``/``min_pts`` sweeps skips the build.
+    ``backend="pallas-tree"`` runs every traversal through the Pallas
+    kernel engine (``repro.kernels.traverse``; DESIGN.md §9) — labels,
+    core masks, and sweep counts are bit-identical to the reference
+    engine, only the walk's lowering changes.
     """
     n = segs.n_points
     stats: dict = {}
+    # the walk's execution engine, resolved once for every phase below
+    traverse_fn = traversal.traverse
+    if backend == "pallas-tree":
+        from repro.kernels import traverse as pallas_traverse
+        traverse_fn = pallas_traverse.traverse
     if n == 1:
         noise = min_pts > 1
         res = DBSCANResult(labels=jnp.array([-1 if noise else 0], jnp.int32),
@@ -374,17 +409,19 @@ def cluster_from_index(segs: grid.Segments, tree, eps: float, min_pts: int,
     # Fused first pass: neighbor count + hooked labels in ONE traversal
     # (the seed spent two: a count pass and the first min-label sweep).
     core, labels0, vals0, absorbed, first = _fused_first_pass(
-        tree, segs, eps, min_pts)
+        tree, segs, eps, min_pts, traverse_fn=traverse_fn)
     core_labels, loop_sweeps, sweep_stats = _sweep_to_fixpoint(
         tree, segs, eps, core, labels0, frontier=frontier,
-        collect_stats=with_stats, fused_init=(vals0, absorbed))
+        collect_stats=with_stats, fused_init=(vals0, absorbed),
+        traverse_fn=traverse_fn)
     n_sweeps = 1 + loop_sweeps          # the fused pass is sweep #1
     n_traversals = n_sweeps
 
     if star:
         labels_sorted = jnp.where(core, core_labels, jnp.int32(-1))
     else:
-        labels_sorted = _assign_borders(tree, segs, eps, core, core_labels)
+        labels_sorted = _assign_borders(tree, segs, eps, core, core_labels,
+                                        traverse_fn=traverse_fn)
         n_traversals += 1
 
     labels, n_clusters = _finalize(labels_sorted, segs.order, n)
@@ -406,16 +443,17 @@ def dbscan(points, eps: float, min_pts: int, *, algorithm: str = "auto",
     """DBSCAN via the paper's tree-based algorithms.
 
     algorithm: "fdbscan" | "fdbscan-densebox" build the named tree index
-    directly; "auto", "tiled", "sharded" and "stream" go through the
-    unified dispatcher (repro.core.dispatch), which probes the eps-grid
-    occupancy and may pick the MXU tile backend, the multi-device sharded
-    tree path (when a ``mesh`` is active), or a one-shot streaming
-    snapshot (DESIGN.md §7; use ``dispatch.stream_handle`` to keep the
-    handle for inserts). star=True implements DBSCAN* (no border points;
-    non-core -> noise). frontier=False forces full (unrestricted) sweeps.
+    directly; "auto", "tiled", "sharded", "stream" and "pallas-tree" go
+    through the unified dispatcher (repro.core.dispatch), which probes the
+    eps-grid occupancy and may pick the MXU tile backend, the multi-device
+    sharded tree path (when a ``mesh`` is active), the Pallas traversal
+    kernel (DESIGN.md §9), or a one-shot streaming snapshot (DESIGN.md §7;
+    use ``dispatch.stream_handle`` to keep the handle for inserts).
+    star=True implements DBSCAN* (no border points; non-core -> noise).
+    frontier=False forces full (unrestricted) sweeps.
     """
     points = jnp.asarray(points)
-    if algorithm in ("auto", "tiled", "sharded", "stream"):
+    if algorithm in ("auto", "tiled", "sharded", "stream", "pallas-tree"):
         from . import dispatch
         return dispatch.dbscan(points, eps, min_pts, algorithm=algorithm,
                                star=star, frontier=frontier, mesh=mesh)

@@ -79,6 +79,25 @@ def radius_visit(points, r: float, callback, carry=None, *,
     the index's *sorted* lane order for resident queries — the visitor
     sees sorted point ids ``j``; ``segs.order[j]`` maps them back).
     Builds (or fetches) the cached tree index for ``points``.
+
+    Args:
+        points: (n, d) resident points, d in (2, 3), n >= 2.
+        r: search radius per query.
+        callback: a :class:`repro.core.traversal.Visitor` instance
+            (registered as a pytree).
+        carry: optional initial accumulator; ``None`` asks the
+            callback's ``init_carry``.
+        query_pts: optional (q, d) external query batch; ``None``
+            traverses for every resident point.
+
+    Returns:
+        The :class:`repro.core.traversal.Trace` — final carry plus the
+        engine's per-lane ``evals``/``iters`` work counters.
+
+    Raises:
+        ValueError: no tree index exists for these points (< 2 points or
+            d outside (2, 3)) — use :func:`neighbor_count`/:func:`knn`,
+            whose brute-force fallbacks cover degenerate inputs.
     """
     points = jnp.asarray(points)
     p = _tree_plan(points)
@@ -99,7 +118,19 @@ def neighbor_count(points, r: float, *, query_pts=None,
 
     Resident queries count themselves (|N_r| includes the center, as in
     DBSCAN's core test); external queries count every resident match.
-    Results are in original point order (resident) or ``query_pts`` order.
+
+    Args:
+        points: (n, d) resident points (any n, any d — inputs outside
+            the tree's reach fall back to exact brute force).
+        r: search radius.
+        query_pts: optional (q, d) external queries; ``None`` counts for
+            every resident point.
+        cap: saturation bound — a lane stops traversing once its count
+            reaches ``cap`` (the paper's min_pts early exit).
+
+    Returns:
+        int32 counts in original point order (resident queries) or
+        ``query_pts`` order (external queries).
     """
     points = jnp.asarray(points)
     n, d = points.shape
@@ -126,6 +157,23 @@ def knn(points, k: int, *, query_pts=None, radius=None) -> KNNResult:
     than its current k-th best (shrinking ball), optionally capped at
     ``radius``. Ties at the k-th distance resolve to the smaller original
     index — identical to a stable sort of the brute-force distance row.
+
+    Args:
+        points: (n, d) resident points (degenerate inputs fall back to
+            an exact brute-force path with the same tie rules).
+        k: neighbors per query (static — it sizes the result).
+        query_pts: optional (q, d) external queries; ``None`` queries
+            every resident point (each is its own nearest neighbor at
+            distance 0).
+        radius: optional search-radius cap; slots beyond the reachable
+            neighbor count pad with index -1 / distance +inf.
+
+    Returns:
+        A :class:`KNNResult` with (q, k) ``indices`` (original point
+        order) and ``distances``, ascending by (distance, index).
+
+    Raises:
+        ValueError: ``k < 1``.
     """
     if k < 1:
         raise ValueError(f"k must be >= 1; got {k}")

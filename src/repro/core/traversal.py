@@ -246,15 +246,64 @@ class Visitor:
     """
 
     def init_carry(self, ids, external: bool, segs: Segments):
+        """Build the batch-wide initial accumulator pytree.
+
+        Args:
+            ids: (L,) int32 lane id vector (-1 marks inert padding).
+            external: the batch queries points not resident in the tree.
+            segs: the segment index being traversed.
+
+        Returns:
+            The carry pytree; every leaf's leading dim is the lane count.
+        """
         raise NotImplementedError
 
     def visit(self, carry, j, d2, hit, ctx):
+        """Consume one candidate member (called for every work unit).
+
+        Args:
+            carry: the lane's current accumulator pytree.
+            j: sorted point index of the candidate member.
+            d2: squared distance query→member.
+            hit: whether the predicate matched — the hook runs
+                unconditionally; misses and dead lanes must be masked
+                with ``jnp.where`` (never branched on), which is what
+                keeps the K-unroll dead-guarding intact.
+            ctx: the per-lane :class:`QueryCtx`.
+
+        Returns:
+            ``(carry, matched)`` — the updated accumulator and whether
+            the visitor *accepted* the neighbor (drives the dense-segment
+            short-circuit via :meth:`segment_done`).
+        """
         raise NotImplementedError
 
     def done(self, carry, ctx):
+        """Lane early-exit: a True lane stops traversing (feeds the
+        while-loop mask — the engine never asks it again). Default:
+        never exit early.
+
+        Returns:
+            bool (per lane).
+        """
         return jnp.bool_(False)
 
     def segment_done(self, carry, matched, seg_dense, ctx):
+        """May the rest of the current segment be skipped after a visit?
+
+        The dense-cell short-circuit (paper §4.2): all members of a dense
+        segment share one label and core status, so one accepted hit can
+        stand for the whole cell. Default: never skip.
+
+        Args:
+            carry: the accumulator *after* the visit.
+            matched: did the visitor accept the member just visited?
+            seg_dense: is the current segment a dense cell?
+            ctx: the per-lane :class:`QueryCtx`.
+
+        Returns:
+            bool (per lane) — True skips the segment's remaining members.
+        """
         return jnp.bool_(False)
 
 
@@ -424,6 +473,148 @@ class KNNVisitor(Visitor):
 # the engine                                                            #
 # --------------------------------------------------------------------- #
 
+def lane_arrays(segs: Segments, predicates, use_range_mask: bool = False):
+    """Resolve a predicate batch into per-lane query arrays.
+
+    Returns ``(query_ids, q_arr, self_arr, dense_arr, rank_arr, external,
+    r2, is_nearest)``: the lane id vector (-1 marks inert padding), the
+    per-lane query coordinates, the engine context source arrays, whether
+    the batch is external (DESIGN.md §6), the squared (initial) search
+    radius, and whether the batch is distance-bounded k-NN.
+
+    Shared by the vmapped reference engine (:func:`traverse_impl`) and the
+    Pallas kernel backend (``repro.kernels.traverse``) so both resolve
+    predicates identically.
+    """
+    n = segs.n_points
+    pts = segs.pts
+    is_nearest = isinstance(predicates, Nearest)
+    if is_nearest:
+        r2 = (jnp.asarray(jnp.inf, pts.dtype) if predicates.r is None
+              else jnp.asarray(predicates.r, pts.dtype) ** 2)
+    else:
+        r2 = jnp.asarray(predicates.geometry.r, pts.dtype) ** 2
+    query_ids, query_pts = predicates.ids, predicates.pts
+    external = query_pts is not None
+    if external:
+        if use_range_mask:
+            raise ValueError("use_range_mask needs tree-resident queries")
+        if query_ids is None:
+            query_ids = jnp.zeros(query_pts.shape[0], jnp.int32)
+        q_arr = query_pts
+        self_arr = jnp.full(query_ids.shape, -1, jnp.int32)   # never matches
+        dense_arr = jnp.zeros(query_ids.shape, bool)
+        rank_arr = jnp.zeros(query_ids.shape, jnp.int32)
+    else:
+        if query_ids is None:
+            query_ids = jnp.arange(n, dtype=jnp.int32)
+        safe = jnp.maximum(query_ids, jnp.int32(0))
+        q_arr = pts[safe]
+        self_arr = query_ids
+        dense_arr = segs.dense_pt[safe]
+        rank_arr = segs.seg_of_point[safe]
+    return (query_ids, q_arr, self_arr, dense_arr, rank_arr, external, r2,
+            is_nearest)
+
+
+def make_step(tree: Tree, segs: Segments, callback, *, q, ctx: QueryCtx,
+              lane_wide, r2, is_nearest: bool,
+              node_mask=None, node_mask_wide=None,
+              use_range_mask: bool = False):
+    """Build the dead-guarded one-unit-of-work step for the rope walk.
+
+    The returned ``(step, live_of)`` pair is *shape-polymorphic over a
+    leading lane axis*: the reference engine instantiates it with scalar
+    per-lane values under ``vmap``; the Pallas kernel backend
+    (``repro.kernels.traverse``) instantiates it once per lane tile with
+    ``(lane_tile,)``-shaped state. Both trace the exact same op sequence,
+    which is what pins the kernel bit-identical to the interpreter-path
+    engine.
+
+    ``step`` maps ``(node, ptr, carry, evals) -> (node, ptr, carry,
+    evals)`` where every state select is masked by the lane's liveness
+    (the dead-guarding that makes K-unrolling exact); ``live_of(node,
+    carry)`` is the lane's loop-mask condition.
+    """
+    m = segs.n_segments
+    leaf_off = m - 1
+    pts = segs.pts
+    dual_nodes = node_mask_wide is not None
+
+    def bound2(carry):
+        """Per-lane squared search radius at this instant."""
+        if is_nearest:
+            return jnp.minimum(r2, callback.worst_d2(carry))
+        return r2
+
+    def live_of(node, carry):
+        return (node >= 0) & ~callback.done(carry, ctx)
+
+    def step(state):
+        """One unit of work; a no-op for lanes that already finished."""
+        node, ptr, carry, evals = state
+        live = live_of(node, carry)
+        node_safe = jnp.maximum(node, 0)
+        is_member = live & (ptr >= 0)
+        bnd = bound2(carry)
+
+        # ---- member step: one distance test against sorted point ptr --
+        j = jnp.where(is_member, ptr, 0)
+        diff = q - pts[j]
+        d2 = jnp.sum(diff * diff, axis=-1)
+        hit = is_member & (d2 <= bnd)
+        seg_id = jnp.where(node_safe >= leaf_off, node_safe - leaf_off, 0)
+        carry_m, matched = callback.visit(carry, j, d2, hit, ctx)
+        stop_seg = callback.segment_done(carry_m, matched,
+                                         segs.dense_seg[seg_id], ctx)
+        seg_done = (ptr + 1 >= segs.seg_end[seg_id]) | stop_seg
+        member_next_node = jnp.where(seg_done, tree.miss[node_safe], node)
+        member_next_ptr = jnp.where(seg_done, jnp.int32(-1), ptr + 1)
+
+        # ---- node step: descend / skip -------------------------------
+        is_leaf = node_safe >= leaf_off
+        seg = jnp.where(is_leaf, node_safe - leaf_off, 0)
+        bd2 = _box_dist2(q, tree.box_lo[node_safe], tree.box_hi[node_safe])
+        overlap = bd2 <= bnd
+        if use_range_mask:
+            overlap = overlap & (tree.range_r[node_safe] >= ctx.rank)
+        if node_mask is not None:
+            if dual_nodes:
+                overlap = overlap & jnp.where(lane_wide,
+                                              node_mask_wide[node_safe],
+                                              node_mask[node_safe])
+            else:
+                overlap = overlap & node_mask[node_safe]
+        # internal: go left on overlap else rope; leaf: enter members on
+        # overlap (empty segments skip straight to the rope).
+        child = jnp.where(node_safe < leaf_off,
+                          jnp.where(overlap, tree_left(tree, node_safe),
+                                    tree.miss[node_safe]),
+                          node)
+        enter_members = is_leaf & overlap & (segs.seg_start[seg]
+                                             < segs.seg_end[seg])
+        node_next_node = jnp.where(is_leaf,
+                                   jnp.where(enter_members, node,
+                                             tree.miss[node_safe]),
+                                   child)
+        node_next_ptr = jnp.where(enter_members, segs.seg_start[seg],
+                                  jnp.int32(-1))
+
+        node_new = jnp.where(is_member, member_next_node, node_next_node)
+        ptr_new = jnp.where(is_member, member_next_ptr, node_next_ptr)
+        carry_new = jax.tree.map(
+            lambda cm, c: jnp.where(is_member, cm, c), carry_m, carry)
+        evals_new = evals + jnp.where(is_member, 1, 0)
+        # freeze finished lanes so unrolled sub-steps are no-ops
+        return (jnp.where(live, node_new, node),
+                jnp.where(live, ptr_new, ptr),
+                jax.tree.map(lambda cn, c: jnp.where(live, cn, c),
+                             carry_new, carry),
+                jnp.where(live, evals_new, evals))
+
+    return step, live_of
+
+
 def traverse_impl(tree: Tree, segs: Segments, predicates, callback,
                   carry=None,
                   node_mask: jax.Array | None = None,
@@ -452,117 +643,26 @@ def traverse_impl(tree: Tree, segs: Segments, predicates, callback,
         ``ctx.wide`` so a dual-mask visitor switches its gather mask
         (the split first main sweep, DESIGN.md §4).
     """
-    n = segs.n_points
     m = segs.n_segments
     leaf_off = m - 1
-    pts = segs.pts
     root = jnp.int32(0 if m > 1 else leaf_off)  # m==1: the single leaf
-    is_nearest = isinstance(predicates, Nearest)
-    if is_nearest:
-        r2 = (jnp.asarray(jnp.inf, pts.dtype) if predicates.r is None
-              else jnp.asarray(predicates.r, pts.dtype) ** 2)
-    else:
-        r2 = jnp.asarray(predicates.geometry.r, pts.dtype) ** 2
-    query_ids, query_pts = predicates.ids, predicates.pts
-    external = query_pts is not None
-    if external:
-        if use_range_mask:
-            raise ValueError("use_range_mask needs tree-resident queries")
-        if query_ids is None:
-            query_ids = jnp.zeros(query_pts.shape[0], jnp.int32)
-        q_arr = query_pts
-        self_arr = jnp.full(query_ids.shape, -1, jnp.int32)   # never matches
-        dense_arr = jnp.zeros(query_ids.shape, bool)
-        rank_arr = jnp.zeros(query_ids.shape, jnp.int32)
-    else:
-        if query_ids is None:
-            query_ids = jnp.arange(n, dtype=jnp.int32)
-        safe = jnp.maximum(query_ids, jnp.int32(0))
-        q_arr = pts[safe]
-        self_arr = query_ids
-        dense_arr = segs.dense_pt[safe]
-        rank_arr = segs.seg_of_point[safe]
+    (query_ids, q_arr, self_arr, dense_arr, rank_arr, external, r2,
+     is_nearest) = lane_arrays(segs, predicates, use_range_mask)
     if carry is None:
         carry = callback.init_carry(query_ids, external, segs)
     if wide_lanes is None:
         wide_lanes = jnp.zeros_like(query_ids, dtype=bool)
-    dual_nodes = node_mask_wide is not None
 
     def one_query(qid, lane_wide, q, q_self, q_dense, q_rank, carry0):
         lane_on = qid >= 0
         ctx = QueryCtx(self_id=q_self, dense=q_dense, rank=q_rank,
                        wide=lane_wide)
-
-        def bound2(carry):
-            """Per-lane squared search radius at this instant."""
-            if is_nearest:
-                return jnp.minimum(r2, callback.worst_d2(carry))
-            return r2
-
-        def live_of(node, carry):
-            return (node >= 0) & ~callback.done(carry, ctx)
-
-        def step(state):
-            """One unit of work; a no-op for lanes that already finished."""
-            node, ptr, carry, evals = state
-            live = live_of(node, carry)
-            node_safe = jnp.maximum(node, 0)
-            is_member = live & (ptr >= 0)
-            bnd = bound2(carry)
-
-            # ---- member step: one distance test against sorted point ptr --
-            j = jnp.where(is_member, ptr, 0)
-            diff = q - pts[j]
-            d2 = jnp.sum(diff * diff)
-            hit = is_member & (d2 <= bnd)
-            seg_id = jnp.where(node_safe >= leaf_off, node_safe - leaf_off, 0)
-            carry_m, matched = callback.visit(carry, j, d2, hit, ctx)
-            stop_seg = callback.segment_done(carry_m, matched,
-                                             segs.dense_seg[seg_id], ctx)
-            seg_done = (ptr + 1 >= segs.seg_end[seg_id]) | stop_seg
-            member_next_node = jnp.where(seg_done, tree.miss[node_safe], node)
-            member_next_ptr = jnp.where(seg_done, jnp.int32(-1), ptr + 1)
-
-            # ---- node step: descend / skip -------------------------------
-            is_leaf = node_safe >= leaf_off
-            seg = jnp.where(is_leaf, node_safe - leaf_off, 0)
-            bd2 = _box_dist2(q, tree.box_lo[node_safe], tree.box_hi[node_safe])
-            overlap = bd2 <= bnd
-            if use_range_mask:
-                overlap = overlap & (tree.range_r[node_safe] >= q_rank)
-            if node_mask is not None:
-                if dual_nodes:
-                    overlap = overlap & jnp.where(lane_wide,
-                                                  node_mask_wide[node_safe],
-                                                  node_mask[node_safe])
-                else:
-                    overlap = overlap & node_mask[node_safe]
-            # internal: go left on overlap else rope; leaf: enter members on
-            # overlap (empty segments skip straight to the rope).
-            child = jnp.where(node_safe < leaf_off,
-                              jnp.where(overlap, tree_left(tree, node_safe),
-                                        tree.miss[node_safe]),
-                              node)
-            enter_members = is_leaf & overlap & (segs.seg_start[seg]
-                                                 < segs.seg_end[seg])
-            node_next_node = jnp.where(is_leaf,
-                                       jnp.where(enter_members, node,
-                                                 tree.miss[node_safe]),
-                                       child)
-            node_next_ptr = jnp.where(enter_members, segs.seg_start[seg],
-                                      jnp.int32(-1))
-
-            node_new = jnp.where(is_member, member_next_node, node_next_node)
-            ptr_new = jnp.where(is_member, member_next_ptr, node_next_ptr)
-            carry_new = jax.tree.map(
-                lambda cm, c: jnp.where(is_member, cm, c), carry_m, carry)
-            evals_new = evals + jnp.where(is_member, 1, 0)
-            # freeze finished lanes so unrolled sub-steps are no-ops
-            return (jnp.where(live, node_new, node),
-                    jnp.where(live, ptr_new, ptr),
-                    jax.tree.map(lambda cn, c: jnp.where(live, cn, c),
-                                 carry_new, carry),
-                    jnp.where(live, evals_new, evals))
+        step, live_of = make_step(tree, segs, callback, q=q, ctx=ctx,
+                                  lane_wide=lane_wide, r2=r2,
+                                  is_nearest=is_nearest,
+                                  node_mask=node_mask,
+                                  node_mask_wide=node_mask_wide,
+                                  use_range_mask=use_range_mask)
 
         def cond(state):
             node, ptr, carry, evals, iters = state
@@ -649,20 +749,25 @@ def minlabel_sweep(tree: Tree, segs: Segments, eps: float, labels: jax.Array,
 
 def fused_count_minlabel(tree: Tree, segs: Segments, eps: float,
                          point_vals: jax.Array, point_mask=None,
-                         query_ids=None, cap: int | jax.Array = INT_MAX
-                         ) -> Trace:
+                         query_ids=None, cap: int | jax.Array = INT_MAX,
+                         traverse_fn=None) -> Trace:
     """The fused first pass (DESIGN.md §4): one walk, two answers.
 
     Returns the full ``Trace``: ``acc`` is the min gathered value over all
     masked neighbors (candidate label — the caller validates it against the
     core mask once counts are known), ``hits`` the neighbor count excluding
     self, exact up to saturation at ``cap`` (pass ``min_pts - 1``; dense
-    queries are core by construction and may undercount).
+    queries are core by construction and may undercount). ``traverse_fn``
+    swaps the execution engine (the Pallas kernel backend passes
+    ``repro.kernels.traverse.traverse``); the default is the vmapped
+    reference engine.
     """
     if point_mask is None:
         point_mask = jnp.ones(segs.n_points, bool)
-    return traverse(tree, segs, intersects(sphere(eps), ids=query_ids),
-                    CountMinLabelVisitor(point_vals, point_mask, cap=cap))
+    if traverse_fn is None:   # the one place the engine default resolves
+        traverse_fn = traverse
+    return traverse_fn(tree, segs, intersects(sphere(eps), ids=query_ids),
+                       CountMinLabelVisitor(point_vals, point_mask, cap=cap))
 
 
 def border_gather(tree: Tree, segs: Segments, eps: float, root_labels,

@@ -1,18 +1,14 @@
-"""Per-tensor sharding resolution with divisibility checks.
+"""Mesh/shard_map utilities shared by the distributed DBSCAN paths.
 
-Rules are by leaf name (the param dicts use stable names across archs);
-every rule is validated against the actual dimension size and the mesh axis
-size — a non-divisible dim falls back to replication, so *every* assigned
-arch lowers on *every* mesh (e.g. gemma2's 8 heads on a model=16 axis
-replicate heads and shard d_ff instead).
+Two kinds of helpers live here:
 
-Layout summary (DESIGN.md §5):
-  * tensor parallel ("model"): attention heads, FFN hidden, MoE experts
-    (fallback: expert d_ff), vocab/embedding;
-  * data parallel ("pod", "data"): batch dim of activations;
-  * sequence parallel ("data"): KV-cache length for long-context decode;
-  * ZeRO-1 ("data"): optimizer master/m/v sharded on the largest divisible
-    dim on top of the param's model-axis sharding.
+  * jax API compatibility shims (:func:`vary`, :func:`shard_map_compat`)
+    so the collective programs lower across the ``shard_map`` /
+    VMA-typing renames;
+  * slab geometry for the sharded tree path (DESIGN.md §6):
+    :func:`shard_bounds` fits a shard's resident AABB and
+    :func:`halo_mask` is the eps-dilated membership test that decides
+    which traveling queries must traverse a remote shard's tree at all.
 """
 from __future__ import annotations
 
@@ -20,31 +16,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-
-# leaf name -> preferred dim to shard over the model axis, by ndim
-# (negative dims are relative to the *unstacked* param; a leading superblock
-# axis is detected via the "blocks" path component and offsets positive dims)
-_MODEL_RULES: dict[str, dict[int, int]] = {
-    "embed": {2: 0},        # vocab-parallel
-    "unembed": {2: 1},
-    "projector": {2: 1},
-    "wq": {2: 1}, "wk": {2: 1}, "wv": {2: 1}, "wo": {2: 0},
-    "bq": {1: 0}, "bk": {1: 0}, "bv": {1: 0},
-    # dense mlp (2D) vs moe experts (3D): experts dim first, d_ff fallback
-    "w_gate": {2: 1, 3: 0}, "w_up": {2: 1, 3: 0}, "w_down": {2: 0, 3: 0},
-    "w_in": {2: 1}, "w_out": {2: 0}, "b_in": {1: 0},
-    "router": {},
-    # mamba
-    "in_proj": {2: 1}, "out_proj": {2: 0}, "x_proj": {2: 0},
-    "dt_proj": {2: 1}, "dt_bias": {1: 0}, "A_log": {2: 0}, "D": {1: 0},
-    "conv_w": {2: 1}, "conv_b": {1: 0},
-    # rwkv
-    "wr": {2: 1}, "wg": {2: 1},
-    "cm_wk": {2: 1}, "cm_wv": {2: 0}, "cm_wr": {2: 1},
-}
-_MOE_FALLBACK = {"w_gate": 2, "w_up": 2, "w_down": 1}  # shard d_ff instead
+from jax.sharding import Mesh
 
 
 def vary(x, axis: str):
@@ -115,130 +87,3 @@ def halo_mask(q_pts: jax.Array, lo: jax.Array, hi: jax.Array,
 
 def _axis_size(mesh: Mesh, axis: Optional[str]) -> int:
     return dict(zip(mesh.axis_names, mesh.devices.shape)).get(axis, 1)
-
-
-def param_spec(path: tuple, shape: tuple, mesh: Mesh,
-               model_axis: str = "model") -> P:
-    names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
-    leaf = names[-1]
-    stacked = any(n in ("blocks", "enc_blocks") for n in names)
-    off = 1 if stacked else 0
-    base_ndim = len(shape) - off
-    rule = _MODEL_RULES.get(leaf, {})
-    dim = rule.get(base_ndim)
-    msize = _axis_size(mesh, model_axis)
-    spec = [None] * len(shape)
-    if dim is not None and msize > 1:
-        d = dim + off
-        if shape[d] % msize == 0:
-            spec[d] = model_axis
-        elif base_ndim == 3 and leaf in _MOE_FALLBACK:
-            d2 = _MOE_FALLBACK[leaf] + off
-            if shape[d2] % msize == 0:
-                spec[d2] = model_axis
-    return P(*spec)
-
-
-def params_shardings(params_shape, mesh: Mesh, model_axis: str = "model"):
-    """NamedShardings for a params pytree (of arrays or ShapeDtypeStructs)."""
-    return jax.tree_util.tree_map_with_path(
-        lambda path, leaf: NamedSharding(
-            mesh, param_spec(path, leaf.shape, mesh, model_axis)),
-        params_shape)
-
-
-def zero1_spec(pspec: P, shape: tuple, mesh: Mesh,
-               data_axis: str = "data") -> P:
-    """Add ZeRO-1 data-axis sharding on the largest still-free dim."""
-    dsize = _axis_size(mesh, data_axis)
-    if dsize <= 1:
-        return pspec
-    spec = list(pspec) + [None] * (len(shape) - len(pspec))
-    order = sorted(range(len(shape)), key=lambda d: -shape[d])
-    for d in order:
-        if spec[d] is None and shape[d] % dsize == 0:
-            spec[d] = data_axis
-            break
-    return P(*spec)
-
-
-def opt_shardings(opt_shape, params_shardings_tree, mesh: Mesh,
-                  zero1: bool = True, data_axis: str = "data"):
-    """Shardings for AdamWState: param sharding + optional ZeRO-1."""
-    from repro.train.optimizer import AdamWState
-
-    def like(tree_shape):
-        return jax.tree.map(
-            lambda leaf, ps: NamedSharding(
-                mesh, zero1_spec(ps.spec, leaf.shape, mesh, data_axis)
-                if zero1 else ps.spec),
-            tree_shape, params_shardings_tree)
-
-    return AdamWState(
-        step=NamedSharding(mesh, P()),
-        master=like(opt_shape.master),
-        m=like(opt_shape.m),
-        v=like(opt_shape.v))
-
-
-def batch_shardings(batch_shape, mesh: Mesh, data_axes=("data",)):
-    """Batch-dim sharding for input batches (dim 0), replicate if B=1."""
-    axes = tuple(a for a in data_axes if _axis_size(mesh, a) > 1)
-    total = int(np.prod([_axis_size(mesh, a) for a in axes])) if axes else 1
-
-    def spec(leaf):
-        if leaf.ndim >= 1 and total > 1 and leaf.shape[0] % total == 0:
-            return NamedSharding(mesh, P(axes))
-        return NamedSharding(mesh, P())
-
-    return jax.tree.map(spec, batch_shape)
-
-
-def cache_shardings(cache_shape, mesh: Mesh, model_axis: str = "model",
-                    data_axis: str = "data", batch: int = 1,
-                    kv_policy: str = "auto"):
-    """Decode-cache shardings.
-
-    kv caches (NB, B, S, KV, hd): batch over data when divisible, else
-    *sequence parallel* over data (long-context, B=1). The model axis goes
-    by ``kv_policy``:
-      * "heads":   kv heads over model (requires KV % model == 0),
-      * "seq":     cache sequence over model — attention becomes seq-partial
-                   reductions (small per-layer all-reduces) instead of
-                   whole-cache all-gathers (EXPERIMENTS.md §Perf it. 2),
-      * "headdim": head_dim over model (the naive fallback; measured to
-                   force whole-cache all-gathers when KV % model != 0),
-      * "auto":    heads if divisible else seq (the validated deployable
-                   default after §Perf iteration 2; "headdim" reproduces
-                   the recorded baseline).
-    """
-    msize = _axis_size(mesh, model_axis)
-    dsize = _axis_size(mesh, data_axis)
-
-    def spec(leaf):
-        s = [None] * leaf.ndim
-        if leaf.ndim >= 2 and dsize > 1:
-            if leaf.shape[1] % dsize == 0:
-                s[1] = data_axis                       # batch
-            elif leaf.ndim >= 3 and leaf.shape[2] % dsize == 0:
-                s[2] = data_axis                       # sequence (SP)
-        if leaf.ndim >= 5 and msize > 1:
-            heads_ok = leaf.shape[3] % msize == 0
-            seq_ok = leaf.shape[2] % msize == 0 and s[2] is None
-            policy = kv_policy
-            if policy == "auto":
-                policy = "heads" if heads_ok else ("seq" if seq_ok
-                                                   else "headdim")
-            if policy == "heads" and heads_ok:
-                s[3] = model_axis                      # kv heads
-            elif policy == "seq" and seq_ok:
-                s[2] = model_axis                      # sequence over TP
-            elif leaf.shape[4] % msize == 0:
-                s[4] = model_axis                      # head_dim
-        elif leaf.ndim == 4 and msize > 1 and leaf.shape[-2] % msize == 0:
-            s[-2] = model_axis                         # mamba d_inner etc.
-        elif leaf.ndim == 3 and msize > 1 and leaf.shape[-1] % msize == 0:
-            s[-1] = model_axis
-        return NamedSharding(mesh, P(*s))
-
-    return jax.tree.map(spec, cache_shape)

@@ -1,5 +1,3 @@
-# NOTE: dryrun is intentionally not imported here — it sets XLA_FLAGS on
-# import and must only run as its own process (python -m repro.launch.dryrun).
-from . import mesh, roofline, specs
+from . import mesh, roofline
 
-__all__ = ["mesh", "roofline", "specs"]
+__all__ = ["mesh", "roofline"]

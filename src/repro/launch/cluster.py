@@ -20,7 +20,7 @@ def main(argv=None):
     ap.add_argument("--minpts", type=int, required=True)
     ap.add_argument("--algorithm", default="auto",
                     choices=["auto", "fdbscan", "fdbscan-densebox", "tiled",
-                             "gdbscan", "ring"])
+                             "pallas-tree", "gdbscan", "ring"])
     ap.add_argument("--star", action="store_true", help="DBSCAN* variant")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", help="write labels .npy")

@@ -6,8 +6,7 @@ import; tests and benches see the real single device).
 
 Topology: a TPU v5e pod of 256 chips is a 16x16 mesh (data, model); the
 multi-pod configuration adds a leading "pod" axis (2 pods = 512 chips).
-The pod axis is pure data parallelism by default and is the pipeline axis
-for the GPipe schedule in repro/train/pipeline.py.
+The sharded DBSCAN path (DESIGN.md §6) shards points over the data axis.
 """
 from __future__ import annotations
 

@@ -16,6 +16,7 @@ FAST_MODULES = {
     "test_traversal_fused",
     "test_dispatch",
     "test_neighbors",
+    "test_pallas_tree",
 }
 
 

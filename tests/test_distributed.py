@@ -74,121 +74,3 @@ def test_ring_dbscan_minpts2_and_3d():
     check_dbscan(pts, 0.1, 2, r.labels, r.core_mask)
     print('3d ok', r.n_clusters)
     """)
-
-
-def test_compressed_gradient_allreduce():
-    run_with_devices("""
-    import jax, jax.numpy as jnp, numpy as np
-    from jax.sharding import PartitionSpec as P
-    from repro.distributed.compression import make_dp_grad_fn
-
-    mesh = jax.make_mesh((8,), ('data',))
-    w = jnp.asarray(np.random.default_rng(0).normal(size=(16, 4)), jnp.float32)
-    x = jnp.asarray(np.random.default_rng(1).normal(size=(64, 16)), jnp.float32)
-
-    def loss(w, xb):
-        return jnp.mean((xb @ w) ** 2)
-
-    exact = jax.grad(loss)(w, x)
-    for method, tol in [('none', 1e-6), ('bf16', 2e-2), ('int8', 3e-2)]:
-        fn = jax.jit(make_dp_grad_fn(loss, mesh, method=method))
-        l, g = fn(w, x)
-        err = float(jnp.max(jnp.abs(g - exact)) / (jnp.max(jnp.abs(exact)) + 1e-9))
-        assert err < tol, (method, err)
-        print(method, 'rel err', err)
-    """)
-
-
-def test_gpipe_matches_sequential():
-    run_with_devices("""
-    import jax, jax.numpy as jnp, numpy as np
-    from repro.train.pipeline import gpipe, gpipe_bubble
-
-    mesh = jax.make_mesh((8,), ('pod',))
-    S, M, B, D = 8, 16, 4, 32
-    rng = np.random.default_rng(0)
-    Ws = jnp.asarray(rng.normal(size=(S, D, D)) / np.sqrt(D), jnp.float32)
-    xs = jnp.asarray(rng.normal(size=(M, B, D)), jnp.float32)
-
-    def stage(w, x):
-        return jnp.tanh(x @ w)
-
-    piped = jax.jit(gpipe(stage, mesh, axis='pod'))(Ws, xs)
-    ref = xs
-    for s in range(S):
-        ref = jax.vmap(lambda x: stage(Ws[s], x))(ref)
-    np.testing.assert_allclose(np.asarray(piped), np.asarray(ref),
-                               rtol=1e-5, atol=1e-5)
-    assert abs(gpipe_bubble(16, 8) - 7/23) < 1e-9
-    print('gpipe ok')
-    """)
-
-
-def test_elastic_checkpoint_reshard():
-    run_with_devices("""
-    import jax, jax.numpy as jnp, numpy as np, tempfile
-    from jax.sharding import NamedSharding, PartitionSpec as P
-    from repro.distributed.checkpoint import CheckpointManager
-
-    mesh8 = jax.make_mesh((8,), ('data',))
-    tree = {'w': jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
-            'b': jnp.ones((8,), jnp.float32)}
-    tree = jax.device_put(tree, NamedSharding(mesh8, P('data')))
-    with tempfile.TemporaryDirectory() as d:
-        ckpt = CheckpointManager(d)
-        ckpt.save(5, tree)
-        # "restart" with a different mesh shape: 4-way (elastic shrink)
-        mesh4 = jax.make_mesh((4, 2), ('data', 'model'))
-        sh = {'w': NamedSharding(mesh4, P('data', 'model')),
-              'b': NamedSharding(mesh4, P(None))}
-        restored, step = ckpt.restore(tree, shardings=sh)
-        assert step == 5
-        np.testing.assert_array_equal(np.asarray(restored['w']),
-                                      np.asarray(tree['w']))
-        assert restored['w'].sharding.spec == P('data', 'model')
-    print('elastic ok')
-    """)
-
-
-def test_sharded_train_step_on_8_devices():
-    """End-to-end: the production train step lowered on a real 4x2 mesh."""
-    run_with_devices("""
-    import jax, jax.numpy as jnp, numpy as np
-    from repro.configs import get
-    from repro.launch import specs
-    from repro.models import model
-    from repro.train.optimizer import adamw_init
-
-    mesh = jax.make_mesh((4, 2), ('data', 'model'))
-    cfg = get('qwen1.5-4b').reduced()
-    import dataclasses
-    from repro.launch.specs import Cell
-    fn, args, in_sh, out_sh, meta = None, None, None, None, None
-
-    from repro.train import step as step_lib
-    from repro.distributed import sharding as shd
-    params = model.init_params(cfg, jax.random.PRNGKey(0))
-    params_sh = shd.params_shardings(params, mesh)
-    params = jax.device_put(params, params_sh)
-    opt = adamw_init(params)
-    opt_sh = shd.opt_shardings(opt, params_sh, mesh, zero1=True)
-    opt = jax.device_put(opt, opt_sh)
-    batch = {'tokens': jnp.asarray(
-        np.random.default_rng(0).integers(0, cfg.vocab_size, (8, 64)),
-        jnp.int32)}
-    bsh = shd.batch_shardings(batch, mesh, ('data',))
-    batch = jax.device_put(batch, bsh)
-    from jax.sharding import NamedSharding, PartitionSpec as P
-    repl = NamedSharding(mesh, P())
-    metrics_sh = {'ce': repl, 'aux': repl, 'loss': repl, 'step': repl}
-    step = jax.jit(step_lib.make_train_step(cfg, n_micro=2),
-                   in_shardings=(params_sh, opt_sh, bsh),
-                   out_shardings=(params_sh, opt_sh, metrics_sh))
-    losses = []
-    for i in range(3):
-        params, opt, metrics = step(params, opt, batch)
-        losses.append(float(metrics['loss']))
-    assert all(np.isfinite(losses)), losses
-    assert losses[-1] < losses[0]
-    print('sharded step ok', losses)
-    """)

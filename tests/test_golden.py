@@ -58,6 +58,38 @@ def test_tree_backends_bit_identical(dset, backend):
 
 
 @pytest.mark.parametrize("dset", [c[0] for c in SCENARIOS])
+def test_pallas_tree_backend_bit_identical(dset):
+    # the Pallas traversal kernel (interpret mode on CPU CI) drives every
+    # walk over the same plain-fdbscan index, so its labels, core masks,
+    # and sweep counts must match the fdbscan goldens byte-for-byte
+    dset, n, eps, mp = _case(dset)
+    res = dbscan(pointclouds.load(dset, n), eps, mp, algorithm="pallas-tree")
+    assert res.backend == "pallas-tree"
+    _assert_result(dset, "fdbscan", res)
+    assert res.n_sweeps == int(GOLDEN[f"{dset}/fdbscan/n_sweeps"])
+    assert res.n_traversals == res.n_sweeps + 1
+
+
+@pytest.mark.parametrize("dset", [c[0] for c in SCENARIOS])
+def test_pallas_engine_counts_bit_identical(dset):
+    # kernel-level golden: exact uncapped neighbor counts out of the
+    # Pallas walk (original point order), plus eval-counter parity with
+    # the reference engine on the same walk
+    from repro.kernels import traverse as pallas_traverse
+    dset, n, eps, mp = _case(dset)
+    pts = pointclouds.load(dset, n)
+    p = plan(pts, eps, mp, algorithm="fdbscan")
+    pred = traversal.intersects(traversal.sphere(eps))
+    cb = traversal.CountVisitor(cap=traversal.INT_MAX)
+    tr = pallas_traverse.traverse(p.tree, p.segs, pred, cb)
+    counts = np.zeros(n, np.int64)
+    counts[np.asarray(p.segs.order)] = np.asarray(tr.acc)
+    np.testing.assert_array_equal(counts, GOLDEN[f"{dset}/counts"])
+    ref = traversal.traverse(p.tree, p.segs, pred, cb)
+    np.testing.assert_array_equal(np.asarray(ref.evals), np.asarray(tr.evals))
+
+
+@pytest.mark.parametrize("dset", [c[0] for c in SCENARIOS])
 def test_tiled_backend_bit_identical(dset):
     dset, n, eps, mp = _case(dset)
     res = dbscan(pointclouds.load(dset, n), eps, mp, algorithm="tiled")

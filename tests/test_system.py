@@ -78,22 +78,6 @@ def test_minpts2_equals_connected_components():
     assert same_partition(ours[~singles], lab[~singles])
 
 
-def test_dedup_pipeline_end_to_end():
-    """The paper's technique as a framework feature: duplicate-heavy batch
-    in, thinned batch out, fresh documents untouched."""
-    from repro.data.dedup import dedup_batch
-    from repro.data.lm_data import SyntheticLM
-    data = SyntheticLM(1024, 64, seed=9, dup_frac=0.5)
-    raw = data.batch(0, 48)
-    out, idx = dedup_batch({"tokens": raw["tokens"]})
-    dup = raw["is_dup"]
-    assert len(idx) < 48
-    # duplicates collapse hard; at most a couple of fresh docs may fall
-    # into a borderline cluster (3-D projection tail)
-    assert dup[idx].sum() <= dup.sum() // 2
-    assert (~dup[idx]).sum() >= (~dup).sum() - 2
-
-
 def test_sweep_convergence_bound():
     """Hook+jump sweep count stays logarithmic on adversarial chains."""
     for n in (128, 512):
