@@ -5,13 +5,16 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench bench-full docs docs-check
+.PHONY: test test-fast test-faults bench bench-full docs docs-check
 
 test:
 	$(PY) -m pytest -q --continue-on-collection-errors
 
 test-fast:
 	$(PY) -m pytest -q -m fast
+
+test-faults:
+	$(PY) -m pytest -q -m fault
 
 bench:
 	$(PY) -m benchmarks.run

@@ -71,7 +71,7 @@ def generate() -> str:
     from repro.core import traversal
     from repro.core import neighbors
     from repro.kernels import traverse as pallas_traverse
-    from repro.stream import StreamingDBSCAN
+    from repro.stream import StreamingDBSCAN, durability
 
     parts = [HEADER]
 
@@ -86,9 +86,24 @@ def generate() -> str:
     parts.append(_entry("StreamingDBSCAN", StreamingDBSCAN, kind="class"))
     parts.extend(_method_entries(
         StreamingDBSCAN,
-        ["insert", "query", "snapshot", "merge",
+        ["insert", "query", "snapshot", "merge", "checkpoint", "restore",
          "n_points", "n_main", "n_delta", "points"],
         "StreamingDBSCAN"))
+
+    parts.append("## Durability (`repro.stream.durability`)\n")
+    parts.append(_doc(durability) + "\n")
+    parts.append(_entry("durability.save_checkpoint",
+                        durability.save_checkpoint))
+    parts.append(_entry("durability.load_checkpoint",
+                        durability.load_checkpoint))
+    parts.append(_entry("durability.scan_wal", durability.scan_wal))
+    parts.append(_entry("durability.recover", durability.recover))
+    parts.append(_entry("durability.WriteAheadLog", durability.WriteAheadLog,
+                        kind="class"))
+    parts.append(_entry("durability.CheckpointError",
+                        durability.CheckpointError, kind="class"))
+    parts.append(_entry("durability.WALError", durability.WALError,
+                        kind="class"))
 
     parts.append("## Neighbor queries (`repro.neighbors`)\n")
     parts.append(_doc(neighbors) + "\n")

@@ -46,6 +46,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from . import fdbscan, grid, lbvh
+from .validate import check_points
 
 # Below this size the n^2 tile sweep is cheaper than divergent traversal
 # (one 128x128 MXU tile row per query block), and it keeps the CPU
@@ -210,9 +211,11 @@ def plan(points, eps: float, min_pts: int,
         stats dict that drove the decision (``stats["reason"]`` says why).
 
     Raises:
-        ValueError: unknown ``algorithm``; negative ``eps``; ``mesh=``
-            combined with a single-device algorithm; a sharded request
-            whose mesh lacks ``axis``; or a stream request with d ∉ {2, 3}.
+        ValueError: unknown ``algorithm``; negative ``eps``; malformed
+            ``points`` (empty, non-numeric, NaN/Inf coordinates — see
+            :func:`repro.core.validate.check_points`); ``mesh=`` combined
+            with a single-device algorithm; a sharded request whose mesh
+            lacks ``axis``; or a stream request with d ∉ {2, 3}.
     """
     if algorithm not in ALGORITHMS:
         raise ValueError(f"unknown algorithm {algorithm!r}")
@@ -224,6 +227,7 @@ def plan(points, eps: float, min_pts: int,
             f"mesh= is incompatible with algorithm={algorithm!r}: the "
             f"{algorithm} backend is single-device and would silently "
             "ignore it (use algorithm='sharded' or 'auto' to shard)")
+    check_points(points)
     points = jnp.asarray(points)
     n, d = points.shape
     if mesh is not None and axis not in mesh.axis_names:
@@ -327,7 +331,8 @@ def dbscan(points, eps: float, min_pts: int, *, algorithm: str = "auto",
             silently ignore them.
         NotImplementedError: ``star=True`` on the sharded backend.
     """
-    points = jnp.asarray(points)
+    check_points(points)    # before jnp.asarray: non-numeric dtypes must
+    points = jnp.asarray(points)    # raise ValueError, not jax TypeError
     p = query_plan if query_plan is not None else plan(points, eps, min_pts,
                                                        algorithm, mesh=mesh,
                                                        axis=axis)
@@ -364,7 +369,9 @@ def dbscan(points, eps: float, min_pts: int, *, algorithm: str = "auto",
                                       backend=p.backend)
 
 
-def stream_handle(points, eps: float, min_pts: int, **kwargs):
+def stream_handle(points, eps: float, min_pts: int, *,
+                  wal=None, checkpoint_path: str | None = None,
+                  checkpoint_every: int = 0, **kwargs):
     """Build a :class:`repro.stream.StreamingDBSCAN` handle over ``points``.
 
     Goes through :func:`plan`, so the handle's main tree is the *cached*
@@ -372,25 +379,44 @@ def stream_handle(points, eps: float, min_pts: int, **kwargs):
     ``dbscan``) for several ``eps``/``min_pts`` values over the same point
     set shares one index build.
 
+    The durability options make the handle crash-safe (DESIGN.md §10):
+    with ``wal`` every insert is durably logged before it is applied, and
+    with ``checkpoint_path`` (+ ``checkpoint_every``) the full state is
+    atomically serialized every K index merges.  After a crash,
+    ``StreamingDBSCAN.restore(checkpoint_path, wal=wal)`` rebuilds the
+    handle from the last checkpoint plus a WAL replay — this is what
+    ``launch/serve.py --restore`` runs.
+
     Args:
         points: (n, d) initial points, d in (2, 3), n >= 2.
         eps: DBSCAN radius (non-negative).
         min_pts: DBSCAN density threshold.
+        wal: optional write-ahead-log path (or a prebuilt
+            ``repro.stream.durability.WriteAheadLog``).
+        checkpoint_path: optional checkpoint file for
+            :meth:`StreamingDBSCAN.checkpoint` and the auto policy.
+        checkpoint_every: auto-checkpoint after every K merges (0 = off).
         **kwargs: passed to the handle (e.g. ``merge_ratio``, the
             delta/main size ratio that triggers an index merge).
 
     Returns:
         A live ``StreamingDBSCAN`` handle exposing ``insert`` / ``query``
-        / ``snapshot`` / ``merge`` (DESIGN.md §7); after any interleaving
-        of inserts and merges, ``snapshot()`` is component-identical to
-        batch :func:`dbscan` on the accumulated points.
+        / ``snapshot`` / ``merge`` / ``checkpoint`` (DESIGN.md §7, §10);
+        after any interleaving of inserts and merges, ``snapshot()`` is
+        component-identical to batch :func:`dbscan` on the accumulated
+        points.
 
     Raises:
-        ValueError: d outside (2, 3), negative ``eps``, or inserts that
-            change dimensionality (raised by the handle).
+        ValueError: malformed ``points`` (empty, NaN/Inf, d outside
+            (2, 3)), negative ``eps``, or inserts that change
+            dimensionality (raised by the handle).
+        repro.stream.durability.WALError: ``wal`` names a file with
+            leftover records from a crashed run (restore it instead).
     """
     from repro.stream import StreamingDBSCAN
     points = jnp.asarray(points)
     p = plan(points, eps, min_pts, algorithm="stream")
     return StreamingDBSCAN(points, eps, min_pts,
-                           index=(p.segs, p.tree), **kwargs)
+                           index=(p.segs, p.tree), wal=wal,
+                           checkpoint_path=checkpoint_path,
+                           checkpoint_every=checkpoint_every, **kwargs)

@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 
 from . import grid, lbvh, traversal, unionfind
+from .validate import check_points
 
 INT_MAX = traversal.INT_MAX
 
@@ -460,6 +461,7 @@ def dbscan(points, eps: float, min_pts: int, *, algorithm: str = "auto",
     if eps < 0:
         raise ValueError(f"eps must be non-negative; got {eps}"
                          " (a negative eps would be squared away silently)")
+    check_points(points)    # the dispatch route validates inside plan()
     n, d = points.shape
     if algorithm == "fdbscan-densebox":
         segs = grid.build_segments_densebox(points, eps, min_pts)

@@ -31,8 +31,19 @@ import jax
 import jax.numpy as jnp
 
 from . import traversal
+from .validate import check_points
 
 INT_MAX = traversal.INT_MAX
+
+
+def _check_inputs(points, query_pts):
+    """Shared input gate: resident points must be a non-empty finite
+    batch; external queries (when given) must match their d.  An *empty*
+    external batch is fine — it just returns empty results."""
+    pts = check_points(points)
+    if query_pts is not None:
+        check_points(query_pts, name="query_pts", allow_empty=True,
+                     d=pts.shape[1])
 
 
 class KNNResult(NamedTuple):
@@ -95,10 +106,13 @@ def radius_visit(points, r: float, callback, carry=None, *,
         engine's per-lane ``evals``/``iters`` work counters.
 
     Raises:
-        ValueError: no tree index exists for these points (< 2 points or
-            d outside (2, 3)) — use :func:`neighbor_count`/:func:`knn`,
-            whose brute-force fallbacks cover degenerate inputs.
+        ValueError: malformed inputs (empty/NaN/Inf, see
+            :func:`repro.core.validate.check_points`), or no tree index
+            exists for these points (< 2 points or d outside (2, 3)) —
+            use :func:`neighbor_count`/:func:`knn`, whose brute-force
+            fallbacks cover degenerate inputs.
     """
+    _check_inputs(points, query_pts)
     points = jnp.asarray(points)
     p = _tree_plan(points)
     if p.tree is None:
@@ -131,7 +145,12 @@ def neighbor_count(points, r: float, *, query_pts=None,
     Returns:
         int32 counts in original point order (resident queries) or
         ``query_pts`` order (external queries).
+
+    Raises:
+        ValueError: malformed inputs (empty resident set, NaN/Inf
+            coordinates, query/resident dimensionality mismatch).
     """
+    _check_inputs(points, query_pts)
     points = jnp.asarray(points)
     n, d = points.shape
     if n < 2 or d not in (2, 3):
@@ -173,10 +192,12 @@ def knn(points, k: int, *, query_pts=None, radius=None) -> KNNResult:
         order) and ``distances``, ascending by (distance, index).
 
     Raises:
-        ValueError: ``k < 1``.
+        ValueError: ``k < 1``, or malformed inputs (empty resident set,
+            NaN/Inf coordinates, dimensionality mismatch).
     """
     if k < 1:
         raise ValueError(f"k must be >= 1; got {k}")
+    _check_inputs(points, query_pts)
     points = jnp.asarray(points)
     n, d = points.shape
     q = points if query_pts is None else jnp.asarray(query_pts, points.dtype)

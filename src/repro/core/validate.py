@@ -24,6 +24,63 @@ from __future__ import annotations
 
 import numpy as np
 
+
+def check_points(points, *, name: str = "points", allow_empty: bool = False,
+                 dims: tuple = None, d: int = None) -> np.ndarray:
+    """Validate a user-supplied point batch at the public surface.
+
+    One shared gate for every entry point (``dispatch.plan``/``dbscan``,
+    the streaming handle's ``insert``/``query``, ``neighbors.*``): a
+    malformed batch must raise a clear ``ValueError`` *here*, not produce
+    garbage Morton codes and silently wrong labels three layers down.
+
+    Rejects: non-numeric / bool / complex dtypes, non-2-d shapes, empty
+    point sets (unless ``allow_empty``), NaN/Inf coordinates, and a
+    dimensionality outside ``dims`` (or different from ``d``).
+
+    Args:
+        points: any array-like the caller intends as an (n, d) batch.
+        name: how to call the argument in error messages.
+        allow_empty: permit n == 0 (e.g. an optional initial set).
+        dims: allowed dimensionalities, e.g. ``(2, 3)``; None = any.
+        d: exact required dimensionality (e.g. an index's own d).
+
+    Returns:
+        The batch as a host ``np.ndarray`` (no copy when the input
+        already is one); callers do their own dtype conversion.
+
+    Raises:
+        ValueError: any of the rejections above, with the offending
+            rows named for the NaN/Inf case.
+    """
+    try:
+        arr = np.asarray(points)
+    except (ValueError, TypeError) as e:
+        raise ValueError(f"{name} is not a numeric array: {e}")
+    if (arr.dtype == object or arr.dtype.kind not in "iuf"):
+        raise ValueError(
+            f"{name} must be a real-valued numeric array; got dtype "
+            f"{arr.dtype} (bool/complex/object inputs would be cast to "
+            "garbage coordinates silently)")
+    if arr.ndim != 2:
+        raise ValueError(f"{name} must have shape (n, d); got {arr.shape}")
+    if arr.shape[0] == 0 and not allow_empty:
+        raise ValueError(f"{name} is empty: got shape {arr.shape} "
+                         "(an empty point set has no clustering)")
+    if d is not None and arr.shape[1] != d:
+        raise ValueError(f"{name} must be {d}-dimensional to match the "
+                         f"index; got {arr.shape[1]}-d")
+    if dims is not None and arr.shape[1] not in dims:
+        raise ValueError(f"{name} must have d in {dims}; got shape "
+                         f"{arr.shape}")
+    if arr.dtype.kind == "f" and arr.size and not np.isfinite(arr).all():
+        bad = np.flatnonzero(~np.isfinite(arr).all(axis=1))
+        raise ValueError(
+            f"{name} contains {len(bad)} row(s) with non-finite (NaN/Inf) "
+            f"coordinates, first at rows {bad[:5].tolist()} — these would "
+            "corrupt the Morton codes, not cluster as outliers")
+    return arr
+
 # Row-tile height for all blocked adjacency passes: n * block boolean cells
 # live at once (~2k * n bits), never the n^2 matrix.
 ORACLE_BLOCK = 2048

@@ -1,4 +1,4 @@
-"""Streaming DBSCAN serving loop (DESIGN.md §7).
+"""Streaming DBSCAN serving loop (DESIGN.md §7, durability §10).
 
 The serving path the ROADMAP's north star actually needs: a long-lived
 ``StreamingDBSCAN`` handle absorbing a mixed stream of *insert* and
@@ -11,12 +11,28 @@ auto-selection), and the handle itself is built with
 ``dispatch.stream_handle`` so it reuses the very same cached
 eps-independent index instead of rebuilding it.
 
+Durability (DESIGN.md §10): ``--wal`` logs every insert micro-batch
+before it is applied, ``--checkpoint`` + ``--checkpoint-every`` write
+atomic snapshots of the whole index, and ``--restore`` recovers the
+handle (checkpoint + WAL replay) after a crash and keeps serving where
+the stream left off:
+
   PYTHONPATH=src python -m repro.launch.serve --dataset blobs --n 8192 \
-      --eps 0.04 --min-pts 8 --batch 256 --steps 60 --insert-frac 0.3
+      --eps 0.04 --min-pts 8 --batch 256 --steps 60 --insert-frac 0.3 \
+      --wal /tmp/serve.wal --checkpoint /tmp/serve.npz --checkpoint-every 1
+  # kill -9 it mid-run, then:
+  PYTHONPATH=src python -m repro.launch.serve ... --restore
+
+The loop is defensive the way a serving process must be: an exhausted
+insert pool degrades to query-only service (dropped insert requests are
+counted, not fatal), malformed request batches (NaN/Inf coordinates) are
+rejected by the validation gate and counted instead of corrupting the
+index, and ``--validate`` failures exit non-zero with a readable error.
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import numpy as np
@@ -41,16 +57,37 @@ def main(argv=None):
     ap.add_argument("--steps", type=int, default=60,
                     help="number of micro-batches to serve")
     ap.add_argument("--insert-frac", type=float, default=0.3,
-                    help="probability a step drains inserts (vs queries)")
+                    help="probability a step drains inserts (vs queries); "
+                    "0 serves a query-only stream, 1 insert-only")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--snapshot-every", type=int, default=0,
                     help="materialize labels every K steps (0: only final)")
     ap.add_argument("--validate", action="store_true",
-                    help="check the final snapshot against batch dbscan")
+                    help="check the final snapshot against batch dbscan "
+                    "(exits 1 with a readable error on mismatch)")
+    ap.add_argument("--wal", default=None, metavar="PATH",
+                    help="write-ahead log: every insert batch is appended "
+                    "+ fsynced here before it is applied")
+    ap.add_argument("--checkpoint", default=None, metavar="PATH",
+                    help="checkpoint .npz path (atomic tmp+fsync+rename)")
+    ap.add_argument("--checkpoint-every", type=int, default=0, metavar="K",
+                    help="auto-checkpoint every K merges (needs --checkpoint)")
+    ap.add_argument("--restore", action="store_true",
+                    help="recover from --checkpoint/--wal instead of a cold "
+                    "bootstrap, then keep serving the rest of the stream")
+    ap.add_argument("--poison-frac", type=float, default=0.0,
+                    help="probability a request batch carries a NaN point "
+                    "(exercises the validation gate; rejected + counted)")
     args = ap.parse_args(argv)
+
+    if args.restore and not (args.checkpoint or args.wal):
+        ap.error("--restore needs --checkpoint and/or --wal")
+    if args.checkpoint_every and not args.checkpoint:
+        ap.error("--checkpoint-every needs --checkpoint")
 
     from repro.core import dispatch
     from repro.data import pointclouds
+    from repro.stream import StreamingDBSCAN
 
     pts = pointclouds.load(args.dataset, args.n, seed=args.seed)
     n0 = max(2, int(args.n * args.warm_frac))
@@ -58,44 +95,86 @@ def main(argv=None):
     rng = np.random.default_rng(args.seed)
     B, d = args.batch, pts.shape[1]
 
-    # Bootstrap through the unified dispatcher: stream_handle plans via
-    # dispatch (algorithm="stream"), so the handle's main tree is the plan
-    # cache's eps-independent index — later batch dbscan calls or handles
-    # at other eps/min_pts over the same points reuse it. The handle's own
-    # bootstrap clustering doubles as the t0 snapshot (no second pass).
     t0 = time.perf_counter()
-    handle = dispatch.stream_handle(initial, args.eps, args.min_pts)
-    boot = handle.snapshot()
-    t_boot = time.perf_counter() - t0
-    print(f"[serve] bootstrap n={n0} via backend={boot.backend!r}: "
-          f"{boot.n_clusters} clusters in {t_boot:.2f}s "
-          f"(index cached for reuse across parameter sweeps)")
+    if args.restore:
+        # Crash recovery: latest valid checkpoint + WAL replay past its
+        # watermark (DESIGN.md §10). The stream is deterministic (initial
+        # prefix, then the pool in order), so the recovered watermark tells
+        # us exactly where to resume draining the pool.
+        handle = StreamingDBSCAN.restore(
+            args.checkpoint, wal=args.wal,
+            checkpoint_every=args.checkpoint_every)
+        boot = handle.snapshot()
+        t_boot = time.perf_counter() - t0
+        pool_off = min(max(handle.n_points - n0, 0), len(pool))
+        print(f"[serve] restored n={handle.n_points} "
+              f"(watermark resumes pool at +{pool_off}): "
+              f"{boot.n_clusters} clusters in {t_boot:.2f}s")
+    else:
+        # Bootstrap through the unified dispatcher: stream_handle plans via
+        # dispatch (algorithm="stream"), so the handle's main tree is the
+        # plan cache's eps-independent index — later batch dbscan calls or
+        # handles at other eps/min_pts over the same points reuse it. The
+        # handle's own bootstrap clustering doubles as the t0 snapshot.
+        handle = dispatch.stream_handle(
+            initial, args.eps, args.min_pts, wal=args.wal,
+            checkpoint_path=args.checkpoint,
+            checkpoint_every=args.checkpoint_every)
+        boot = handle.snapshot()
+        t_boot = time.perf_counter() - t0
+        pool_off = 0
+        print(f"[serve] bootstrap n={n0} via backend={boot.backend!r}: "
+              f"{boot.n_clusters} clusters in {t_boot:.2f}s "
+              f"(index cached for reuse across parameter sweeps)")
 
     def query_batch():
         idx = rng.integers(0, len(pts), B)
         jitter = rng.normal(0.0, 0.2 * args.eps, (B, d)).astype(np.float32)
         return pts[idx] + jitter
 
+    def poisoned(batch):
+        if args.poison_frac and rng.random() < args.poison_frac:
+            batch = batch.copy()
+            batch[rng.integers(0, len(batch))] = np.nan
+        return batch
+
     # shape warmup (compile once, outside the latency measurements)
     handle.query(query_batch())
 
     insert_times, query_times, snapshot_times = [], [], []
-    pool_off = n_ins = n_q = 0
+    n_ins = n_q = n_dropped = n_rejected = 0
     for step in range(args.steps):
-        do_insert = pool_off < len(pool) and rng.random() < args.insert_frac
-        if do_insert:
-            take = pool[pool_off:pool_off + B]
+        want_insert = rng.random() < args.insert_frac
+        if want_insert and pool_off >= len(pool):
+            # Insert stream ran dry: a real server keeps answering queries.
+            n_dropped += 1
+            want_insert = False
+        if want_insert:
+            take = poisoned(pool[pool_off:pool_off + B])
             t0 = time.perf_counter()
-            handle.insert(take)
-            insert_times.append(time.perf_counter() - t0)
-            pool_off += len(take)
-            n_ins += len(take)
+            try:
+                handle.insert(take)
+            except ValueError as e:
+                n_rejected += 1
+                print(f"[serve] step {step + 1}: insert rejected "
+                      f"({str(e).splitlines()[0]})", file=sys.stderr)
+            else:
+                insert_times.append(time.perf_counter() - t0)
+                n_ins += len(take)
+            # rejected or not, that slice of the stream is consumed
+            pool_off += len(pool[pool_off:pool_off + B])
         else:
-            qb = query_batch()
+            qb = poisoned(query_batch())
             t0 = time.perf_counter()
-            res = handle.query(qb)
-            query_times.append(time.perf_counter() - t0)
-            n_q += B
+            try:
+                handle.query(qb)
+            except ValueError as e:
+                n_rejected += 1
+                print(f"[serve] step {step + 1}: query rejected "
+                      f"({str(e).splitlines()[0]})", file=sys.stderr)
+            else:
+                query_times.append(time.perf_counter() - t0)
+                n_q += B
         if args.snapshot_every and (step + 1) % args.snapshot_every == 0:
             t0 = time.perf_counter()
             snap = handle.snapshot()
@@ -104,12 +183,16 @@ def main(argv=None):
                   f"(delta {handle.n_delta}), {snap.n_clusters} clusters, "
                   f"snapshot {snapshot_times[-1] * 1e3:.1f}ms")
 
+    if args.checkpoint:
+        handle.checkpoint()          # final durable state before reporting
+
     t0 = time.perf_counter()
     snap = handle.snapshot()
     t_snap = time.perf_counter() - t0
     stats = {
         "steps": args.steps, "batch": B,
         "n_points": handle.n_points, "n_inserted": n_ins, "n_queried": n_q,
+        "n_dropped": n_dropped, "n_rejected": n_rejected,
         "n_merges": handle.n_merges,
         "repair_sweeps": handle.n_repair_sweeps,
         "insert_p50_ms": _pct(insert_times, 50) * 1e3,
@@ -122,7 +205,8 @@ def main(argv=None):
     }
     print(f"[serve] {args.dataset}: served {args.steps} micro-batches "
           f"(B={B}) -> n={stats['n_points']} pts, "
-          f"{stats['n_clusters']} clusters, {stats['n_merges']} merges")
+          f"{stats['n_clusters']} clusters, {stats['n_merges']} merges, "
+          f"{n_dropped} dropped, {n_rejected} rejected")
     print(f"[serve] insert: p50 {stats['insert_p50_ms']:.1f}ms "
           f"p99 {stats['insert_p99_ms']:.1f}ms "
           f"({stats['insert_pts_per_s']:.0f} pts/s); "
@@ -134,8 +218,14 @@ def main(argv=None):
         from repro.core.validate import check_component_identical
         ref = dispatch.dbscan(handle.points, args.eps, args.min_pts,
                               algorithm="fdbscan")
-        check_component_identical(snap.labels, snap.core_mask,
-                                  ref.labels, ref.core_mask)
+        try:
+            check_component_identical(snap.labels, snap.core_mask,
+                                      ref.labels, ref.core_mask)
+        except (AssertionError, ValueError) as e:
+            print(f"[serve] validation FAILED: snapshot is not "
+                  f"component-identical to batch dbscan on the same "
+                  f"points — {e}", file=sys.stderr)
+            raise SystemExit(1)
         print("[serve] validation against batch dbscan ✓")
     return stats
 

@@ -1,10 +1,15 @@
 """Streaming DBSCAN subsystem: two-level LBVH index, online inserts,
-batched cluster queries, snapshots (DESIGN.md §7).
+batched cluster queries, snapshots (DESIGN.md §7), and crash safety —
+atomic checkpoints + a write-ahead log with replay recovery
+(DESIGN.md §10, ``repro.stream.durability``).
 
 ``StreamingDBSCAN`` is the serving-path handle; the dispatcher's
 ``repro.core.dispatch.stream_handle`` builds one that shares the cached
-eps-independent batch index.
+eps-independent batch index. ``StreamingDBSCAN.restore`` rebuilds a
+handle from a checkpoint + WAL after a crash.
 """
+from . import durability
 from .index import StreamingDBSCAN, QueryResult, MERGE_RATIO, MERGE_MIN
 
-__all__ = ["StreamingDBSCAN", "QueryResult", "MERGE_RATIO", "MERGE_MIN"]
+__all__ = ["StreamingDBSCAN", "QueryResult", "MERGE_RATIO", "MERGE_MIN",
+           "durability"]

@@ -1,0 +1,457 @@
+"""Durability layer for the streaming index (DESIGN.md §10).
+
+The serving path keeps its whole state — points, saturated core counts,
+union-find labels, the two-level tree split — in process memory; a crash
+mid-merge or mid-insert loses everything accumulated since boot.  This
+module makes the handle crash-safe with the classic pairing:
+
+  * **Checkpoints** — :func:`save_checkpoint` serializes the full handle
+    state to a single ``.npz`` (arrays + a JSON manifest carrying a format
+    version, the DBSCAN parameters, the insert-order *watermark* and a
+    content checksum) with an atomic write protocol: serialize to a
+    private tmp file in the target directory, ``fsync`` it, ``rename``
+    over the destination, ``fsync`` the directory.  A reader can never
+    observe a half-written checkpoint — it sees the old file or the new
+    one.
+
+  * **A write-ahead log** — :class:`WriteAheadLog` is an append-only file
+    of insert micro-batches, each framed as a length-prefixed,
+    CRC-checksummed record tagged with its start watermark (the handle's
+    ``n_points`` before the batch).  ``insert`` appends + ``fsync``\\ s the
+    record *before* touching in-memory state, so once an insert returns
+    (is *acknowledged*) its batch is durable.  A crash mid-append leaves a
+    torn tail record, which :func:`scan_wal` detects (short read or CRC
+    mismatch) and truncates rather than propagating.
+
+  * **Recovery** — :func:`recover` = load the newest valid checkpoint (if
+    any) + replay every WAL record past its watermark through the normal
+    ``insert`` path (with logging suppressed — the records are already
+    durable).  The result is a live handle whose ``snapshot()`` is
+    component-identical to batch ``dbscan`` on exactly the durable
+    points: acknowledged batches are never lost, unacknowledged ones are
+    never half-applied (a batch is either fully in the WAL or truncated
+    with the tail).
+
+Fault injection (tests/faults.py) arms :func:`barrier` at named crash
+points — the streaming code calls it at every durability barrier and an
+armed point terminates the process with ``os._exit`` (the closest
+in-process stand-in for ``kill -9``: no atexit, no flushing, no cleanup).
+"""
+from __future__ import annotations
+
+import io
+import json
+import os
+import struct
+import zlib
+
+import numpy as np
+
+# ---------------------------------------------------------------------- #
+# fault injection                                                        #
+# ---------------------------------------------------------------------- #
+
+# Exit code the injected crashes die with (mirrors SIGKILL's 128 + 9).
+FAULT_EXIT_CODE = 137
+
+# Named crash points the streaming code guards with barrier() calls.
+FAULT_POINTS = ("pre-insert", "wal-durable", "post-insert", "mid-merge",
+                "mid-checkpoint", "mid-wal-append")
+
+_fault_point: str | None = None
+_fault_countdown: int = 0
+
+
+def arm_fault(point: str | None, at: int = 1) -> None:
+    """Arm a deterministic crash at the ``at``-th hit of ``point``.
+
+    ``None`` disarms.  Used by the fault-injection harness only; the
+    barriers are no-ops when nothing is armed.
+    """
+    global _fault_point, _fault_countdown
+    if point is not None and point not in FAULT_POINTS:
+        raise ValueError(f"unknown fault point {point!r}; "
+                         f"one of {FAULT_POINTS}")
+    _fault_point = point
+    _fault_countdown = int(at)
+
+
+def barrier(point: str) -> None:
+    """Crash-test hook: die (as if kill -9) if ``point`` is armed."""
+    global _fault_countdown
+    if _fault_point != point:
+        return
+    _fault_countdown -= 1
+    if _fault_countdown <= 0:
+        os._exit(FAULT_EXIT_CODE)
+
+
+def _fault_armed_now(point: str) -> bool:
+    """True iff ``point`` is armed and its countdown fires on this hit
+    (consumes one hit).  Lets the WAL implement the *torn write* fault,
+    which needs custom behaviour (write half a record) rather than an
+    immediate exit."""
+    global _fault_countdown
+    if _fault_point != point:
+        return False
+    _fault_countdown -= 1
+    return _fault_countdown <= 0
+
+
+# ---------------------------------------------------------------------- #
+# errors                                                                 #
+# ---------------------------------------------------------------------- #
+
+class CheckpointError(ValueError):
+    """A checkpoint file is unreadable: unknown format version, checksum
+    mismatch, or a missing/malformed manifest.  Deliberately *not* raised
+    for a torn WAL tail — that is expected after a crash and silently
+    truncated; a corrupt checkpoint is not (the atomic write protocol
+    means one can only arise from external damage)."""
+
+
+# ---------------------------------------------------------------------- #
+# checkpoints                                                            #
+# ---------------------------------------------------------------------- #
+
+CHECKPOINT_VERSION = 1
+
+# Array fields serialized per checkpoint, in checksum order.
+_CKPT_ARRAYS = ("pts", "counts", "core", "labels")
+
+
+def _content_checksum(arrays: dict) -> str:
+    """CRC-32 over the raw bytes of every array field, in fixed order."""
+    crc = 0
+    for name in _CKPT_ARRAYS:
+        arr = np.ascontiguousarray(arrays[name])
+        crc = zlib.crc32(arr.tobytes(), crc)
+        crc = zlib.crc32(repr((name, arr.shape, str(arr.dtype))).encode(),
+                         crc)
+    return f"{crc:08x}"
+
+
+def _fsync_dir(path: str) -> None:
+    """fsync the directory containing ``path`` so a rename is durable."""
+    d = os.path.dirname(os.path.abspath(path)) or "."
+    try:
+        fd = os.open(d, os.O_RDONLY)
+    except OSError:                      # e.g. platforms without dir fds
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def save_checkpoint(handle, path: str) -> dict:
+    """Atomically serialize a ``StreamingDBSCAN`` handle to ``path``.
+
+    Returns the manifest that was written.  The write is atomic: the
+    bytes go to a tmp file in the destination directory, are fsync'd,
+    then renamed over ``path`` (and the directory fsync'd), so a crash at
+    any barrier leaves either the previous checkpoint or the new one —
+    never a torn file.
+    """
+    arrays = {
+        "pts": handle._pts,
+        "counts": handle._counts,
+        "core": handle._core,
+        "labels": handle._labels,
+    }
+    manifest = {
+        "format": "repro-stream-checkpoint",
+        "version": CHECKPOINT_VERSION,
+        "dtype": "float32",
+        "d": int(handle._pts.shape[1]),
+        "eps": float(handle.eps),
+        "min_pts": int(handle.min_pts),
+        "merge_ratio": float(handle._merge_ratio),
+        "watermark": int(handle.n_points),   # insert-order high-water mark
+        "n_main": int(handle._n_main),
+        "n_inserts": int(handle.n_inserts),
+        "n_merges": int(handle.n_merges),
+        "n_repair_sweeps": int(handle.n_repair_sweeps),
+        "checksum": _content_checksum(arrays),
+    }
+    buf = io.BytesIO()
+    np.savez(buf, manifest=np.frombuffer(
+        json.dumps(manifest, sort_keys=True).encode(), np.uint8), **arrays)
+    tmp = f"{path}.tmp.{os.getpid()}"
+    fd = os.open(tmp, os.O_WRONLY | os.O_CREAT | os.O_TRUNC, 0o644)
+    try:
+        os.write(fd, buf.getvalue())
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+    barrier("mid-checkpoint")            # tmp durable, rename not yet done
+    os.replace(tmp, path)
+    _fsync_dir(path)
+    return manifest
+
+
+def load_checkpoint(path: str) -> dict:
+    """Read + verify a checkpoint; returns ``{manifest, pts, counts, core,
+    labels}``.
+
+    Raises :class:`CheckpointError` on an unknown (future) format version,
+    a content-checksum mismatch, or a missing/malformed manifest — a
+    damaged checkpoint must fail loudly, never silently restore garbage.
+    """
+    try:
+        with np.load(path) as z:
+            if "manifest" not in z:
+                raise CheckpointError(f"{path}: not a streaming checkpoint "
+                                      "(no manifest)")
+            try:
+                manifest = json.loads(bytes(z["manifest"]).decode())
+            except (UnicodeDecodeError, json.JSONDecodeError) as e:
+                raise CheckpointError(f"{path}: malformed manifest: {e}")
+            version = manifest.get("version")
+            if version != CHECKPOINT_VERSION:
+                raise CheckpointError(
+                    f"{path}: unsupported checkpoint format version "
+                    f"{version!r} (this build reads version "
+                    f"{CHECKPOINT_VERSION}); refusing to guess")
+            arrays = {name: z[name] for name in _CKPT_ARRAYS}
+    except CheckpointError:
+        raise
+    except zipfile_errors() as e:
+        raise CheckpointError(f"{path}: unreadable checkpoint: {e}")
+    got = _content_checksum(arrays)
+    if got != manifest.get("checksum"):
+        raise CheckpointError(
+            f"{path}: content checksum mismatch (manifest "
+            f"{manifest.get('checksum')!r}, computed {got!r}) — "
+            "the checkpoint is corrupt")
+    if manifest.get("watermark") != len(arrays["pts"]):
+        raise CheckpointError(
+            f"{path}: watermark {manifest.get('watermark')} does not match "
+            f"{len(arrays['pts'])} serialized points")
+    return {"manifest": manifest, **arrays}
+
+
+def zipfile_errors():
+    """The exception types a damaged .npz can raise from np.load."""
+    import zipfile
+    return (OSError, ValueError, zipfile.BadZipFile, KeyError)
+
+
+# ---------------------------------------------------------------------- #
+# write-ahead log                                                        #
+# ---------------------------------------------------------------------- #
+
+WAL_VERSION = 1
+_WAL_MAGIC = b"RWAL"
+_REC_MAGIC = 0x5743_4552                       # "RECW" little-endian
+# file header: magic, version, d, eps (f64), min_pts (i32)
+_HDR = struct.Struct("<4sHHdi")
+# record header: magic, start watermark, point count, crc32
+_REC = struct.Struct("<IQII")
+
+
+class WALError(ValueError):
+    """A WAL file exists but its *header* is incompatible (wrong magic on
+    a non-empty file, future version, parameter mismatch with the
+    handle).  Torn/corrupt tail *records* never raise — they are
+    truncated, which is the whole point of the log."""
+
+
+def _record_crc(start_gid: int, k: int, payload: bytes) -> int:
+    return zlib.crc32(struct.pack("<QI", start_gid, k) + payload)
+
+
+def scan_wal(path: str):
+    """Parse a WAL file, tolerating a torn tail.
+
+    Returns ``(header, records, valid_end)`` where ``header`` is a dict
+    (``None`` for a missing/empty file), ``records`` is a list of
+    ``(start_gid, (k, d) float32 batch)`` in append order, and
+    ``valid_end`` is the byte offset of the last fully-valid record —
+    everything past it (a torn or checksum-corrupt tail) should be
+    truncated before appending again.  A torn *header* (crash during the
+    very first append) yields ``(None, [], 0)``.
+
+    Raises :class:`WALError` only for a structurally incompatible header
+    (bad magic on a non-empty file, future version) — i.e. "this is not
+    our log", which replaying could not make right.
+    """
+    try:
+        with open(path, "rb") as f:
+            blob = f.read()
+    except FileNotFoundError:
+        return None, [], 0
+    if len(blob) < _HDR.size:
+        return None, [], 0               # torn header: nothing durable yet
+    magic, version, d, eps, min_pts = _HDR.unpack_from(blob, 0)
+    if magic != _WAL_MAGIC:
+        raise WALError(f"{path}: not a streaming WAL (bad magic)")
+    if version != WAL_VERSION:
+        raise WALError(f"{path}: unsupported WAL version {version} "
+                       f"(this build reads {WAL_VERSION})")
+    header = {"version": version, "d": d, "eps": eps, "min_pts": min_pts}
+    records = []
+    off = _HDR.size
+    valid_end = off
+    while off + _REC.size <= len(blob):
+        rmagic, start_gid, k, crc = _REC.unpack_from(blob, off)
+        if rmagic != _REC_MAGIC:
+            break                        # corrupt tail: stop, truncate here
+        body_end = off + _REC.size + k * d * 4
+        if body_end > len(blob):
+            break                        # torn payload
+        payload = blob[off + _REC.size:body_end]
+        if _record_crc(start_gid, k, payload) != crc:
+            break                        # bit-damaged tail record
+        records.append((int(start_gid),
+                        np.frombuffer(payload, np.float32).reshape(k, d)))
+        off = valid_end = body_end
+    return header, records, valid_end
+
+
+class WriteAheadLog:
+    """Append-only durable log of insert micro-batches.
+
+    Opened lazily: the file (and its parameter header) is created on the
+    first append, so a cold-start handle can attach a WAL before its
+    dimensionality is known.  Reopening an existing log validates the
+    header against the handle's parameters and truncates any torn tail
+    left by a previous crash.
+    """
+
+    def __init__(self, path: str, *, eps: float, min_pts: int):
+        self.path = str(path)
+        self.eps = float(eps)
+        self.min_pts = int(min_pts)
+        self._f = None                   # opened on first append/reopen
+        self._d: int | None = None
+
+    def _open_for_append(self, d: int) -> None:
+        header, _, valid_end = scan_wal(self.path)
+        if header is not None:
+            if header["d"] != d:
+                raise WALError(
+                    f"{self.path}: WAL is {header['d']}-d, handle is {d}-d")
+            if (header["eps"] != self.eps
+                    or header["min_pts"] != self.min_pts):
+                raise WALError(
+                    f"{self.path}: WAL parameters (eps={header['eps']}, "
+                    f"min_pts={header['min_pts']}) do not match the handle "
+                    f"(eps={self.eps}, min_pts={self.min_pts})")
+            self._f = open(self.path, "r+b")
+            self._f.truncate(valid_end)  # drop any torn tail
+            self._f.seek(valid_end)
+        else:
+            self._f = open(self.path, "wb")
+            self._f.write(_HDR.pack(_WAL_MAGIC, WAL_VERSION, d,
+                                    self.eps, self.min_pts))
+        self._d = d
+
+    def append(self, batch: np.ndarray, start_gid: int) -> None:
+        """Durably append one insert batch (fsync before returning)."""
+        batch = np.ascontiguousarray(batch, np.float32)
+        k, d = batch.shape
+        if self._f is None:
+            self._open_for_append(d)
+        payload = batch.tobytes()
+        rec = _REC.pack(_REC_MAGIC, start_gid, k,
+                        _record_crc(start_gid, k, payload)) + payload
+        if _fault_armed_now("mid-wal-append"):
+            # torn-write fault: half the record reaches the disk, then the
+            # process dies without any cleanup
+            self._f.write(rec[:max(1, len(rec) // 2)])
+            self._f.flush()
+            os.fsync(self._f.fileno())
+            os._exit(FAULT_EXIT_CODE)
+        self._f.write(rec)
+        self._f.flush()
+        os.fsync(self._f.fileno())
+
+    def reset(self, _watermark: int | None = None) -> None:
+        """Truncate the log back to its header — called after a successful
+        checkpoint (whose watermark covers every logged record).  Safe
+        against a crash at any point: until the truncate completes,
+        recovery simply skips records below the checkpoint watermark."""
+        if self._f is None:
+            header, _, _ = scan_wal(self.path)
+            if header is None:
+                return
+            self._open_for_append(header["d"])
+        self._f.truncate(_HDR.size)
+        self._f.seek(_HDR.size)
+        self._f.flush()
+        os.fsync(self._f.fileno())
+
+    def close(self) -> None:
+        if self._f is not None:
+            self._f.close()
+            self._f = None
+
+
+# ---------------------------------------------------------------------- #
+# recovery                                                               #
+# ---------------------------------------------------------------------- #
+
+def recover(checkpoint_path: str | None = None, wal_path: str | None = None,
+            **handle_kwargs):
+    """Rebuild a live ``StreamingDBSCAN`` from durable state.
+
+    Load the checkpoint (if the file exists), then replay every WAL
+    record whose start watermark is at or past the checkpoint's through
+    the normal ``insert`` path — records below the watermark are already
+    folded into the checkpoint and are skipped; a torn/corrupt tail is
+    truncated silently (those batches were never acknowledged).  With no
+    checkpoint, replay starts from an empty handle using the parameters
+    stored in the WAL header.  The recovered handle re-attaches the same
+    WAL and checkpoint paths, so serving (and further crash/recovery
+    cycles) continue seamlessly.
+
+    Raises:
+        CheckpointError: the checkpoint file exists but is damaged or has
+            an unknown format version.
+        WALError: the WAL header is structurally incompatible.
+        ValueError: neither a checkpoint nor a non-empty WAL exists (there
+            is nothing to recover and no parameters to start from).
+    """
+    from repro.stream.index import StreamingDBSCAN
+
+    state = None
+    if checkpoint_path is not None and os.path.exists(checkpoint_path):
+        state = load_checkpoint(checkpoint_path)
+    wal_header, records, _ = (scan_wal(wal_path) if wal_path is not None
+                              else (None, [], 0))
+    if state is None and wal_header is None:
+        raise ValueError(
+            "nothing to recover: no checkpoint file and no (non-empty) WAL "
+            f"(checkpoint={checkpoint_path!r}, wal={wal_path!r})")
+
+    if state is not None:
+        m = state["manifest"]
+        eps, min_pts = m["eps"], m["min_pts"]
+        h = StreamingDBSCAN(None, eps, min_pts,
+                            merge_ratio=m["merge_ratio"])
+        h._adopt_state(state)
+    else:
+        eps, min_pts = wal_header["eps"], wal_header["min_pts"]
+        h = StreamingDBSCAN(None, eps, min_pts, **{
+            k: v for k, v in handle_kwargs.items() if k == "merge_ratio"})
+
+    for start_gid, batch in records:
+        if start_gid + len(batch) <= h.n_points:
+            continue                     # already covered by the checkpoint
+        if start_gid != h.n_points:
+            # a gap can only mean records written against a *newer*
+            # checkpoint than the one we loaded — stop rather than apply
+            # out of order (the durable prefix up to here is intact)
+            break
+        h.insert(batch)                  # _wal is None here: no re-logging
+
+    # re-attach durability so the recovered handle keeps serving durably
+    if wal_path is not None:
+        h._wal = WriteAheadLog(wal_path, eps=h.eps, min_pts=h.min_pts)
+    if checkpoint_path is not None:
+        h._ckpt_path = checkpoint_path
+    for k, v in handle_kwargs.items():
+        if k == "checkpoint_every":
+            h._ckpt_every = int(v)
+    return h

@@ -56,6 +56,8 @@ import jax.numpy as jnp
 
 from repro.core import fdbscan, grid, lbvh, morton, traversal, unionfind
 from repro.core.fdbscan import DBSCANResult
+from repro.core.validate import check_points
+from repro.stream import durability
 
 INT_MAX = traversal.INT_MAX
 
@@ -134,10 +136,23 @@ class StreamingDBSCAN:
         — the dispatcher passes its cached eps-independent index here so
         streaming composes with eps/min_pts parameter sweeps.
     merge_ratio: delta/main size ratio that triggers an automatic merge.
+    wal: optional write-ahead log path (or a prebuilt
+        ``durability.WriteAheadLog``): every insert batch is durably
+        appended *before* it is applied, so an acknowledged insert
+        survives a crash (DESIGN.md §10). The file must be fresh — a WAL
+        with leftover records means a previous process died; go through
+        :meth:`restore` instead of silently shadowing its state.
+    checkpoint_path: optional checkpoint file; written atomically by
+        :meth:`checkpoint` (and once at construction when the handle
+        bootstraps from initial points, so they are durable too).
+    checkpoint_every: auto-checkpoint policy — write ``checkpoint_path``
+        after every K index merges (0 = manual checkpoints only).
     """
 
     def __init__(self, points, eps: float, min_pts: int, *,
-                 merge_ratio: float = MERGE_RATIO, index=None):
+                 merge_ratio: float = MERGE_RATIO, index=None,
+                 wal=None, checkpoint_path: str | None = None,
+                 checkpoint_every: int = 0):
         if eps <= 0:
             raise ValueError(f"streaming index needs eps > 0; got {eps}")
         if min_pts < 1:
@@ -157,10 +172,33 @@ class StreamingDBSCAN:
         self.n_inserts = 0
         self.n_merges = 0
         self.n_repair_sweeps = 0
+        self._ckpt_path = checkpoint_path
+        self._ckpt_every = int(checkpoint_every)
+        self._merges_since_ckpt = 0
+        if checkpoint_every and not checkpoint_path:
+            raise ValueError("checkpoint_every needs a checkpoint_path")
+        self._wal = None
+        if wal is not None:
+            if not isinstance(wal, durability.WriteAheadLog):
+                wal = durability.WriteAheadLog(str(wal), eps=self.eps,
+                                               min_pts=self.min_pts)
+            _, stale, _ = durability.scan_wal(wal.path)
+            if stale:
+                raise durability.WALError(
+                    f"{wal.path}: WAL already holds {len(stale)} record(s) "
+                    "from a previous run — recover them with "
+                    "StreamingDBSCAN.restore(...) or remove the file "
+                    "before starting a fresh handle")
+            self._wal = wal
         if points is not None:
             pts = np.array(points, np.float32)   # copy: never alias callers
             if pts.size:
                 self._bootstrap(pts, index)
+                if self._ckpt_path is not None:
+                    # make the bootstrap set durable: the WAL only covers
+                    # inserts, so without this a crash before the first
+                    # checkpoint would lose the initial clustering
+                    self.checkpoint()
 
     # ------------------------------------------------------------------ #
     # public surface                                                     #
@@ -212,11 +250,19 @@ class StreamingDBSCAN:
         """Ingest a micro-batch: counts update bidirectionally, labels are
         repaired incrementally, the delta tree is rebuilt (padded to a
         bucketed size for stable jit shapes), and an oversized delta
-        triggers a merge."""
+        triggers a merge.
+
+        With a WAL attached the batch is durably appended (fsync) before
+        any state changes, so by the time ``insert`` returns — the
+        *acknowledgment* — the batch survives a crash at any barrier.
+        Raises ValueError for empty batches and NaN/Inf coordinates
+        (nothing is logged or applied for a rejected batch)."""
         batch = self._check_pts(pts, grow=True)
         b = len(batch)
-        if b == 0:
-            return self
+        durability.barrier("pre-insert")    # crash: batch never durable
+        if self._wal is not None:
+            self._wal.append(batch, self.n_points)
+            durability.barrier("wal-durable")   # crash: durable, unapplied
         n_old = self.n_points
         gid0 = n_old
 
@@ -262,7 +308,8 @@ class StreamingDBSCAN:
         if self.n_delta > max(MERGE_MIN,
                               int(self._merge_ratio * self._n_main)):
             self.merge()
-        return self
+        durability.barrier("post-insert")   # crash: applied, un-acked —
+        return self                         # replay re-applies identically
 
     def merge(self) -> "StreamingDBSCAN":
         """Fold the delta into the main level: one jitted Morton re-sort +
@@ -274,14 +321,20 @@ class StreamingDBSCAN:
         if n == self._n_main:
             return self
         if n >= 2:
-            self._main = self._build_level(
+            new_main = self._build_level(
                 self._pts, np.arange(n, dtype=np.int64))
         else:
             segs = grid.build_segments_fdbscan(jnp.asarray(self._pts))
-            self._main = _Level(segs, None, np.asarray(segs.order, np.int64))
-        self._n_main = n
+            new_main = _Level(segs, None, np.asarray(segs.order, np.int64))
+        durability.barrier("mid-merge")     # crash with the merge in
+        self._main = new_main               # flight: all in-memory, the
+        self._n_main = n                    # durable state is unaffected
         self._delta = None
         self.n_merges += 1
+        self._merges_since_ckpt += 1
+        if (self._ckpt_path is not None and self._ckpt_every
+                and self._merges_since_ckpt >= self._ckpt_every):
+            self.checkpoint()
         return self
 
     def snapshot(self, *, star: bool = False) -> DBSCANResult:
@@ -319,15 +372,101 @@ class StreamingDBSCAN:
                             n_traversals=-1, backend="stream")
 
     # ------------------------------------------------------------------ #
+    # durability (DESIGN.md §10)                                         #
+    # ------------------------------------------------------------------ #
+
+    def checkpoint(self, path: str | None = None) -> dict:
+        """Atomically serialize the full handle state to ``path`` (default:
+        the ``checkpoint_path`` the handle was built with).
+
+        The checkpoint is a single ``.npz`` — points, saturated core
+        counts, core mask, union-find labels, plus a manifest (format
+        version, eps/min_pts, the insert-order watermark, a content
+        checksum) — written tmp-file + fsync + rename, so a crash during
+        the write leaves the previous checkpoint intact. A successful
+        checkpoint also truncates the attached WAL (every logged record is
+        now covered by the watermark). Returns the manifest written.
+        """
+        path = path if path is not None else self._ckpt_path
+        if path is None:
+            raise ValueError("no checkpoint path: pass one to checkpoint() "
+                             "or build the handle with checkpoint_path=")
+        manifest = durability.save_checkpoint(self, path)
+        self._merges_since_ckpt = 0
+        if self._wal is not None:
+            self._wal.reset()
+        return manifest
+
+    @classmethod
+    def restore(cls, checkpoint_path: str | None = None, *, wal=None,
+                **kwargs) -> "StreamingDBSCAN":
+        """Recover a live handle from durable state after a crash.
+
+        Loads ``checkpoint_path`` (if the file exists), replays every WAL
+        record past the checkpoint's watermark through the normal insert
+        path, and silently truncates a torn/corrupt WAL tail (an
+        interrupted append was by definition never acknowledged). The
+        recovered handle re-attaches both files and keeps serving.
+
+        Args:
+            checkpoint_path: checkpoint file written by :meth:`checkpoint`
+                (may not exist yet — then recovery is WAL-only).
+            wal: the write-ahead log path the crashed handle appended to.
+            **kwargs: handle options (``merge_ratio``,
+                ``checkpoint_every``) for the recovered instance.
+
+        Returns:
+            A handle whose ``snapshot()`` is component-identical to batch
+            ``dbscan`` on exactly the durable (acknowledged) points.
+
+        Raises:
+            repro.stream.durability.CheckpointError: the checkpoint file
+                is corrupt or has an unknown format version.
+            repro.stream.durability.WALError: the WAL header is not ours.
+            ValueError: neither file holds any state to recover.
+        """
+        wal_path = wal.path if isinstance(wal, durability.WriteAheadLog) \
+            else wal
+        return durability.recover(checkpoint_path, wal_path, **kwargs)
+
+    def _adopt_state(self, state: dict) -> None:
+        """Install checkpointed arrays + rebuild the two-level index from
+        them (used by ``durability.recover``; no reclustering — labels,
+        counts, and the core mask are restored verbatim, the trees are
+        deterministically rebuilt from the points)."""
+        m = state["manifest"]
+        pts = np.ascontiguousarray(state["pts"], np.float32)
+        if len(pts):
+            check_points(pts, name="checkpoint points", dims=(2, 3))
+        self._pts = pts
+        self._counts = np.ascontiguousarray(state["counts"], np.int32)
+        self._core = np.ascontiguousarray(state["core"], bool)
+        self._labels = np.ascontiguousarray(state["labels"], np.int32)
+        self.n_inserts = int(m["n_inserts"])
+        self.n_merges = int(m["n_merges"])
+        self.n_repair_sweeps = int(m["n_repair_sweeps"])
+        n_main = int(m["n_main"])
+        self._n_main = n_main
+        if n_main >= 2:
+            self._main = self._build_level(
+                self._pts[:n_main], np.arange(n_main, dtype=np.int64))
+        elif n_main == 1:
+            segs = grid.build_segments_fdbscan(
+                jnp.asarray(self._pts[:n_main]))
+            self._main = _Level(segs, None, np.asarray(segs.order, np.int64))
+        else:
+            self._main = None
+        self._rebuild_delta()
+
+    # ------------------------------------------------------------------ #
     # internals                                                          #
     # ------------------------------------------------------------------ #
 
     def _check_pts(self, pts, grow: bool) -> np.ndarray:
+        checked = check_points(pts, name="points", dims=(2, 3))
         # np.array (not asarray): never alias a caller-owned buffer the
         # caller may mutate after we have indexed its coordinates
-        arr = np.array(pts, np.float32)
-        if arr.ndim != 2 or arr.shape[1] not in (2, 3):
-            raise ValueError(f"expected (k, 2|3) points; got {arr.shape}")
+        arr = np.array(checked, np.float32)
         if self.n_points and arr.shape[1] != self._pts.shape[1]:
             raise ValueError(f"dimensionality mismatch: index is "
                              f"{self._pts.shape[1]}-d, got {arr.shape[1]}-d")

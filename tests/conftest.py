@@ -23,6 +23,9 @@ FAST_MODULES = {
 def pytest_configure(config):
     config.addinivalue_line(
         "markers", "fast: quick tier-1 subset (run with `pytest -m fast`)")
+    config.addinivalue_line(
+        "markers", "fault: subprocess kill-based crash/recovery tests for "
+        "the streaming durability layer (run with `pytest -m fault`)")
 
 
 def pytest_collection_modifyitems(config, items):

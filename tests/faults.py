@@ -1,0 +1,199 @@
+"""Fault-injection harness for the streaming durability layer.
+
+Two halves:
+
+  * **Child driver** (``python tests/faults.py --workdir D --crash-point P
+    --crash-at K ...``): runs a deterministic insert stream against a
+    ``StreamingDBSCAN`` handle with a WAL + auto-checkpoints, arming one
+    named crash point (``repro.stream.durability.FAULT_POINTS``).  The
+    armed barrier terminates the process with ``os._exit(137)`` — the
+    in-process equivalent of ``kill -9``: no cleanup, no flushing, no
+    atexit.  After every *acknowledged* insert (i.e. ``insert`` returned)
+    the driver appends the new watermark to ``D/acks.txt`` with fsync, so
+    the parent knows exactly which batches the client was told are
+    durable.
+
+  * **Parent helpers** (imported by tests/test_faults.py): spawn the
+    child, then recover from ``D`` and assert the durability contract —
+    the recovered point count sits on a batch boundary (no half-applied
+    batch), covers every acknowledged watermark (no lost acknowledged
+    batch), and ``snapshot()`` is component-identical to batch ``dbscan``
+    on exactly the recovered prefix.  Recovery must never raise on a
+    torn/corrupt WAL tail.
+
+The stream itself is deterministic (dataset, seed, and batch split are
+part of the config and regenerated identically on both sides), so every
+kill point is reproducible bit-for-bit.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import tempfile
+
+import numpy as np
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# One deterministic serving scenario shared by child and parent.
+CONFIG = {
+    "dataset": "blobs",
+    "n": 240,
+    "seed": 0,
+    "eps": 0.05,
+    "min_pts": 6,
+    "batches": 6,
+    "merge_every": 2,        # force a merge (and auto-checkpoint) every 2
+    "checkpoint_every": 1,   # ... inserts, so every barrier is exercised
+}
+
+CRASH_EXIT = 137
+
+
+def stream_points(cfg=CONFIG):
+    """The deterministic point stream, split into insert batches."""
+    from repro.data import pointclouds
+    pts = pointclouds.load(cfg["dataset"], cfg["n"], seed=cfg["seed"])
+    return pts, np.array_split(np.arange(cfg["n"]), cfg["batches"])
+
+
+def paths(workdir):
+    return (os.path.join(workdir, "ckpt.npz"),
+            os.path.join(workdir, "wal.bin"),
+            os.path.join(workdir, "acks.txt"))
+
+
+def run_child(workdir, crash_point=None, crash_at=1, cfg=CONFIG,
+              timeout=300):
+    """Run the driver as a subprocess; returns its CompletedProcess."""
+    cmd = [sys.executable, os.path.abspath(__file__),
+           "--workdir", str(workdir)]
+    if crash_point is not None:
+        cmd += ["--crash-point", crash_point, "--crash-at", str(crash_at)]
+    for k, v in cfg.items():
+        cmd += [f"--{k.replace('_', '-')}", str(v)]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    # every child is a fresh process: share one persistent jit cache so
+    # the kill matrix doesn't recompile the traversal programs per spawn
+    cache = os.path.join(tempfile.gettempdir(), "repro-faults-jit-cache")
+    env.setdefault("JAX_COMPILATION_CACHE_DIR", cache)
+    env.setdefault("JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS", "0")
+    env.setdefault("JAX_PERSISTENT_CACHE_MIN_ENTRY_SIZE_BYTES", "0")
+    return subprocess.run(cmd, cwd=REPO, env=env, timeout=timeout,
+                          capture_output=True, text=True)
+
+
+def read_acks(workdir):
+    """Acknowledged watermarks (handle.n_points after each acked insert)."""
+    _, _, ack_path = paths(workdir)
+    if not os.path.exists(ack_path):
+        return []
+    with open(ack_path) as f:
+        return [int(line) for line in f.read().split()]
+
+
+def recover_and_check(workdir, cfg=CONFIG):
+    """Recover from ``workdir`` and assert the full durability contract.
+
+    Returns the recovered handle (still live: the caller can insert the
+    rest of the stream into it and re-verify).
+    """
+    from repro.core import dispatch
+    from repro.core.validate import check_component_identical
+    from repro.stream import StreamingDBSCAN
+
+    ckpt, wal, _ = paths(workdir)
+    pts, batches = stream_points(cfg)
+    boundaries = np.cumsum([0] + [len(b) for b in batches])
+    acked = read_acks(workdir)
+
+    h = StreamingDBSCAN.restore(ckpt, wal=wal,
+                                checkpoint_every=cfg["checkpoint_every"])
+    n_rec = h.n_points
+    assert n_rec in boundaries, (
+        f"recovered {n_rec} points — not a batch boundary {boundaries}: "
+        "a batch was half-applied")
+    assert n_rec >= (max(acked) if acked else 0), (
+        f"recovered {n_rec} points but {max(acked)} were acknowledged "
+        "as durable: an acknowledged batch was lost")
+    if n_rec:
+        snap = h.snapshot()
+        ref = dispatch.dbscan(pts[:n_rec], cfg["eps"], cfg["min_pts"],
+                              algorithm="fdbscan")
+        check_component_identical(snap.labels, snap.core_mask,
+                                  ref.labels, ref.core_mask)
+    return h
+
+
+def finish_stream(h, cfg=CONFIG):
+    """Insert whatever the crash cut off and verify final equivalence."""
+    from repro.core import dispatch
+    from repro.core.validate import check_component_identical
+
+    pts, batches = stream_points(cfg)
+    boundaries = np.cumsum([0] + [len(b) for b in batches])
+    k = int(np.searchsorted(boundaries, h.n_points))
+    for b in batches[k:]:
+        h.insert(pts[b])
+    assert h.n_points == cfg["n"]
+    snap = h.snapshot()
+    ref = dispatch.dbscan(pts, cfg["eps"], cfg["min_pts"],
+                          algorithm="fdbscan")
+    check_component_identical(snap.labels, snap.core_mask,
+                              ref.labels, ref.core_mask)
+    return h
+
+
+# ---------------------------------------------------------------------- #
+# child driver                                                           #
+# ---------------------------------------------------------------------- #
+
+def _child_main(argv=None):
+    import argparse
+
+    ap = argparse.ArgumentParser(description="fault-injection child driver")
+    ap.add_argument("--workdir", required=True)
+    ap.add_argument("--crash-point", default=None)
+    ap.add_argument("--crash-at", type=int, default=1)
+    ap.add_argument("--dataset", default=CONFIG["dataset"])
+    ap.add_argument("--n", type=int, default=CONFIG["n"])
+    ap.add_argument("--seed", type=int, default=CONFIG["seed"])
+    ap.add_argument("--eps", type=float, default=CONFIG["eps"])
+    ap.add_argument("--min-pts", type=int, default=CONFIG["min_pts"])
+    ap.add_argument("--batches", type=int, default=CONFIG["batches"])
+    ap.add_argument("--merge-every", type=int, default=CONFIG["merge_every"])
+    ap.add_argument("--checkpoint-every", type=int,
+                    default=CONFIG["checkpoint_every"])
+    args = ap.parse_args(argv)
+
+    from repro.stream import StreamingDBSCAN, durability
+
+    cfg = {"dataset": args.dataset, "n": args.n, "seed": args.seed,
+           "eps": args.eps, "min_pts": args.min_pts,
+           "batches": args.batches, "merge_every": args.merge_every,
+           "checkpoint_every": args.checkpoint_every}
+    pts, batches = stream_points(cfg)
+    ckpt, wal, ack_path = paths(args.workdir)
+
+    h = StreamingDBSCAN(None, args.eps, args.min_pts, wal=wal,
+                        checkpoint_path=ckpt,
+                        checkpoint_every=args.checkpoint_every)
+    durability.arm_fault(args.crash_point, at=args.crash_at)
+    ack_f = open(ack_path, "a")
+    for i, b in enumerate(batches):
+        h.insert(pts[b])            # may os._exit(137) at an armed barrier
+        ack_f.write(f"{h.n_points}\n")
+        ack_f.flush()
+        os.fsync(ack_f.fileno())
+        if args.merge_every and (i + 1) % args.merge_every == 0:
+            h.merge()               # forces the merge/checkpoint barriers
+    durability.arm_fault(None)
+    print(f"child done: n={h.n_points} merges={h.n_merges}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(_child_main())

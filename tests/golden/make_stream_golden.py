@@ -1,0 +1,54 @@
+"""Regenerate the golden durability fixtures (format v1).
+
+Writes ``stream_ckpt_v1.npz`` (a version-1 checkpoint at watermark 80)
+and ``stream_wal_v1.bin`` (a WAL holding two 10-point insert records past
+that watermark) from a deterministic point stream. The fixtures pin the
+**on-disk format**: `tests/test_durability.py` restores them and asserts
+the re-serialized checkpoint is byte-for-byte identical, so any change to
+the npz layout, manifest fields, or WAL framing that silently breaks old
+files fails loudly. Bump ``CHECKPOINT_VERSION``/``_WAL_VERSION`` and
+regenerate (``PYTHONPATH=src python tests/golden/make_stream_golden.py``)
+only with an explicit migration story.
+"""
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", ".."))
+
+from repro.data import pointclouds           # noqa: E402
+from repro.stream import StreamingDBSCAN     # noqa: E402
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+CKPT = os.path.join(HERE, "stream_ckpt_v1.npz")
+WAL = os.path.join(HERE, "stream_wal_v1.bin")
+
+EPS, MIN_PTS = 0.05, 6
+N_CKPT, N_WAL_BATCHES, BATCH = 80, 2, 10
+
+
+def stream():
+    return pointclouds.blobs(N_CKPT + N_WAL_BATCHES * BATCH, k=3, seed=7)
+
+
+def main():
+    pts = stream()
+    for p in (CKPT, WAL):
+        if os.path.exists(p):
+            os.remove(p)
+    # bootstrap + attach both files: __init__ writes the watermark-80
+    # checkpoint, the two inserts append WAL records past it
+    h = StreamingDBSCAN(pts[:N_CKPT], EPS, MIN_PTS,
+                        wal=WAL, checkpoint_path=CKPT)
+    for b in range(N_WAL_BATCHES):
+        lo = N_CKPT + b * BATCH
+        h.insert(pts[lo:lo + BATCH])
+    h._wal.close()
+    print(f"wrote {CKPT} ({os.path.getsize(CKPT)} bytes, watermark "
+          f"{N_CKPT}) and {WAL} ({os.path.getsize(WAL)} bytes, "
+          f"{N_WAL_BATCHES} records)")
+
+
+if __name__ == "__main__":
+    main()

@@ -124,6 +124,54 @@ def test_two_clusters_bridged_by_border():
     check_dbscan(pts, eps, mp, res.labels, res.core_mask)
 
 
+# --------------------------------------------------------------------- #
+# degenerate-parameter matrix (ISSUE: robustness)                        #
+#                                                                        #
+# Every backend must return *well-defined* labels on parameter regimes   #
+# that skip the interesting code paths entirely — min_pts larger than    #
+# the whole dataset (all noise), eps swallowing the bounding box (one    #
+# cluster), a single point, and all-duplicate inputs. These are exactly  #
+# the inputs a serving path sees from misconfigured clients.             #
+# --------------------------------------------------------------------- #
+
+ALL_BACKENDS = ["fdbscan", "fdbscan-densebox", "tiled", "pallas-tree",
+                "stream"]
+
+
+def _degenerate_cases():
+    rng = np.random.default_rng(0)
+    pts = rng.uniform(0, 1, (60, 2)).astype(np.float32)
+    one = pts[:1]
+    dup = np.tile(pts[:1], (20, 1))
+    # (name, points, eps, min_pts, expected clusters: 0 = all noise)
+    return [
+        ("minpts_gt_n", pts, 0.1, len(pts) + 40, 0),
+        ("eps_gt_bbox", pts, 50.0, 5, 1),
+        ("n1_minpts1", one, 0.1, 1, 1),
+        ("n1_minpts2", one, 0.1, 2, 0),
+        ("all_dup", dup, 0.1, 5, 1),
+        ("all_dup_minpts_gt_n", dup, 0.1, len(dup) + 1, 0),
+    ]
+
+
+@pytest.mark.parametrize("algo", ALL_BACKENDS)
+@pytest.mark.parametrize(
+    "name,pts,eps,mp,want",
+    _degenerate_cases(), ids=[c[0] for c in _degenerate_cases()])
+def test_degenerate_parameters(algo, name, pts, eps, mp, want):
+    from repro.core import dispatch
+    res = dispatch.dbscan(pts, eps, mp, algorithm=algo)
+    labs = np.asarray(res.labels)
+    core = np.asarray(res.core_mask)
+    assert res.n_clusters == want
+    assert labs.shape == (len(pts),) and core.shape == (len(pts),)
+    if want == 0:                      # all noise: nothing core, all -1
+        assert (labs == -1).all() and not core.any()
+    else:                              # single cluster: everything core
+        assert (labs == 0).all() and core.all()
+    check_dbscan(pts, eps, mp, labs, core)
+
+
 def test_sweep_count_is_small():
     # hook+jump converges in a handful of sweeps even on adversarial chains
     line = np.stack([np.linspace(0, 1, 512), np.zeros(512)], -1).astype(np.float32)

@@ -1,0 +1,313 @@
+"""Durability-format stability + input hardening (DESIGN.md §10).
+
+Two halves of the robustness contract that need no subprocess kills
+(those live in test_faults.py):
+
+* **Format stability** — the golden fixtures under ``tests/golden/``
+  (``stream_ckpt_v1.npz``, ``stream_wal_v1.bin``) pin the on-disk layout:
+  a current build must read them, and re-serializing the restored state
+  must reproduce the checkpoint *byte for byte*.  Damaged or
+  future-versioned files must be rejected loudly (CheckpointError /
+  WALError), never silently restored.
+
+* **Input hardening** — every public surface (``dispatch.plan/dbscan``,
+  ``StreamingDBSCAN.insert/query``, ``neighbors.*``) routes through
+  ``core.validate.check_points`` and rejects NaN/Inf coordinates, empty
+  point sets, and non-numeric dtypes with a clear ``ValueError`` instead
+  of feeding garbage to the Morton encoder.
+"""
+import io
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import dispatch, neighbors
+from repro.core.validate import check_component_identical, check_points
+from repro.data import pointclouds
+from repro.stream import StreamingDBSCAN, durability
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden")
+GOLDEN_CKPT = os.path.join(GOLDEN, "stream_ckpt_v1.npz")
+GOLDEN_WAL = os.path.join(GOLDEN, "stream_wal_v1.bin")
+
+# must mirror tests/golden/make_stream_golden.py
+G_EPS, G_MIN_PTS = 0.05, 6
+G_N_CKPT, G_N_TOTAL = 80, 100
+
+
+def golden_stream():
+    return pointclouds.blobs(G_N_TOTAL, k=3, seed=7)
+
+
+# --------------------------------------------------------------------- #
+# checkpoint / restore roundtrip                                        #
+# --------------------------------------------------------------------- #
+
+@pytest.mark.fast
+def test_checkpoint_restore_roundtrip(tmp_path):
+    pts = pointclouds.blobs(200, k=3, seed=3)
+    ck = str(tmp_path / "ck.npz")
+    h = StreamingDBSCAN(pts[:150], 0.05, 6)
+    h.insert(pts[150:])
+    h.checkpoint(ck)
+    r = StreamingDBSCAN.restore(ck)
+    assert r.n_points == h.n_points and r.n_main == h.n_main
+    assert (r.points == h.points).all()
+    a, b = h.snapshot(), r.snapshot()
+    assert (np.asarray(a.labels) == np.asarray(b.labels)).all()
+    assert (np.asarray(a.core_mask) == np.asarray(b.core_mask)).all()
+    # a restored handle keeps serving: inserts and queries still work
+    r.insert(pts[:10] + 0.003)
+    assert r.n_points == h.n_points + 10
+    # re-serialization is byte-identical (np.savez is deterministic)
+    ck2 = str(tmp_path / "ck2.npz")
+    h.checkpoint(ck2)
+    assert open(ck, "rb").read() == open(ck2, "rb").read()
+
+
+@pytest.mark.fast
+def test_checkpoint_without_path_raises():
+    h = StreamingDBSCAN(pointclouds.blobs(50, seed=0), 0.05, 5)
+    with pytest.raises(ValueError, match="checkpoint path"):
+        h.checkpoint()
+
+
+@pytest.mark.fast
+def test_restore_nothing_to_recover(tmp_path):
+    with pytest.raises(ValueError, match="nothing to recover"):
+        StreamingDBSCAN.restore(str(tmp_path / "absent.npz"),
+                                wal=str(tmp_path / "absent.wal"))
+
+
+# --------------------------------------------------------------------- #
+# golden fixtures: the v1 on-disk format is stable                      #
+# --------------------------------------------------------------------- #
+
+def test_golden_checkpoint_restores_byte_for_byte(tmp_path):
+    h = StreamingDBSCAN.restore(GOLDEN_CKPT)
+    assert h.n_points == G_N_CKPT
+    assert h.eps == G_EPS and h.min_pts == G_MIN_PTS
+    out = str(tmp_path / "rewrite.npz")
+    h.checkpoint(out)
+    golden = open(GOLDEN_CKPT, "rb").read()
+    assert open(out, "rb").read() == golden, (
+        "re-serializing a restored v1 checkpoint changed its bytes — the "
+        "on-disk format drifted; bump CHECKPOINT_VERSION and regenerate "
+        "the fixture (tests/golden/make_stream_golden.py)")
+
+
+def test_golden_wal_replays_past_watermark():
+    h = StreamingDBSCAN.restore(GOLDEN_CKPT, wal=GOLDEN_WAL)
+    pts = golden_stream()
+    assert h.n_points == G_N_TOTAL
+    assert np.allclose(h.points, pts)
+    ref = dispatch.dbscan(pts, G_EPS, G_MIN_PTS, algorithm="fdbscan")
+    snap = h.snapshot()
+    check_component_identical(snap.labels, snap.core_mask,
+                              ref.labels, ref.core_mask)
+
+
+@pytest.mark.fast
+def test_golden_wal_scan_shape():
+    header, records, valid_end = durability.scan_wal(GOLDEN_WAL)
+    assert header == {"version": 1, "d": 2, "eps": G_EPS,
+                      "min_pts": G_MIN_PTS}
+    assert [r[0] for r in records] == [80, 90]
+    assert all(r[1].shape == (10, 2) for r in records)
+    assert valid_end == os.path.getsize(GOLDEN_WAL)
+
+
+# --------------------------------------------------------------------- #
+# rejection: damaged / future-versioned files fail loudly               #
+# --------------------------------------------------------------------- #
+
+def _rewrite_checkpoint(out_path, *, version=None, corrupt=None):
+    """Copy the golden checkpoint, optionally stamping a new manifest
+    version or flipping bits in one array (without fixing the checksum)."""
+    with np.load(GOLDEN_CKPT) as z:
+        arrays = {k: z[k] for k in z.files}
+    manifest = json.loads(bytes(arrays["manifest"]).decode())
+    if version is not None:
+        manifest["version"] = version
+    if corrupt is not None:
+        arr = arrays[corrupt].copy()
+        arr.flat[0] += 1
+        arrays[corrupt] = arr
+    arrays["manifest"] = np.frombuffer(
+        json.dumps(manifest, sort_keys=True).encode(), np.uint8)
+    buf = io.BytesIO()
+    np.savez(buf, **arrays)
+    with open(out_path, "wb") as f:
+        f.write(buf.getvalue())
+
+
+@pytest.mark.fast
+def test_rejects_future_format_version(tmp_path):
+    p = str(tmp_path / "future.npz")
+    _rewrite_checkpoint(p, version=durability.CHECKPOINT_VERSION + 41)
+    with pytest.raises(durability.CheckpointError,
+                       match="unsupported checkpoint format version"):
+        StreamingDBSCAN.restore(p)
+
+
+@pytest.mark.fast
+def test_rejects_checksum_mismatch(tmp_path):
+    p = str(tmp_path / "bitrot.npz")
+    _rewrite_checkpoint(p, corrupt="counts")
+    with pytest.raises(durability.CheckpointError,
+                       match="checksum mismatch"):
+        StreamingDBSCAN.restore(p)
+
+
+@pytest.mark.fast
+def test_rejects_foreign_npz(tmp_path):
+    p = str(tmp_path / "foreign.npz")
+    np.savez(p, something=np.arange(4))
+    with pytest.raises(durability.CheckpointError, match="no manifest"):
+        durability.load_checkpoint(p)
+
+
+@pytest.mark.fast
+def test_rejects_truncated_npz(tmp_path):
+    p = str(tmp_path / "torn.npz")
+    with open(GOLDEN_CKPT, "rb") as f:
+        blob = f.read()
+    with open(p, "wb") as f:
+        f.write(blob[:len(blob) // 2])
+    with pytest.raises(durability.CheckpointError, match="unreadable"):
+        durability.load_checkpoint(p)
+
+
+@pytest.mark.fast
+def test_wal_rejects_bad_magic(tmp_path):
+    p = str(tmp_path / "bad.wal")
+    with open(p, "wb") as f:
+        f.write(b"NOPE" + b"\x00" * 32)
+    with pytest.raises(durability.WALError, match="bad magic"):
+        durability.scan_wal(p)
+
+
+@pytest.mark.fast
+def test_wal_rejects_parameter_mismatch(tmp_path):
+    p = str(tmp_path / "mismatch.wal")
+    w = durability.WriteAheadLog(p, eps=0.1, min_pts=4)
+    w.append(np.zeros((3, 2), np.float32), 0)
+    w.close()
+    w2 = durability.WriteAheadLog(p, eps=0.2, min_pts=4)
+    with pytest.raises(durability.WALError, match="do not match"):
+        w2.append(np.ones((3, 2), np.float32), 3)
+
+
+@pytest.mark.fast
+def test_wal_truncates_torn_tail_and_appends(tmp_path):
+    p = str(tmp_path / "torn.wal")
+    w = durability.WriteAheadLog(p, eps=0.1, min_pts=4)
+    w.append(np.zeros((3, 2), np.float32), 0)
+    w.append(np.ones((4, 2), np.float32), 3)
+    w.close()
+    with open(p, "ab") as f:                 # torn third record
+        f.write(b"\x52\x45\x43\x57" + b"\x00" * 9)
+    header, records, valid_end = durability.scan_wal(p)
+    assert len(records) == 2 and valid_end < os.path.getsize(p)
+    # reopening for append drops the torn tail, then extends cleanly
+    w = durability.WriteAheadLog(p, eps=0.1, min_pts=4)
+    w.append(np.full((2, 2), 2, np.float32), 7)
+    w.close()
+    _, records, valid_end = durability.scan_wal(p)
+    assert [r[0] for r in records] == [0, 3, 7]
+    assert valid_end == os.path.getsize(p)
+
+
+@pytest.mark.fast
+def test_handle_refuses_dirty_wal(tmp_path):
+    """A fresh (non-restore) handle must not silently shadow unreplayed
+    WAL records — that would drop durable, acknowledged data."""
+    p = str(tmp_path / "dirty.wal")
+    w = durability.WriteAheadLog(p, eps=0.05, min_pts=5)
+    w.append(np.zeros((3, 2), np.float32), 0)
+    w.close()
+    with pytest.raises(durability.WALError, match="recover"):
+        StreamingDBSCAN(pointclouds.blobs(50, seed=0), 0.05, 5, wal=p)
+
+
+# --------------------------------------------------------------------- #
+# input hardening: check_points at every public surface                 #
+# --------------------------------------------------------------------- #
+
+def _nan_pts():
+    pts = pointclouds.blobs(40, seed=1).copy()
+    pts[7] = np.nan
+    return pts
+
+
+def _inf_pts():
+    pts = pointclouds.blobs(40, seed=1).copy()
+    pts[3, 0] = np.inf
+    return pts
+
+
+BAD_INPUTS = [
+    ("nan", _nan_pts(), "non-finite"),
+    ("inf", _inf_pts(), "non-finite"),
+    ("empty", np.empty((0, 2), np.float32), "empty"),
+    ("flat", np.zeros(8, np.float32), r"\(n, d\)"),
+    ("bool", np.zeros((8, 2), bool), "dtype"),
+    ("complex", np.zeros((8, 2), complex), "dtype"),
+    ("strings", np.array([["a", "b"], ["c", "d"]]), "dtype"),
+]
+BAD_IDS = [b[0] for b in BAD_INPUTS]
+
+
+@pytest.mark.fast
+@pytest.mark.parametrize("name,bad,msg", BAD_INPUTS, ids=BAD_IDS)
+def test_check_points_rejects(name, bad, msg):
+    with pytest.raises(ValueError, match=msg):
+        check_points(bad)
+
+
+@pytest.mark.fast
+def test_check_points_accepts_int_grid():
+    out = check_points(np.arange(12).reshape(6, 2))
+    assert out.shape == (6, 2)
+
+
+@pytest.mark.fast
+@pytest.mark.parametrize("name,bad,msg", BAD_INPUTS, ids=BAD_IDS)
+def test_dispatch_surfaces_reject(name, bad, msg):
+    with pytest.raises(ValueError, match=msg):
+        dispatch.plan(bad, 0.05, 5)
+    with pytest.raises(ValueError, match=msg):
+        dispatch.dbscan(bad, 0.05, 5)
+
+
+@pytest.mark.fast
+def test_stream_surfaces_reject():
+    pts = pointclouds.blobs(60, seed=2)
+    h = StreamingDBSCAN(pts, 0.05, 5)
+    for bad in (_nan_pts(), np.empty((0, 2), np.float32)):
+        with pytest.raises(ValueError):
+            h.insert(bad)
+        with pytest.raises(ValueError):
+            h.query(bad)
+    with pytest.raises(ValueError, match="non-finite"):
+        StreamingDBSCAN(_nan_pts(), 0.05, 5)
+    assert h.n_points == 60              # rejected requests left no trace
+
+
+@pytest.mark.fast
+def test_neighbors_surfaces_reject():
+    pts = pointclouds.blobs(60, seed=2)
+    bad = _nan_pts()
+    for fn in (lambda p: neighbors.neighbor_count(p, 0.05),
+               lambda p: neighbors.knn(p, 3),
+               lambda p: neighbors.neighbor_count(pts, 0.05, query_pts=p)):
+        with pytest.raises(ValueError, match="non-finite"):
+            fn(bad)
+    with pytest.raises(ValueError, match="empty"):
+        neighbors.knn(np.empty((0, 2), np.float32), 3)
+    # an *empty query batch* is a valid request: empty result, no error
+    out = neighbors.neighbor_count(pts, 0.05,
+                                   query_pts=np.empty((0, 2), np.float32))
+    assert out.shape == (0,)

@@ -1,0 +1,102 @@
+"""Kill-based crash/recovery tests for the streaming durability layer.
+
+Each test spawns the deterministic child driver (tests/faults.py), which
+arms exactly one crash point (``durability.FAULT_POINTS``) and dies there
+with ``os._exit(137)`` — no cleanup, no flushing: the in-process stand-in
+for ``kill -9``.  The parent then recovers from the checkpoint + WAL left
+behind and asserts the durability contract (DESIGN.md §10):
+
+  * recovery never raises on a torn or corrupt WAL tail;
+  * the recovered point count sits on an insert-batch boundary — a batch
+    is never half-applied;
+  * every *acknowledged* batch (``insert`` returned before the kill) is
+    present — acknowledged-durable data is never lost;
+  * ``snapshot()`` of the recovered handle is component-identical to
+    batch ``dbscan`` on exactly the recovered prefix, and stays so after
+    the rest of the stream is inserted into the recovered handle.
+
+The child's schedule (6 batches of 40, a forced merge every 2 inserts,
+auto-checkpoint on every merge) drives every barrier: merges fire at
+batches 2 and 4, checkpoints right after each merge, and the WAL holds
+the not-yet-checkpointed suffix in between.
+"""
+import numpy as np
+import pytest
+
+import faults
+from faults import CONFIG, CRASH_EXIT
+
+pytestmark = pytest.mark.fault
+
+
+# (crash point, occurrence) — chosen so each kill lands where the durable
+# state is most interesting: mid-stream, with a checkpoint behind and
+# un-checkpointed WAL records in front.
+KILL_MATRIX = [
+    ("pre-insert", 3),       # batch 3 never became durable: not recovered
+    ("wal-durable", 3),      # batch 3 durable but unapplied: replay applies
+    ("post-insert", 3),      # applied but never acknowledged: replay is
+                             # idempotent (re-applies from the WAL)
+    ("mid-merge", 2),        # merge in flight: in-memory only, no damage
+    ("mid-checkpoint", 1),   # first checkpoint torn: WAL-only recovery
+    ("mid-checkpoint", 2),   # later checkpoint torn: previous one + WAL
+    ("mid-wal-append", 3),   # torn record on disk: truncated, not applied
+]
+
+
+@pytest.mark.parametrize("point,at", KILL_MATRIX,
+                         ids=[f"{p}@{a}" for p, a in KILL_MATRIX])
+def test_kill_and_recover(tmp_path, point, at):
+    proc = faults.run_child(tmp_path, crash_point=point, crash_at=at)
+    assert proc.returncode == CRASH_EXIT, (
+        f"child did not die at the armed barrier {point}@{at}:\n"
+        f"rc={proc.returncode}\nstdout={proc.stdout}\nstderr={proc.stderr}")
+    h = faults.recover_and_check(tmp_path)
+    faults.finish_stream(h)
+
+
+def test_clean_run_then_restore(tmp_path):
+    """No crash at all: restore of the final durable state is the whole
+    stream, and the acks file covers every batch."""
+    proc = faults.run_child(tmp_path, crash_point=None)
+    assert proc.returncode == 0, proc.stderr
+    acks = faults.read_acks(tmp_path)
+    assert acks[-1] == CONFIG["n"] and len(acks) == CONFIG["batches"]
+    h = faults.recover_and_check(tmp_path)
+    assert h.n_points == CONFIG["n"]
+
+
+@pytest.mark.parametrize("tail", [
+    b"\x52\x45\x43\x57" + b"\x00" * 9,      # torn mid-header
+    b"\x52\x45\x43\x57" + b"\x00" * 40,     # full header, torn payload
+    b"not-a-record-at-all",                 # corrupt garbage tail
+], ids=["torn-header", "torn-payload", "garbage"])
+def test_torn_final_record(tmp_path, tail):
+    """A crash mid-append leaves a partial final record: recovery must
+    truncate it silently and keep everything acknowledged before it."""
+    # die right before batch 6: batches 1-5 acked, WAL holds batch 5
+    proc = faults.run_child(tmp_path, crash_point="pre-insert", crash_at=6)
+    assert proc.returncode == CRASH_EXIT, proc.stderr
+    _, wal, _ = faults.paths(tmp_path)
+    with open(wal, "ab") as f:
+        f.write(tail)
+    h = faults.recover_and_check(tmp_path)
+    assert h.n_points == max(faults.read_acks(tmp_path))
+    faults.finish_stream(h)
+
+
+def test_recovered_handle_is_durable_again(tmp_path):
+    """Crash, recover, crash the *recovered* state's files again by hand
+    (torn tail), recover again — durability survives repeated cycles."""
+    proc = faults.run_child(tmp_path, crash_point="wal-durable", crash_at=2)
+    assert proc.returncode == CRASH_EXIT, proc.stderr
+    h = faults.recover_and_check(tmp_path)
+    pts, batches = faults.stream_points()
+    boundaries = np.cumsum([0] + [len(b) for b in batches])
+    k = int(np.searchsorted(boundaries, h.n_points))
+    h.insert(pts[batches[k]])               # re-attached WAL logs this
+    _, wal, _ = faults.paths(tmp_path)
+    with open(wal, "ab") as f:
+        f.write(b"\x52\x45\x43\x57 torn again")
+    h2 = faults.recover_and_check(tmp_path)
+    assert h2.n_points >= h.n_points
