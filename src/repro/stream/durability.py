@@ -180,7 +180,12 @@ def save_checkpoint(handle, path: str) -> dict:
     tmp = f"{path}.tmp.{os.getpid()}"
     fd = os.open(tmp, os.O_WRONLY | os.O_CREAT | os.O_TRUNC, 0o644)
     try:
-        os.write(fd, buf.getvalue())
+        # os.write may write fewer bytes than asked (Linux caps a single
+        # write at ~2GB) — a short write that got fsync'd and renamed
+        # would replace the previous good checkpoint with a torn one
+        view = memoryview(buf.getvalue())
+        while len(view):
+            view = view[os.write(fd, view):]
         os.fsync(fd)
     finally:
         os.close(fd)
@@ -409,7 +414,11 @@ def recover(checkpoint_path: str | None = None, wal_path: str | None = None,
     Raises:
         CheckpointError: the checkpoint file exists but is damaged or has
             an unknown format version.
-        WALError: the WAL header is structurally incompatible.
+        WALError: the WAL header is structurally incompatible, its
+            parameters disagree with the checkpoint manifest, or the log
+            has a *gap* — a record whose start watermark is past the
+            recovered state, meaning acknowledged records depend on a
+            prefix that is missing (never silently dropped).
         ValueError: neither a checkpoint nor a non-empty WAL exists (there
             is nothing to recover and no parameters to start from).
     """
@@ -424,6 +433,17 @@ def recover(checkpoint_path: str | None = None, wal_path: str | None = None,
         raise ValueError(
             "nothing to recover: no checkpoint file and no (non-empty) WAL "
             f"(checkpoint={checkpoint_path!r}, wal={wal_path!r})")
+    if state is not None and wal_header is not None:
+        m = state["manifest"]
+        if (wal_header["d"] != m["d"] or wal_header["eps"] != m["eps"]
+                or wal_header["min_pts"] != m["min_pts"]):
+            raise WALError(
+                f"{wal_path}: WAL header (d={wal_header['d']}, "
+                f"eps={wal_header['eps']}, min_pts={wal_header['min_pts']}) "
+                f"does not match the checkpoint manifest (d={m['d']}, "
+                f"eps={m['eps']}, min_pts={m['min_pts']}) — the files are "
+                "from different parameter runs; replaying would corrupt "
+                "the index")
 
     if state is not None:
         m = state["manifest"]
@@ -440,10 +460,16 @@ def recover(checkpoint_path: str | None = None, wal_path: str | None = None,
         if start_gid + len(batch) <= h.n_points:
             continue                     # already covered by the checkpoint
         if start_gid != h.n_points:
-            # a gap can only mean records written against a *newer*
-            # checkpoint than the one we loaded — stop rather than apply
-            # out of order (the durable prefix up to here is intact)
-            break
+            # A gap means acknowledged records depend on state we do not
+            # have (e.g. the WAL was truncated against a checkpoint that
+            # is not the one being restored, or the checkpoint file was
+            # swapped for an older/foreign one). Applying out of order
+            # would silently violate the durability contract — fail loud.
+            raise WALError(
+                f"{wal_path}: WAL record starts at watermark {start_gid} "
+                f"but the recovered state ends at {h.n_points} — the "
+                "log's prefix is missing; refusing to replay a gapped "
+                "log (acknowledged data would be silently lost)")
         h.insert(batch)                  # _wal is None here: no re-logging
 
     # re-attach durability so the recovered handle keeps serving durably

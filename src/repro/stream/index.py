@@ -48,6 +48,7 @@ and ``snapshot()`` reproduces the batch core mask exactly.
 """
 from __future__ import annotations
 
+import os
 from typing import NamedTuple
 
 import numpy as np
@@ -141,7 +142,9 @@ class StreamingDBSCAN:
         appended *before* it is applied, so an acknowledged insert
         survives a crash (DESIGN.md §10). The file must be fresh — a WAL
         with leftover records means a previous process died; go through
-        :meth:`restore` instead of silently shadowing its state.
+        :meth:`restore` instead of silently shadowing its state. Without
+        a ``checkpoint_path``, bootstrap points are logged as the log's
+        first (gid-0) record, so WAL-only recovery covers them too.
     checkpoint_path: optional checkpoint file; written atomically by
         :meth:`checkpoint` (and once at construction when the handle
         bootstraps from initial points, so they are durable too).
@@ -199,6 +202,12 @@ class StreamingDBSCAN:
                     # inserts, so without this a crash before the first
                     # checkpoint would lose the initial clustering
                     self.checkpoint()
+                elif self._wal is not None:
+                    # WAL-only durability: log the bootstrap set as the
+                    # gid-0 record, otherwise recovery cold-starts empty,
+                    # every later record sits past a gap, and acknowledged
+                    # inserts would be unrecoverable
+                    self._wal.append(self._pts, 0)
 
     # ------------------------------------------------------------------ #
     # public surface                                                     #
@@ -383,18 +392,24 @@ class StreamingDBSCAN:
         counts, core mask, union-find labels, plus a manifest (format
         version, eps/min_pts, the insert-order watermark, a content
         checksum) — written tmp-file + fsync + rename, so a crash during
-        the write leaves the previous checkpoint intact. A successful
-        checkpoint also truncates the attached WAL (every logged record is
-        now covered by the watermark). Returns the manifest written.
+        the write leaves the previous checkpoint intact. A checkpoint
+        written to the *configured* ``checkpoint_path`` (the file
+        :meth:`restore` will read) also truncates the attached WAL —
+        every logged record is now covered by the watermark; an ad-hoc
+        side checkpoint to some other ``path`` leaves the WAL alone, so
+        the records the configured path's recovery needs stay durable.
+        Returns the manifest written.
         """
         path = path if path is not None else self._ckpt_path
         if path is None:
             raise ValueError("no checkpoint path: pass one to checkpoint() "
                              "or build the handle with checkpoint_path=")
         manifest = durability.save_checkpoint(self, path)
-        self._merges_since_ckpt = 0
-        if self._wal is not None:
-            self._wal.reset()
+        if (self._ckpt_path is not None
+                and os.path.realpath(path) == os.path.realpath(self._ckpt_path)):
+            self._merges_since_ckpt = 0
+            if self._wal is not None:
+                self._wal.reset()
         return manifest
 
     @classmethod
@@ -463,7 +478,10 @@ class StreamingDBSCAN:
     # ------------------------------------------------------------------ #
 
     def _check_pts(self, pts, grow: bool) -> np.ndarray:
-        checked = check_points(pts, name="points", dims=(2, 3))
+        # an empty *probe* batch is a valid request (empty QueryResult,
+        # matching neighbors.*); an empty *insert* batch is rejected
+        checked = check_points(pts, name="points", dims=(2, 3),
+                               allow_empty=not grow)
         # np.array (not asarray): never alias a caller-owned buffer the
         # caller may mutate after we have indexed its coordinates
         arr = np.array(checked, np.float32)

@@ -221,6 +221,72 @@ def test_wal_truncates_torn_tail_and_appends(tmp_path):
 
 
 @pytest.mark.fast
+def test_wal_only_bootstrap_recovers(tmp_path):
+    """WAL without a checkpoint_path: the bootstrap set is logged as the
+    gid-0 record, so WAL-only recovery keeps every acknowledged insert
+    (it used to come back empty — silent loss of acknowledged data)."""
+    p = str(tmp_path / "only.wal")
+    pts = pointclouds.blobs(120, k=3, seed=4)
+    h = StreamingDBSCAN(pts[:80], 0.05, 6, wal=p)
+    h.insert(pts[80:])
+    r = StreamingDBSCAN.restore(wal=p)
+    assert r.n_points == 120
+    assert (r.points == h.points).all()
+    snap = r.snapshot()
+    ref = dispatch.dbscan(pts, 0.05, 6, algorithm="fdbscan")
+    check_component_identical(snap.labels, snap.core_mask,
+                              ref.labels, ref.core_mask)
+
+
+@pytest.mark.fast
+def test_recover_raises_on_gapped_wal(tmp_path):
+    """A WAL whose first unapplied record starts past the recovered
+    watermark is missing its prefix: recovery must fail loudly, not
+    return a handle that silently dropped acknowledged records."""
+    p = str(tmp_path / "gap.wal")
+    w = durability.WriteAheadLog(p, eps=0.05, min_pts=5)
+    w.append(np.zeros((4, 2), np.float32), 80)   # prefix 0..80 is absent
+    w.close()
+    with pytest.raises(durability.WALError, match="gap"):
+        StreamingDBSCAN.restore(wal=p)
+
+
+@pytest.mark.fast
+def test_side_checkpoint_keeps_wal(tmp_path):
+    """checkpoint(path) to a path other than the configured one must not
+    truncate the WAL — restore(configured_path) still needs the records."""
+    ck = str(tmp_path / "ck.npz")
+    side = str(tmp_path / "side.npz")
+    wl = str(tmp_path / "w.wal")
+    pts = pointclouds.blobs(120, k=3, seed=5)
+    h = StreamingDBSCAN(pts[:80], 0.05, 6, wal=wl, checkpoint_path=ck)
+    h.insert(pts[80:])              # WAL holds the un-checkpointed tail
+    h.checkpoint(side)              # ad-hoc side copy: WAL untouched
+    _, records, _ = durability.scan_wal(wl)
+    assert [r[0] for r in records] == [80]
+    r = StreamingDBSCAN.restore(ck, wal=wl)
+    assert r.n_points == 120
+    h.checkpoint()                  # configured path: *now* it truncates
+    _, records, _ = durability.scan_wal(wl)
+    assert records == []
+
+
+@pytest.mark.fast
+def test_recover_rejects_wal_checkpoint_param_mismatch(tmp_path):
+    """A WAL from a different parameter run than the checkpoint must be
+    refused at recovery, not silently replayed into a mismatched handle."""
+    ck = str(tmp_path / "ck.npz")
+    wl = str(tmp_path / "w.wal")
+    StreamingDBSCAN(pointclouds.blobs(60, seed=6), 0.05, 6,
+                    checkpoint_path=ck)
+    w = durability.WriteAheadLog(wl, eps=0.1, min_pts=6)  # wrong eps
+    w.append(np.zeros((3, 2), np.float32), 60)
+    w.close()
+    with pytest.raises(durability.WALError, match="manifest"):
+        StreamingDBSCAN.restore(ck, wal=wl)
+
+
+@pytest.mark.fast
 def test_handle_refuses_dirty_wal(tmp_path):
     """A fresh (non-restore) handle must not silently shadow unreplayed
     WAL records — that would drop durable, acknowledged data."""
@@ -289,11 +355,22 @@ def test_stream_surfaces_reject():
     for bad in (_nan_pts(), np.empty((0, 2), np.float32)):
         with pytest.raises(ValueError):
             h.insert(bad)
-        with pytest.raises(ValueError):
-            h.query(bad)
+    with pytest.raises(ValueError, match="non-finite"):
+        h.query(_nan_pts())
     with pytest.raises(ValueError, match="non-finite"):
         StreamingDBSCAN(_nan_pts(), 0.05, 5)
     assert h.n_points == 60              # rejected requests left no trace
+
+
+@pytest.mark.fast
+def test_stream_query_allows_empty_batch():
+    """An empty *probe* batch is a valid request (mirroring neighbors.*):
+    empty QueryResult, no error — only inserts reject emptiness."""
+    h = StreamingDBSCAN(pointclouds.blobs(60, seed=2), 0.05, 5)
+    out = h.query(np.empty((0, 2), np.float32))
+    assert out.labels.shape == (0,)
+    assert out.counts.shape == (0,)
+    assert out.would_be_core.shape == (0,)
 
 
 @pytest.mark.fast
