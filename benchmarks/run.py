@@ -4,7 +4,9 @@
 ``python -m benchmarks.run --full``   — paper-scale sizes (n=16384 etc.)
 ``python -m benchmarks.run --check``  — regression gate: re-measure the
     *deterministic* work counters (traversal loop trips, sharded distance
-    evaluations) and fail if any regresses more than ``CHECK_THRESHOLD``x
+    evaluations, streaming repair/compaction work on the mixed
+    insert/delete/window trace) and fail if any regresses more than
+    ``CHECK_THRESHOLD``x
     against the committed ``BENCH_*.json`` trajectory files. Wall-clock
     numbers are never gated (CI machines drift); counters cannot.
 
@@ -99,6 +101,38 @@ def check() -> None:
                          committed[key]["tree_distance_evals"])
     else:
         print("check,distributed,-,-,-,skipped (no BENCH_distributed.json)")
+
+    stream_path = os.path.join(REPO, "BENCH_stream.json")
+    if os.path.exists(stream_path):
+        with open(stream_path) as f:
+            committed = json.load(f)
+        if "mixed" not in committed:
+            print("check,stream,-,-,-,skipped (pre-mixed BENCH_stream.json"
+                  " — regenerate)")
+        else:
+            from . import bench_stream
+            ref = committed["mixed"]
+            drift = {k: ref[k] for k in ("n", "window", "batch", "seed",
+                                         "buffer_max", "delete_every",
+                                         "delete_frac")}
+            if (drift != {k: bench_stream.MIXED[k] for k in drift}
+                    or (ref["eps"], ref["minpts"]) != (bench_stream.EPS,
+                                                       bench_stream.MINPTS)):
+                failures.append(
+                    "stream/mixed: workload drifted (committed "
+                    f"{drift} eps={ref['eps']}/minpts={ref['minpts']}) — "
+                    "regenerate BENCH_stream.json")
+            else:
+                # the dynamic trace is fully deterministic: the repair /
+                # compaction work counters are exact, so gate them (and
+                # the exact survivor counts) — never the wall clock
+                got = bench_stream.mixed_workload()
+                for key in ("repair_sweeps", "n_compactions", "n_merges",
+                            "n_active", "n_tombstoned"):
+                    _check_ratio(failures, f"stream/mixed/{key}",
+                                 got[key], ref[key])
+    else:
+        print("check,stream,-,-,-,skipped (no BENCH_stream.json)")
 
     if failures:
         print("# REGRESSION GATE FAILED:", file=sys.stderr)

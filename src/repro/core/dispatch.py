@@ -370,6 +370,7 @@ def dbscan(points, eps: float, min_pts: int, *, algorithm: str = "auto",
 
 
 def stream_handle(points, eps: float, min_pts: int, *,
+                  window: int | None = None,
                   wal=None, checkpoint_path: str | None = None,
                   checkpoint_every: int = 0, **kwargs):
     """Build a :class:`repro.stream.StreamingDBSCAN` handle over ``points``.
@@ -391,20 +392,25 @@ def stream_handle(points, eps: float, min_pts: int, *,
         points: (n, d) initial points, d in (2, 3), n >= 2.
         eps: DBSCAN radius (non-negative).
         min_pts: DBSCAN density threshold.
+        window: optional sliding-window size — every insert auto-expires
+            points whose insert id falls below ``n_points - window``
+            (insert-order watermark; see ``StreamingDBSCAN.expire``).
         wal: optional write-ahead-log path (or a prebuilt
             ``repro.stream.durability.WriteAheadLog``).
         checkpoint_path: optional checkpoint file for
             :meth:`StreamingDBSCAN.checkpoint` and the auto policy.
         checkpoint_every: auto-checkpoint after every K merges (0 = off).
         **kwargs: passed to the handle (e.g. ``merge_ratio``, the
-            delta/main size ratio that triggers an index merge).
+            delta/main size ratio that triggers a full index merge, or
+            ``buffer_max``/``growth``, the tiered-compaction knobs).
 
     Returns:
-        A live ``StreamingDBSCAN`` handle exposing ``insert`` / ``query``
-        / ``snapshot`` / ``merge`` / ``checkpoint`` (DESIGN.md §7, §10);
-        after any interleaving of inserts and merges, ``snapshot()`` is
-        component-identical to batch :func:`dbscan` on the accumulated
-        points.
+        A live ``StreamingDBSCAN`` handle exposing ``insert`` /
+        ``delete`` / ``expire`` / ``query`` / ``snapshot`` / ``merge`` /
+        ``compact`` / ``checkpoint`` (DESIGN.md §7, §10, §11); after any
+        interleaving of inserts, deletes, expiries, merges and
+        compactions, ``snapshot()`` is component-identical to batch
+        :func:`dbscan` on exactly the surviving points.
 
     Raises:
         ValueError: malformed ``points`` (empty, NaN/Inf, d outside
@@ -417,6 +423,6 @@ def stream_handle(points, eps: float, min_pts: int, *,
     points = jnp.asarray(points)
     p = plan(points, eps, min_pts, algorithm="stream")
     return StreamingDBSCAN(points, eps, min_pts,
-                           index=(p.segs, p.tree), wal=wal,
+                           index=(p.segs, p.tree), window=window, wal=wal,
                            checkpoint_path=checkpoint_path,
                            checkpoint_every=checkpoint_every, **kwargs)

@@ -11,11 +11,16 @@ auto-selection), and the handle itself is built with
 ``dispatch.stream_handle`` so it reuses the very same cached
 eps-independent index instead of rebuilding it.
 
-Durability (DESIGN.md §10): ``--wal`` logs every insert micro-batch
-before it is applied, ``--checkpoint`` + ``--checkpoint-every`` write
-atomic snapshots of the whole index, and ``--restore`` recovers the
-handle (checkpoint + WAL replay) after a crash and keeps serving where
-the stream left off:
+Sliding windows: ``--window W`` keeps only the most recent W inserted
+points live — every insert auto-expires the rest by insert-order
+watermark (tombstones + demotion repair, DESIGN.md §11), the workload
+the ngsim_like trajectory scenario actually needs.
+
+Durability (DESIGN.md §10): ``--wal`` logs every insert/delete/expire
+micro-batch before it is applied, ``--checkpoint`` +
+``--checkpoint-every`` write atomic snapshots of the whole index, and
+``--restore`` recovers the handle (checkpoint + WAL replay) after a
+crash and keeps serving where the stream left off:
 
   PYTHONPATH=src python -m repro.launch.serve --dataset blobs --n 8192 \
       --eps 0.04 --min-pts 8 --batch 256 --steps 60 --insert-frac 0.3 \
@@ -59,6 +64,10 @@ def main(argv=None):
     ap.add_argument("--insert-frac", type=float, default=0.3,
                     help="probability a step drains inserts (vs queries); "
                     "0 serves a query-only stream, 1 insert-only")
+    ap.add_argument("--window", type=int, default=None, metavar="W",
+                    help="sliding window: every insert auto-expires points "
+                    "older than the last W inserted (tombstones + demotion "
+                    "repair, DESIGN.md §11)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--snapshot-every", type=int, default=0,
                     help="materialize labels every K steps (0: only final)")
@@ -102,7 +111,7 @@ def main(argv=None):
         # prefix, then the pool in order), so the recovered watermark tells
         # us exactly where to resume draining the pool.
         handle = StreamingDBSCAN.restore(
-            args.checkpoint, wal=args.wal,
+            args.checkpoint, wal=args.wal, window=args.window,
             checkpoint_every=args.checkpoint_every)
         boot = handle.snapshot()
         t_boot = time.perf_counter() - t0
@@ -117,8 +126,8 @@ def main(argv=None):
         # handles at other eps/min_pts over the same points reuse it. The
         # handle's own bootstrap clustering doubles as the t0 snapshot.
         handle = dispatch.stream_handle(
-            initial, args.eps, args.min_pts, wal=args.wal,
-            checkpoint_path=args.checkpoint,
+            initial, args.eps, args.min_pts, window=args.window,
+            wal=args.wal, checkpoint_path=args.checkpoint,
             checkpoint_every=args.checkpoint_every)
         boot = handle.snapshot()
         t_boot = time.perf_counter() - t0
@@ -193,7 +202,10 @@ def main(argv=None):
         "steps": args.steps, "batch": B,
         "n_points": handle.n_points, "n_inserted": n_ins, "n_queried": n_q,
         "n_dropped": n_dropped, "n_rejected": n_rejected,
+        "n_active": handle.n_active, "n_tombstoned": handle.n_tombstoned,
         "n_merges": handle.n_merges,
+        "n_compactions": handle.n_compactions,
+        "n_deletes": handle.n_deletes,
         "repair_sweeps": handle.n_repair_sweeps,
         "insert_p50_ms": _pct(insert_times, 50) * 1e3,
         "insert_p99_ms": _pct(insert_times, 99) * 1e3,
@@ -204,8 +216,10 @@ def main(argv=None):
         "snapshot_s": t_snap, "n_clusters": snap.n_clusters,
     }
     print(f"[serve] {args.dataset}: served {args.steps} micro-batches "
-          f"(B={B}) -> n={stats['n_points']} pts, "
+          f"(B={B}) -> {stats['n_active']} active pts "
+          f"(+{stats['n_tombstoned']} tombstoned), "
           f"{stats['n_clusters']} clusters, {stats['n_merges']} merges, "
+          f"{stats['n_compactions']} compactions, "
           f"{n_dropped} dropped, {n_rejected} rejected")
     print(f"[serve] insert: p50 {stats['insert_p50_ms']:.1f}ms "
           f"p99 {stats['insert_p99_ms']:.1f}ms "

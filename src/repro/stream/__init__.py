@@ -1,5 +1,6 @@
-"""Streaming DBSCAN subsystem: two-level LBVH index, online inserts,
-batched cluster queries, snapshots (DESIGN.md §7), and crash safety —
+"""Streaming DBSCAN subsystem: tiered LSM index of LBVHs, online inserts
+and deletes (tombstones + demotion repair), sliding windows, batched
+cluster queries, snapshots (DESIGN.md §7, §11), and crash safety —
 atomic checkpoints + a write-ahead log with replay recovery
 (DESIGN.md §10, ``repro.stream.durability``).
 
@@ -9,7 +10,8 @@ eps-independent batch index. ``StreamingDBSCAN.restore`` rebuilds a
 handle from a checkpoint + WAL after a crash.
 """
 from . import durability
-from .index import StreamingDBSCAN, QueryResult, MERGE_RATIO, MERGE_MIN
+from .index import (StreamingDBSCAN, QueryResult, MERGE_RATIO, MERGE_MIN,
+                    BUFFER_MAX, GROWTH)
 
 __all__ = ["StreamingDBSCAN", "QueryResult", "MERGE_RATIO", "MERGE_MIN",
-           "durability"]
+           "BUFFER_MAX", "GROWTH", "durability"]

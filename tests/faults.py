@@ -3,27 +3,31 @@
 Two halves:
 
   * **Child driver** (``python tests/faults.py --workdir D --crash-point P
-    --crash-at K ...``): runs a deterministic insert stream against a
+    --crash-at K ...``): runs a deterministic **op schedule** — inserts
+    interleaved with deletes and insert-order expiry — against a
     ``StreamingDBSCAN`` handle with a WAL + auto-checkpoints, arming one
     named crash point (``repro.stream.durability.FAULT_POINTS``).  The
     armed barrier terminates the process with ``os._exit(137)`` — the
     in-process equivalent of ``kill -9``: no cleanup, no flushing, no
-    atexit.  After every *acknowledged* insert (i.e. ``insert`` returned)
-    the driver appends the new watermark to ``D/acks.txt`` with fsync, so
-    the parent knows exactly which batches the client was told are
-    durable.
+    atexit.  After every *acknowledged* op (the call returned) the driver
+    appends ``op_idx n_points n_active`` to ``D/acks.txt`` with fsync, so
+    the parent knows exactly which ops the client was told are durable.
 
   * **Parent helpers** (imported by tests/test_faults.py): spawn the
     child, then recover from ``D`` and assert the durability contract —
-    the recovered point count sits on a batch boundary (no half-applied
-    batch), covers every acknowledged watermark (no lost acknowledged
-    batch), and ``snapshot()`` is component-identical to batch ``dbscan``
-    on exactly the recovered prefix.  Recovery must never raise on a
+    the recovered ``(n_points, active-gid set)`` matches the state after
+    some *op prefix* of the schedule (no op half-applied), that prefix
+    covers every acknowledged op (no acknowledged op lost), and
+    ``snapshot()`` is component-identical to batch ``dbscan`` on exactly
+    the surviving points of that prefix.  Recovery must never raise on a
     torn/corrupt WAL tail.
 
-The stream itself is deterministic (dataset, seed, and batch split are
-part of the config and regenerated identically on both sides), so every
-kill point is reproducible bit-for-bit.
+The schedule is deterministic (dataset, seed, batch split, delete gid
+choices, and expire watermarks are all derived from the config and
+regenerated identically on both sides), so every kill point is
+reproducible bit-for-bit.  A small ``buffer_max`` forces tier seals and
+cascade merges mid-schedule, putting real tiered-compaction work behind
+the ``mid-compaction`` barrier.
 """
 from __future__ import annotations
 
@@ -44,8 +48,15 @@ CONFIG = {
     "eps": 0.05,
     "min_pts": 6,
     "batches": 6,
-    "merge_every": 2,        # force a merge (and auto-checkpoint) every 2
-    "checkpoint_every": 1,   # ... inserts, so every barrier is exercised
+    "merge_every": 3,        # force a merge (and auto-checkpoint) every 3
+    "checkpoint_every": 1,   # ... inserts, so every barrier is exercised.
+                             # 3, not 2: with buffer_max=48 every *even*
+                             # insert already compacts the buffer into a
+                             # single clean tier, which makes merge() a
+                             # no-op — merging after odd inserts keeps
+                             # both merge and compaction barriers live
+    "buffer_max": 48,        # < 2 batches: tier seals and cascade merges
+                             # fire organically mid-schedule
 }
 
 CRASH_EXIT = 137
@@ -56,6 +67,51 @@ def stream_points(cfg=CONFIG):
     from repro.data import pointclouds
     pts = pointclouds.load(cfg["dataset"], cfg["n"], seed=cfg["seed"])
     return pts, np.array_split(np.arange(cfg["n"]), cfg["batches"])
+
+
+def op_schedule(cfg=CONFIG):
+    """The deterministic op list both sides regenerate identically.
+
+    Inserts carry the batch's index array; deletes carry the exact gid
+    array (chosen by a seeded rng from the survivors at that point of the
+    schedule); expire carries the watermark.  Deletes land after batches
+    2 and 5 and the expiry after batch 4, so kills at the delete barriers
+    always have a checkpoint behind them and WAL records in front.
+    """
+    _, batches = stream_points(cfg)
+    rng = np.random.default_rng(cfg["seed"] + 1)
+    ops, n, alive = [], 0, set()
+    for i, b in enumerate(batches):
+        ops.append(("insert", b))
+        alive |= set(range(n, n + len(b)))
+        n += len(b)
+        if i in (1, 4):
+            srt = np.array(sorted(alive))
+            gids = np.sort(rng.choice(srt, size=12, replace=False))
+            ops.append(("delete", gids))
+            alive -= set(int(g) for g in gids)
+        elif i == 3:
+            wm = int(len(batches[0]))             # expire the first batch
+            ops.append(("expire", wm))
+            alive -= set(range(wm))
+    return ops
+
+
+def expected_states(cfg=CONFIG):
+    """``(n_points, frozenset(active gids))`` after each op prefix;
+    index 0 is the empty pre-stream state."""
+    states = [(0, frozenset())]
+    n, alive = 0, set()
+    for kind, arg in op_schedule(cfg):
+        if kind == "insert":
+            alive |= set(range(n, n + len(arg)))
+            n += len(arg)
+        elif kind == "delete":
+            alive -= set(int(g) for g in arg)
+        else:
+            alive -= set(range(arg))
+        states.append((n, frozenset(alive)))
+    return states
 
 
 def paths(workdir):
@@ -87,41 +143,60 @@ def run_child(workdir, crash_point=None, crash_at=1, cfg=CONFIG,
 
 
 def read_acks(workdir):
-    """Acknowledged watermarks (handle.n_points after each acked insert)."""
+    """Acknowledged ops: list of (op_idx, n_points, n_active) tuples."""
     _, _, ack_path = paths(workdir)
     if not os.path.exists(ack_path):
         return []
+    out = []
     with open(ack_path) as f:
-        return [int(line) for line in f.read().split()]
+        for line in f:
+            i, np_, na = line.split()
+            out.append((int(i), int(np_), int(na)))
+    return out
+
+
+def _match_prefix(h, cfg):
+    """The op-prefix index whose expected state equals the handle's."""
+    states = expected_states(cfg)
+    got = (h.n_points, frozenset(int(g) for g in h.active_gids))
+    for k, s in enumerate(states):
+        if s == got:
+            return k
+    raise AssertionError(
+        f"recovered state (n_points={got[0]}, n_active={len(got[1])}) "
+        f"matches no op prefix of the schedule — an op was half-applied "
+        f"or the active set drifted")
 
 
 def recover_and_check(workdir, cfg=CONFIG):
     """Recover from ``workdir`` and assert the full durability contract.
 
-    Returns the recovered handle (still live: the caller can insert the
-    rest of the stream into it and re-verify).
+    Returns the recovered handle (still live: the caller can run the rest
+    of the schedule into it and re-verify, see :func:`finish_stream`).
     """
     from repro.core import dispatch
     from repro.core.validate import check_component_identical
     from repro.stream import StreamingDBSCAN
 
     ckpt, wal, _ = paths(workdir)
-    pts, batches = stream_points(cfg)
-    boundaries = np.cumsum([0] + [len(b) for b in batches])
+    pts, _ = stream_points(cfg)
     acked = read_acks(workdir)
 
     h = StreamingDBSCAN.restore(ckpt, wal=wal,
                                 checkpoint_every=cfg["checkpoint_every"])
-    n_rec = h.n_points
-    assert n_rec in boundaries, (
-        f"recovered {n_rec} points — not a batch boundary {boundaries}: "
-        "a batch was half-applied")
-    assert n_rec >= (max(acked) if acked else 0), (
-        f"recovered {n_rec} points but {max(acked)} were acknowledged "
-        "as durable: an acknowledged batch was lost")
-    if n_rec:
+    k = _match_prefix(h, cfg)
+    n_acked = len(acked)
+    assert k >= n_acked, (
+        f"recovered only the first {k} ops but {n_acked} were acknowledged "
+        "as durable: an acknowledged op was lost")
+    states = expected_states(cfg)
+    for i, np_, na in acked:            # acks themselves must be coherent
+        exp_np, exp_alive = states[i + 1]
+        assert (np_, na) == (exp_np, len(exp_alive))
+    if h.n_active:
+        alive = np.asarray(sorted(int(g) for g in h.active_gids))
         snap = h.snapshot()
-        ref = dispatch.dbscan(pts[:n_rec], cfg["eps"], cfg["min_pts"],
+        ref = dispatch.dbscan(pts[alive], cfg["eps"], cfg["min_pts"],
                               algorithm="fdbscan")
         check_component_identical(snap.labels, snap.core_mask,
                                   ref.labels, ref.core_mask)
@@ -129,18 +204,27 @@ def recover_and_check(workdir, cfg=CONFIG):
 
 
 def finish_stream(h, cfg=CONFIG):
-    """Insert whatever the crash cut off and verify final equivalence."""
+    """Run whatever the crash cut off and verify final equivalence on the
+    final surviving set."""
     from repro.core import dispatch
     from repro.core.validate import check_component_identical
 
-    pts, batches = stream_points(cfg)
-    boundaries = np.cumsum([0] + [len(b) for b in batches])
-    k = int(np.searchsorted(boundaries, h.n_points))
-    for b in batches[k:]:
-        h.insert(pts[b])
+    pts, _ = stream_points(cfg)
+    ops = op_schedule(cfg)
+    k = _match_prefix(h, cfg)
+    for kind, arg in ops[k:]:
+        if kind == "insert":
+            h.insert(pts[arg])
+        elif kind == "delete":
+            h.delete(arg)
+        else:
+            h.expire(arg)
     assert h.n_points == cfg["n"]
+    _, final_alive = expected_states(cfg)[-1]
+    assert frozenset(int(g) for g in h.active_gids) == final_alive
+    alive = np.asarray(sorted(final_alive))
     snap = h.snapshot()
-    ref = dispatch.dbscan(pts, cfg["eps"], cfg["min_pts"],
+    ref = dispatch.dbscan(pts[alive], cfg["eps"], cfg["min_pts"],
                           algorithm="fdbscan")
     check_component_identical(snap.labels, snap.core_mask,
                               ref.labels, ref.core_mask)
@@ -167,6 +251,7 @@ def _child_main(argv=None):
     ap.add_argument("--merge-every", type=int, default=CONFIG["merge_every"])
     ap.add_argument("--checkpoint-every", type=int,
                     default=CONFIG["checkpoint_every"])
+    ap.add_argument("--buffer-max", type=int, default=CONFIG["buffer_max"])
     args = ap.parse_args(argv)
 
     from repro.stream import StreamingDBSCAN, durability
@@ -174,24 +259,35 @@ def _child_main(argv=None):
     cfg = {"dataset": args.dataset, "n": args.n, "seed": args.seed,
            "eps": args.eps, "min_pts": args.min_pts,
            "batches": args.batches, "merge_every": args.merge_every,
-           "checkpoint_every": args.checkpoint_every}
-    pts, batches = stream_points(cfg)
+           "checkpoint_every": args.checkpoint_every,
+           "buffer_max": args.buffer_max}
+    pts, _ = stream_points(cfg)
     ckpt, wal, ack_path = paths(args.workdir)
 
     h = StreamingDBSCAN(None, args.eps, args.min_pts, wal=wal,
                         checkpoint_path=ckpt,
-                        checkpoint_every=args.checkpoint_every)
+                        checkpoint_every=args.checkpoint_every,
+                        buffer_max=args.buffer_max)
     durability.arm_fault(args.crash_point, at=args.crash_at)
     ack_f = open(ack_path, "a")
-    for i, b in enumerate(batches):
-        h.insert(pts[b])            # may os._exit(137) at an armed barrier
-        ack_f.write(f"{h.n_points}\n")
+    n_inserts = 0
+    for i, (kind, arg) in enumerate(op_schedule(cfg)):
+        if kind == "insert":                # each may os._exit(137) at an
+            h.insert(pts[arg])              # armed barrier
+            n_inserts += 1
+        elif kind == "delete":
+            h.delete(arg)
+        else:
+            h.expire(arg)
+        ack_f.write(f"{i} {h.n_points} {h.n_active}\n")
         ack_f.flush()
         os.fsync(ack_f.fileno())
-        if args.merge_every and (i + 1) % args.merge_every == 0:
+        if (kind == "insert" and args.merge_every
+                and n_inserts % args.merge_every == 0):
             h.merge()               # forces the merge/checkpoint barriers
     durability.arm_fault(None)
-    print(f"child done: n={h.n_points} merges={h.n_merges}")
+    print(f"child done: n={h.n_points} active={h.n_active} "
+          f"merges={h.n_merges} compactions={h.n_compactions}")
     return 0
 
 

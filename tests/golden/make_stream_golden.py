@@ -1,14 +1,19 @@
-"""Regenerate the golden durability fixtures (format v1).
+"""Regenerate the golden durability fixtures (current format: v2).
 
-Writes ``stream_ckpt_v1.npz`` (a version-1 checkpoint at watermark 80)
-and ``stream_wal_v1.bin`` (a WAL holding two 10-point insert records past
-that watermark) from a deterministic point stream. The fixtures pin the
-**on-disk format**: `tests/test_durability.py` restores them and asserts
-the re-serialized checkpoint is byte-for-byte identical, so any change to
-the npz layout, manifest fields, or WAL framing that silently breaks old
-files fails loudly. Bump ``CHECKPOINT_VERSION``/``_WAL_VERSION`` and
-regenerate (``PYTHONPATH=src python tests/golden/make_stream_golden.py``)
-only with an explicit migration story.
+Writes ``stream_ckpt_v2.npz`` (a version-2 checkpoint at watermark 80
+with a tombstone mask) and ``stream_wal_v2.bin`` (a WAL holding insert,
+delete, and expire records past that watermark) from a deterministic
+point stream. The fixtures pin the **on-disk format**:
+`tests/test_durability.py` restores them and asserts the re-serialized
+checkpoint is byte-for-byte identical, so any change to the npz layout,
+manifest fields, or WAL framing that silently breaks old files fails
+loudly. Bump ``CHECKPOINT_VERSION``/``WAL_VERSION`` and regenerate
+(``PYTHONPATH=src python tests/golden/make_stream_golden.py``) only with
+an explicit migration story.
+
+The version-1 fixtures (``stream_ckpt_v1.npz``, ``stream_wal_v1.bin``)
+are *frozen* — they were written by the version-1 code and pin backward
+readability; this script never touches them.
 """
 import os
 import sys
@@ -21,15 +26,19 @@ from repro.data import pointclouds           # noqa: E402
 from repro.stream import StreamingDBSCAN     # noqa: E402
 
 HERE = os.path.dirname(os.path.abspath(__file__))
-CKPT = os.path.join(HERE, "stream_ckpt_v1.npz")
-WAL = os.path.join(HERE, "stream_wal_v1.bin")
+CKPT = os.path.join(HERE, "stream_ckpt_v2.npz")
+WAL = os.path.join(HERE, "stream_wal_v2.bin")
 
 EPS, MIN_PTS = 0.05, 6
-N_CKPT, N_WAL_BATCHES, BATCH = 80, 2, 10
+N_CKPT, BATCH = 80, 10
+# deterministic post-checkpoint tail: insert 10, delete 4 fixed gids,
+# expire everything below 8, insert 10 more
+DELETE_GIDS = (5, 17, 33, 85)
+EXPIRE_WM = 8
 
 
 def stream():
-    return pointclouds.blobs(N_CKPT + N_WAL_BATCHES * BATCH, k=3, seed=7)
+    return pointclouds.blobs(N_CKPT + 2 * BATCH, k=3, seed=7)
 
 
 def main():
@@ -38,16 +47,17 @@ def main():
         if os.path.exists(p):
             os.remove(p)
     # bootstrap + attach both files: __init__ writes the watermark-80
-    # checkpoint, the two inserts append WAL records past it
+    # checkpoint, then the tail appends one record per operation
     h = StreamingDBSCAN(pts[:N_CKPT], EPS, MIN_PTS,
                         wal=WAL, checkpoint_path=CKPT)
-    for b in range(N_WAL_BATCHES):
-        lo = N_CKPT + b * BATCH
-        h.insert(pts[lo:lo + BATCH])
+    h.insert(pts[N_CKPT:N_CKPT + BATCH])
+    h.delete(np.array(DELETE_GIDS))
+    h.expire(EXPIRE_WM)
+    h.insert(pts[N_CKPT + BATCH:N_CKPT + 2 * BATCH])
     h._wal.close()
     print(f"wrote {CKPT} ({os.path.getsize(CKPT)} bytes, watermark "
           f"{N_CKPT}) and {WAL} ({os.path.getsize(WAL)} bytes, "
-          f"{N_WAL_BATCHES} records)")
+          f"4 records: insert/delete/expire/insert)")
 
 
 if __name__ == "__main__":

@@ -4,11 +4,14 @@ Two halves of the robustness contract that need no subprocess kills
 (those live in test_faults.py):
 
 * **Format stability** — the golden fixtures under ``tests/golden/``
-  (``stream_ckpt_v1.npz``, ``stream_wal_v1.bin``) pin the on-disk layout:
-  a current build must read them, and re-serializing the restored state
-  must reproduce the checkpoint *byte for byte*.  Damaged or
-  future-versioned files must be rejected loudly (CheckpointError /
-  WALError), never silently restored.
+  pin the on-disk layout.  The current-format pair
+  (``stream_ckpt_v2.npz``, ``stream_wal_v2.bin`` — tombstone mask, typed
+  insert/delete/expire WAL records) must restore *and* re-serialize byte
+  for byte; the frozen version-1 pair (``stream_ckpt_v1.npz``,
+  ``stream_wal_v1.bin``) must still load and replay (migration
+  readability), though re-serializing it upgrades to the current
+  version.  Damaged or future-versioned files must be rejected loudly
+  (CheckpointError / WALError), never silently restored.
 
 * **Input hardening** — every public surface (``dispatch.plan/dbscan``,
   ``StreamingDBSCAN.insert/query``, ``neighbors.*``) routes through
@@ -31,10 +34,14 @@ from repro.stream import StreamingDBSCAN, durability
 GOLDEN = os.path.join(os.path.dirname(__file__), "golden")
 GOLDEN_CKPT = os.path.join(GOLDEN, "stream_ckpt_v1.npz")
 GOLDEN_WAL = os.path.join(GOLDEN, "stream_wal_v1.bin")
+GOLDEN_CKPT_V2 = os.path.join(GOLDEN, "stream_ckpt_v2.npz")
+GOLDEN_WAL_V2 = os.path.join(GOLDEN, "stream_wal_v2.bin")
 
 # must mirror tests/golden/make_stream_golden.py
 G_EPS, G_MIN_PTS = 0.05, 6
 G_N_CKPT, G_N_TOTAL = 80, 100
+G2_DELETE_GIDS = (5, 17, 33, 85)
+G2_EXPIRE_WM = 8
 
 
 def golden_stream():
@@ -51,9 +58,11 @@ def test_checkpoint_restore_roundtrip(tmp_path):
     ck = str(tmp_path / "ck.npz")
     h = StreamingDBSCAN(pts[:150], 0.05, 6)
     h.insert(pts[150:])
+    h.delete(np.arange(40, 60))      # tombstones roundtrip too
     h.checkpoint(ck)
     r = StreamingDBSCAN.restore(ck)
-    assert r.n_points == h.n_points and r.n_main == h.n_main
+    assert r.n_points == h.n_points and r.n_active == h.n_active
+    assert (r.active_gids == h.active_gids).all()
     assert (r.points == h.points).all()
     a, b = h.snapshot(), r.snapshot()
     assert (np.asarray(a.labels) == np.asarray(b.labels)).all()
@@ -82,20 +91,24 @@ def test_restore_nothing_to_recover(tmp_path):
 
 
 # --------------------------------------------------------------------- #
-# golden fixtures: the v1 on-disk format is stable                      #
+# golden fixtures: v2 is stable byte-for-byte, v1 stays readable        #
 # --------------------------------------------------------------------- #
 
-def test_golden_checkpoint_restores_byte_for_byte(tmp_path):
+def test_golden_v1_checkpoint_still_loads(tmp_path):
+    """Version-1 checkpoints (no tombstone array) predate deletes; they
+    must restore with an all-alive tombstone mask, and re-serializing
+    upgrades them to the current format (which must then roundtrip)."""
     h = StreamingDBSCAN.restore(GOLDEN_CKPT)
-    assert h.n_points == G_N_CKPT
+    assert h.n_points == G_N_CKPT and h.n_active == G_N_CKPT
+    assert h.n_tombstoned == 0
     assert h.eps == G_EPS and h.min_pts == G_MIN_PTS
-    out = str(tmp_path / "rewrite.npz")
+    out = str(tmp_path / "upgraded.npz")
     h.checkpoint(out)
-    golden = open(GOLDEN_CKPT, "rb").read()
-    assert open(out, "rb").read() == golden, (
-        "re-serializing a restored v1 checkpoint changed its bytes — the "
-        "on-disk format drifted; bump CHECKPOINT_VERSION and regenerate "
-        "the fixture (tests/golden/make_stream_golden.py)")
+    state = durability.load_checkpoint(out)
+    assert state["manifest"]["version"] == durability.CHECKPOINT_VERSION
+    r = StreamingDBSCAN.restore(out)
+    a, b = h.snapshot(), r.snapshot()
+    assert (np.asarray(a.labels) == np.asarray(b.labels)).all()
 
 
 def test_golden_wal_replays_past_watermark():
@@ -111,12 +124,60 @@ def test_golden_wal_replays_past_watermark():
 
 @pytest.mark.fast
 def test_golden_wal_scan_shape():
-    header, records, valid_end = durability.scan_wal(GOLDEN_WAL)
+    header, ops, valid_end = durability.scan_wal(GOLDEN_WAL)
     assert header == {"version": 1, "d": 2, "eps": G_EPS,
                       "min_pts": G_MIN_PTS}
-    assert [r[0] for r in records] == [80, 90]
-    assert all(r[1].shape == (10, 2) for r in records)
+    assert [op[0] for op in ops] == ["insert", "insert"]
+    assert [op[1] for op in ops] == [80, 90]
+    assert all(op[2].shape == (10, 2) for op in ops)
     assert valid_end == os.path.getsize(GOLDEN_WAL)
+
+
+def test_golden_v2_checkpoint_restores_byte_for_byte(tmp_path):
+    h = StreamingDBSCAN.restore(GOLDEN_CKPT_V2)
+    assert h.n_points == G_N_CKPT
+    assert h.eps == G_EPS and h.min_pts == G_MIN_PTS
+    out = str(tmp_path / "rewrite.npz")
+    h.checkpoint(out)
+    golden = open(GOLDEN_CKPT_V2, "rb").read()
+    assert open(out, "rb").read() == golden, (
+        "re-serializing a restored v2 checkpoint changed its bytes — the "
+        "on-disk format drifted; bump CHECKPOINT_VERSION and regenerate "
+        "the fixture (tests/golden/make_stream_golden.py)")
+
+
+@pytest.mark.fast
+def test_golden_v2_wal_scan_shape():
+    """Pins the typed-record framing: insert/delete/expire tags, their
+    argument fields, and payload shapes."""
+    header, ops, valid_end = durability.scan_wal(GOLDEN_WAL_V2)
+    assert header == {"version": 2, "d": 2, "eps": G_EPS,
+                      "min_pts": G_MIN_PTS}
+    assert [op[0] for op in ops] == ["insert", "delete", "expire",
+                                    "insert"]
+    assert ops[0][1] == 80 and ops[0][2].shape == (10, 2)
+    assert ops[1][1] == 90                       # n_points at delete time
+    assert ops[1][2].dtype == np.int64
+    assert list(ops[1][2]) == list(G2_DELETE_GIDS)
+    assert ops[2][1] == G2_EXPIRE_WM and ops[2][2] is None
+    assert ops[3][1] == 90 and ops[3][2].shape == (10, 2)
+    assert valid_end == os.path.getsize(GOLDEN_WAL_V2)
+
+
+def test_golden_v2_wal_replays_deletes_and_expiry():
+    """Checkpoint + v2 WAL replay must reproduce the exact surviving set
+    and a snapshot component-identical to batch dbscan on it."""
+    h = StreamingDBSCAN.restore(GOLDEN_CKPT_V2, wal=GOLDEN_WAL_V2)
+    pts = golden_stream()
+    assert h.n_points == G_N_TOTAL
+    dead = set(G2_DELETE_GIDS) | set(range(G2_EXPIRE_WM))
+    alive = np.array([g for g in range(G_N_TOTAL) if g not in dead])
+    assert (h.active_gids == alive).all()
+    ref = dispatch.dbscan(pts[alive], G_EPS, G_MIN_PTS,
+                          algorithm="fdbscan")
+    snap = h.snapshot()
+    check_component_identical(snap.labels, snap.core_mask,
+                              ref.labels, ref.core_mask)
 
 
 # --------------------------------------------------------------------- #
@@ -216,8 +277,81 @@ def test_wal_truncates_torn_tail_and_appends(tmp_path):
     w.append(np.full((2, 2), 2, np.float32), 7)
     w.close()
     _, records, valid_end = durability.scan_wal(p)
-    assert [r[0] for r in records] == [0, 3, 7]
+    assert [r[1] for r in records] == [0, 3, 7]
     assert valid_end == os.path.getsize(p)
+
+
+@pytest.mark.fast
+def test_wal_delete_expire_roundtrip(tmp_path):
+    """Typed v2 records survive a close/scan cycle with exact payloads."""
+    p = str(tmp_path / "typed.wal")
+    w = durability.WriteAheadLog(p, eps=0.1, min_pts=4)
+    w.append(np.zeros((6, 2), np.float32), 0)
+    w.append_delete(np.array([1, 4], np.int64), 6, d=2)
+    w.append_expire(3, d=2)
+    w.close()
+    header, ops, valid_end = durability.scan_wal(p)
+    assert header["version"] == durability.WAL_VERSION
+    assert [op[0] for op in ops] == ["insert", "delete", "expire"]
+    assert list(ops[1][2]) == [1, 4] and ops[1][1] == 6
+    assert ops[2][1] == 3 and ops[2][2] is None
+    assert valid_end == os.path.getsize(p)
+
+
+@pytest.mark.fast
+def test_wal_truncates_torn_delete_record(tmp_path):
+    """A torn delete payload must be dropped on scan like a torn insert."""
+    p = str(tmp_path / "torn_del.wal")
+    w = durability.WriteAheadLog(p, eps=0.1, min_pts=4)
+    w.append(np.zeros((3, 2), np.float32), 0)
+    w.append_delete(np.array([0, 2], np.int64), 3, d=2)
+    w.close()
+    size = os.path.getsize(p)
+    with open(p, "r+b") as f:                # tear off half the payload
+        f.truncate(size - 8)
+    _, ops, valid_end = durability.scan_wal(p)
+    assert [op[0] for op in ops] == ["insert"]
+    assert valid_end < os.path.getsize(p)
+    # reopening for append truncates to the valid prefix and extends
+    w = durability.WriteAheadLog(p, eps=0.1, min_pts=4)
+    w.append_expire(1, d=2)
+    w.close()
+    _, ops, valid_end = durability.scan_wal(p)
+    assert [op[0] for op in ops] == ["insert", "expire"]
+    assert valid_end == os.path.getsize(p)
+
+
+@pytest.mark.fast
+def test_v1_wal_refuses_delete_append_until_reset(tmp_path):
+    """Appending typed records to a frozen v1 log would make it unreadable
+    to v1 code without any version bump — refuse, and let checkpoint's
+    reset() upgrade the header instead."""
+    import shutil
+    p = str(tmp_path / "old.wal")
+    shutil.copy(GOLDEN_WAL, p)
+    w = durability.WriteAheadLog(p, eps=G_EPS, min_pts=G_MIN_PTS)
+    with pytest.raises(durability.WALError, match="version-1"):
+        w.append_delete(np.array([0], np.int64), 100, d=2)
+    with pytest.raises(durability.WALError, match="version-1"):
+        w.append_expire(5, d=2)
+    w.reset()                                # checkpoint truncation path
+    w.append_delete(np.array([0], np.int64), 100, d=2)
+    w.close()
+    header, ops, _ = durability.scan_wal(p)
+    assert header["version"] == durability.WAL_VERSION
+    assert [op[0] for op in ops] == ["delete"]
+
+
+@pytest.mark.fast
+def test_wal_rejects_future_version(tmp_path):
+    p = str(tmp_path / "future.wal")
+    import shutil
+    shutil.copy(GOLDEN_WAL_V2, p)
+    with open(p, "r+b") as f:                # bump the header version
+        f.seek(4)
+        f.write((durability.WAL_VERSION + 9).to_bytes(2, "little"))
+    with pytest.raises(durability.WALError, match="version"):
+        durability.scan_wal(p)
 
 
 @pytest.mark.fast
@@ -263,7 +397,7 @@ def test_side_checkpoint_keeps_wal(tmp_path):
     h.insert(pts[80:])              # WAL holds the un-checkpointed tail
     h.checkpoint(side)              # ad-hoc side copy: WAL untouched
     _, records, _ = durability.scan_wal(wl)
-    assert [r[0] for r in records] == [80]
+    assert [r[1] for r in records] == [80]
     r = StreamingDBSCAN.restore(ck, wal=wl)
     assert r.n_points == 120
     h.checkpoint()                  # configured path: *now* it truncates

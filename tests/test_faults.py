@@ -4,21 +4,23 @@ Each test spawns the deterministic child driver (tests/faults.py), which
 arms exactly one crash point (``durability.FAULT_POINTS``) and dies there
 with ``os._exit(137)`` — no cleanup, no flushing: the in-process stand-in
 for ``kill -9``.  The parent then recovers from the checkpoint + WAL left
-behind and asserts the durability contract (DESIGN.md §10):
+behind and asserts the durability contract (DESIGN.md §10, §11):
 
   * recovery never raises on a torn or corrupt WAL tail;
-  * the recovered point count sits on an insert-batch boundary — a batch
-    is never half-applied;
-  * every *acknowledged* batch (``insert`` returned before the kill) is
+  * the recovered ``(n_points, active-gid set)`` equals the state after
+    some *op prefix* of the schedule — an insert, delete, or expiry is
+    never half-applied;
+  * every *acknowledged* op (the call returned before the kill) is
     present — acknowledged-durable data is never lost;
   * ``snapshot()`` of the recovered handle is component-identical to
-    batch ``dbscan`` on exactly the recovered prefix, and stays so after
-    the rest of the stream is inserted into the recovered handle.
+    batch ``dbscan`` on exactly the surviving points of that prefix, and
+    stays so after the rest of the schedule runs in the recovered handle.
 
-The child's schedule (6 batches of 40, a forced merge every 2 inserts,
-auto-checkpoint on every merge) drives every barrier: merges fire at
-batches 2 and 4, checkpoints right after each merge, and the WAL holds
-the not-yet-checkpointed suffix in between.
+The child's schedule (6 insert batches of 40 with deletes after batches
+2 and 5 and an expiry after batch 4; a forced merge every 3 inserts;
+auto-checkpoint on every merge; buffer_max=48 so tier seals and cascade
+merges fire mid-schedule) drives every barrier: insert, delete/expire
+WAL appends, merges, checkpoints, and tiered compaction.
 """
 import numpy as np
 import pytest
@@ -41,6 +43,16 @@ KILL_MATRIX = [
     ("mid-checkpoint", 1),   # first checkpoint torn: WAL-only recovery
     ("mid-checkpoint", 2),   # later checkpoint torn: previous one + WAL
     ("mid-wal-append", 3),   # torn record on disk: truncated, not applied
+    ("pre-delete", 1),       # first delete never durable: survivors keep
+                             # the doomed gids until the schedule reruns
+    ("wal-durable-delete", 1),   # delete durable but unapplied: replay
+                                 # tombstones + repairs demotions
+    ("wal-durable-delete", 2),   # the *expiry* record (2nd typed append):
+                                 # window semantics survive the kill
+    ("mid-compaction", 1),   # cascade tier-merge in flight (insert 5,
+                             # checkpoint behind, WAL records in front):
+                             # tiers are rebuilt in memory only, the
+                             # durable state is undamaged
 ]
 
 
@@ -57,13 +69,18 @@ def test_kill_and_recover(tmp_path, point, at):
 
 def test_clean_run_then_restore(tmp_path):
     """No crash at all: restore of the final durable state is the whole
-    stream, and the acks file covers every batch."""
+    schedule, and the acks file covers every op."""
     proc = faults.run_child(tmp_path, crash_point=None)
     assert proc.returncode == 0, proc.stderr
+    ops = faults.op_schedule()
     acks = faults.read_acks(tmp_path)
-    assert acks[-1] == CONFIG["n"] and len(acks) == CONFIG["batches"]
+    assert len(acks) == len(ops)
+    assert acks[-1][1] == CONFIG["n"]
+    n_final, alive_final = faults.expected_states()[-1]
+    assert acks[-1][2] == len(alive_final)
     h = faults.recover_and_check(tmp_path)
     assert h.n_points == CONFIG["n"]
+    assert frozenset(int(g) for g in h.active_gids) == alive_final
 
 
 @pytest.mark.parametrize("tail", [
@@ -74,14 +91,15 @@ def test_clean_run_then_restore(tmp_path):
 def test_torn_final_record(tmp_path, tail):
     """A crash mid-append leaves a partial final record: recovery must
     truncate it silently and keep everything acknowledged before it."""
-    # die right before batch 6: batches 1-5 acked, WAL holds batch 5
+    # die right before batch 6: all earlier ops acked, WAL holds the
+    # un-checkpointed suffix (insert 5 + the expiry)
     proc = faults.run_child(tmp_path, crash_point="pre-insert", crash_at=6)
     assert proc.returncode == CRASH_EXIT, proc.stderr
     _, wal, _ = faults.paths(tmp_path)
     with open(wal, "ab") as f:
         f.write(tail)
     h = faults.recover_and_check(tmp_path)
-    assert h.n_points == max(faults.read_acks(tmp_path))
+    assert h.n_points == max(a[1] for a in faults.read_acks(tmp_path))
     faults.finish_stream(h)
 
 
@@ -91,12 +109,19 @@ def test_recovered_handle_is_durable_again(tmp_path):
     proc = faults.run_child(tmp_path, crash_point="wal-durable", crash_at=2)
     assert proc.returncode == CRASH_EXIT, proc.stderr
     h = faults.recover_and_check(tmp_path)
-    pts, batches = faults.stream_points()
-    boundaries = np.cumsum([0] + [len(b) for b in batches])
-    k = int(np.searchsorted(boundaries, h.n_points))
-    h.insert(pts[batches[k]])               # re-attached WAL logs this
+    pts, _ = faults.stream_points()
+    ops = faults.op_schedule()
+    k = faults._match_prefix(h, CONFIG)
+    kind, arg = ops[k]
+    if kind == "insert":                    # re-attached WAL logs this
+        h.insert(pts[arg])
+    elif kind == "delete":
+        h.delete(arg)
+    else:
+        h.expire(arg)
     _, wal, _ = faults.paths(tmp_path)
     with open(wal, "ab") as f:
         f.write(b"\x52\x45\x43\x57 torn again")
     h2 = faults.recover_and_check(tmp_path)
     assert h2.n_points >= h.n_points
+    assert faults._match_prefix(h2, CONFIG) >= k + 1

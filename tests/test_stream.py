@@ -1,6 +1,7 @@
-"""Streaming DBSCAN equivalence: any interleaving of inserts and merges
-must leave ``snapshot()`` component-identical to batch ``dbscan`` on the
-accumulated point set (DESIGN.md §7).
+"""Streaming DBSCAN equivalence: any interleaving of inserts, deletes,
+expiries, merges, and tiered compactions must leave ``snapshot()``
+component-identical to batch ``dbscan`` on exactly the surviving point
+set (DESIGN.md §7, §11).
 
 Component identity is the contract the repo's oracle philosophy defines
 (validate.py): exact core mask, exact noise set, identical partition of
@@ -230,3 +231,191 @@ def test_serve_loop_smoke():
                         "--insert-frac", "0.5", "--validate"])
     assert stats["n_points"] >= 300
     assert stats["n_queried"] > 0
+
+
+# --------------------------------------------------------------------- #
+# fully dynamic: deletes, expiry, sliding windows (DESIGN.md §11)       #
+# --------------------------------------------------------------------- #
+
+def assert_matches_batch_on_survivors(h, all_pts, alive, eps, minpts):
+    """snapshot() over the active set ≡ batch dbscan on exactly the
+    surviving points, in insertion order."""
+    alive = np.asarray(sorted(alive))
+    assert (h.active_gids == alive).all()
+    assert h.n_active == len(alive)
+    surv = all_pts[alive]
+    snap = h.snapshot()
+    ref = dbscan(surv, eps, minpts, algorithm="fdbscan")
+    check_component_identical(snap.labels, snap.core_mask,
+                              ref.labels, ref.core_mask)
+    check_dbscan(surv, eps, minpts, np.asarray(snap.labels),
+                 np.asarray(snap.core_mask))
+
+
+def dynamic_schedule(n, seed):
+    """A randomized interleaving of insert / delete / expire / merge /
+    compact steps over an n-point stream.  Inserts arrive in shuffled
+    micro-batch sizes; delete picks a random subset of the current
+    survivors; expire advances the insert-order watermark."""
+    rng = np.random.default_rng(seed)
+    nb = int(rng.integers(4, 8))
+    cuts = np.sort(rng.choice(np.arange(1, n), size=nb - 1, replace=False))
+    batches = np.split(np.arange(n), cuts)
+    ops = []
+    for b in batches:
+        ops.append(("insert", b))
+        r = rng.random()
+        if r < 0.45:
+            ops.append(("delete", rng))
+        elif r < 0.65:
+            ops.append(("expire", rng))
+        r = rng.random()
+        if r < 0.25:
+            ops.append(("merge", None))
+        elif r < 0.5:
+            ops.append(("compact", None))
+    return ops
+
+
+@pytest.mark.parametrize("dset,n,eps,minpts", SCENARIOS,
+                         ids=[s[0] for s in SCENARIOS])
+def test_randomized_dynamic_interleavings(dset, n, eps, minpts):
+    """The hard contract: after ANY interleaving of inserts, deletes,
+    expiries, merges, and tiered compactions, the snapshot is
+    component-identical to batch dbscan on exactly the survivors.  A
+    small buffer_max forces tier seals and cascade merges inside the
+    schedule, so compaction boundaries are crossed mid-stream."""
+    pts = pointclouds.load(dset, n)
+    for seed in (0, 1):
+        ops = dynamic_schedule(n, seed)
+        first = ops[0][1]
+        h = StreamingDBSCAN(pts[first], eps, minpts,
+                            buffer_max=64, growth=4)
+        alive = set(int(g) for g in range(len(first)))
+        watermark = 0
+        for kind, arg in ops[1:]:
+            if kind == "insert":
+                h.insert(pts[arg])
+                alive |= set(range(h.n_points - len(arg), h.n_points))
+            elif kind == "delete" and alive:
+                srt = sorted(alive)
+                take = arg.choice(len(srt),
+                                  size=max(1, len(srt) // 8),
+                                  replace=False)
+                gids = np.asarray(srt)[take]
+                assert h.delete(gids) == len(gids)
+                alive -= set(int(g) for g in gids)
+            elif kind == "expire":
+                watermark = min(h.n_points,
+                                watermark + int(arg.integers(1, n // 6)))
+                h.expire(watermark)
+                alive -= set(range(watermark))
+            elif kind == "merge":
+                h.merge()
+                assert h.n_delta == 0
+            elif kind == "compact":
+                h.compact()
+        assert_matches_batch_on_survivors(h, pts, alive, eps, minpts)
+
+
+def test_delete_is_idempotent_and_checked():
+    pts = pointclouds.blobs(200, k=3, seed=13)
+    h = StreamingDBSCAN(pts, 0.05, 6)
+    assert h.delete(np.array([5, 9, 5, 9])) == 2   # dups collapse
+    assert h.delete(np.array([5, 9])) == 0         # idempotent
+    assert h.n_active == 198 and h.n_tombstoned == 2
+    with pytest.raises(ValueError):
+        h.delete(np.array([500]))                  # out of range
+    with pytest.raises(ValueError):
+        h.expire(1000)                             # past the watermark
+    assert h.expire(0) == 0                        # no-op watermark
+
+
+@pytest.mark.fast
+def test_delete_bridge_core_splits_cluster():
+    """Demotion hazard #1: deleting a bridge core must split the cluster
+    it merged — min-label propagation alone can never split, so the
+    repair pass has to reset the affected component (DESIGN.md §11)."""
+    eps, minpts = 0.1, 4
+    blob = np.array([[0.0, 0.0], [0.03, 0.0], [-0.03, 0.0], [0.0, 0.03]],
+                    np.float32)
+    left = blob
+    right = blob + np.array([0.18, 0.0], np.float32)
+    bridge = np.array([[0.09, 0.0]], np.float32)
+    pts = np.concatenate([left, right, bridge]).astype(np.float32)
+    h = StreamingDBSCAN(pts, eps, minpts)
+    assert h.snapshot().n_clusters == 1            # bridge joins the blobs
+    h.delete(np.array([len(pts) - 1]))             # kill the bridge core
+    alive = set(range(len(pts) - 1))
+    assert_matches_batch_on_survivors(h, pts, alive, eps, minpts)
+    assert h.snapshot().n_clusters == 2            # the cluster split
+
+
+@pytest.mark.fast
+def test_delete_neighbor_demotes_core_to_noise():
+    """Demotion hazard #2: deleting a *neighbor* of a still-present core
+    drops its count below min_pts; points that were reachable only
+    through it must relabel to noise while unrelated clusters stand."""
+    eps, minpts = 0.1, 4
+    # C at the origin with exactly 3 satellites: count 4 = min_pts, so C
+    # is core and the satellites are its borders (each sees only C+self)
+    fragile = np.array([[0.0, 0.0], [0.08, 0.0], [-0.08, 0.0],
+                        [0.0, 0.08]], np.float32)
+    sturdy = np.array([[1.0, 1.0], [1.03, 1.0], [0.97, 1.0], [1.0, 1.03]],
+                      np.float32)
+    pts = np.concatenate([fragile, sturdy]).astype(np.float32)
+    h = StreamingDBSCAN(pts, eps, minpts)
+    s0 = h.snapshot()
+    assert s0.n_clusters == 2
+    assert np.asarray(s0.core_mask)[0]             # C is core
+    h.delete(np.array([3]))                        # kill one satellite
+    alive = set(range(len(pts))) - {3}
+    assert_matches_batch_on_survivors(h, pts, alive, eps, minpts)
+    s1 = h.snapshot()
+    assert s1.n_clusters == 1                      # only the sturdy blob
+    labels = np.asarray(s1.labels)
+    assert (labels[:3] == -1).all()                # demoted C + ex-borders
+    assert not np.asarray(s1.core_mask)[:3].any()
+
+
+def test_sliding_window_matches_batch():
+    """window=W: every insert auto-expires all but the W most recent
+    points; the handle must track batch dbscan over exactly that tail,
+    including at bootstrap when the seed set already overflows W."""
+    pts = pointclouds.blobs(600, k=4, seed=17)
+    eps, minpts = 0.05, 6
+    h = StreamingDBSCAN(pts[:300], eps, minpts, window=200, buffer_max=64)
+    assert h.n_active == 200                       # bootstrap overflow
+    assert_matches_batch_on_survivors(h, pts, set(range(100, 300)),
+                                      eps, minpts)
+    for lo in range(300, 600, 50):
+        h.insert(pts[lo:lo + 50])
+        assert h.n_active == 200
+    assert_matches_batch_on_survivors(h, pts, set(range(400, 600)),
+                                      eps, minpts)
+    # dispatch plumbs the window through to the handle
+    h2 = dispatch.stream_handle(pts[:300], eps, minpts, window=120)
+    assert h2.window == 120 and h2.n_active == 120
+
+
+@pytest.mark.fast
+def test_counters_and_compaction_stats():
+    pts = pointclouds.blobs(400, k=3, seed=19)
+    h = StreamingDBSCAN(pts[:200], 0.05, 6, buffer_max=64)
+    assert h.n_active == 200 and h.n_tombstoned == 0
+    h.delete(np.arange(10, 40))
+    assert h.n_active == 170 and h.n_tombstoned == 30
+    assert h.n_deletes == 1
+    h.expire(10)
+    assert h.n_active == 160 and h.n_tombstoned == 40
+    h.insert(pts[200:])
+    assert h.n_active == 360 and h.n_points == 400
+    before = h.n_compactions
+    h.compact()
+    assert h.n_compactions >= before
+    # full merge folds everything into one clean tier over the survivors
+    h.merge()
+    assert h.n_tiers == 1 and h.n_delta == 0
+    assert h.n_main == h.n_active == 360
+    alive = set(range(40, 400))
+    assert_matches_batch_on_survivors(h, pts, alive, 0.05, 6)
