@@ -20,7 +20,6 @@ import json
 import os
 import subprocess
 import sys
-import time
 
 # Above this the dense ring's wall clock is minutes on CPU; its eval count
 # stays analytic either way, so larger sizes skip the ring timing only.
@@ -35,7 +34,7 @@ def _inner(sizes, json_out):
     from repro.data import pointclouds
     from repro.distributed.ring_dbscan import ring_dbscan, tree_dbscan_sharded
     from repro.core.validate import same_partition
-    from .common import emit
+    from .common import emit, time_once
 
     ndev = len(jax.devices())
     records = {}
@@ -43,12 +42,12 @@ def _inner(sizes, json_out):
         pts = pointclouds.taxi_2d(n)
         n_pad = ((n + ndev - 1) // ndev) * ndev
 
-        t0 = time.perf_counter()
-        tree_res, st = tree_dbscan_sharded(pts, EPS, MINPTS, with_stats=True)
-        tree_cold = time.perf_counter() - t0
-        t0 = time.perf_counter()
-        tree_res, st = tree_dbscan_sharded(pts, EPS, MINPTS, with_stats=True)
-        tree_warm = time.perf_counter() - t0
+        tree_cold, (tree_res, st) = time_once(
+            tree_dbscan_sharded, pts, EPS, MINPTS, with_stats=True,
+            label=f"dist/n{n}/tree_cold")
+        tree_warm, (tree_res, st) = time_once(
+            tree_dbscan_sharded, pts, EPS, MINPTS, with_stats=True,
+            label=f"dist/n{n}/tree_warm")
 
         rec = {
             "n": n, "n_pad": n_pad, "ndev": ndev,
@@ -59,12 +58,12 @@ def _inner(sizes, json_out):
             "n_clusters": tree_res.n_clusters,
         }
         if n <= RING_MAX_N:
-            t0 = time.perf_counter()
-            ring_res = ring_dbscan(pts, EPS, MINPTS)
-            rec["ring_wall_cold_s"] = time.perf_counter() - t0
-            t0 = time.perf_counter()
-            ring_res = ring_dbscan(pts, EPS, MINPTS)  # warm, like the tree
-            rec["ring_wall_s"] = time.perf_counter() - t0
+            rec["ring_wall_cold_s"], ring_res = time_once(
+                ring_dbscan, pts, EPS, MINPTS,
+                label=f"dist/n{n}/ring_cold")
+            rec["ring_wall_s"], ring_res = time_once(  # warm, like the tree
+                ring_dbscan, pts, EPS, MINPTS,
+                label=f"dist/n{n}/ring_warm")
             rec["ring_sweeps"] = ring_res.n_sweeps
             assert same_partition(np.asarray(ring_res.labels),
                                   np.asarray(tree_res.labels))

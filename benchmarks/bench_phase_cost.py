@@ -12,7 +12,11 @@ FULL neighbor determination (no early exit) — and report:
   * per-run traversal counts (n_sweeps + 1 vs the seed's n_sweeps + 2).
 
 ``run(json_out=...)`` additionally emits a machine-readable trajectory
-file (BENCH_traversal.json) so future PRs can track the hot path.
+file (BENCH_traversal.json) so future PRs can track the hot path, and
+``wallclock()`` contributes per-scenario end-to-end dbscan wall clock for
+the Pallas engine vs the reference engine — measured back-to-back through
+the obs metrics layer so the committed *ratio* is drift-resistant and can
+be gated by ``run.py --check``.
 """
 from __future__ import annotations
 
@@ -22,7 +26,7 @@ import numpy as np
 
 from repro.core import fdbscan, grid, lbvh, traversal
 from repro.data import pointclouds
-from .common import emit
+from .common import emit, measure_rounds, time_fn
 
 INT_MAX = 2**31 - 1
 
@@ -47,25 +51,59 @@ def _sum_iters(tr):
     return int(np.asarray(tr.iters).sum())
 
 
-# Interleaved timing: one call of every phase per round, medians across
-# rounds. Host speed drifts on shared machines; a per-phase timing block
-# lets the drift land unevenly and corrupt the phase *ratios*, which are
-# the quantity this benchmark exists to report.
+# Interleaved timing rounds (common.measure_rounds): phase *ratios* are
+# the quantity this benchmark exists to report, so host-speed drift must
+# land evenly across phases.
 _ROUNDS = 5
 
 
-def _measure_rounds(phases: dict, rounds: int = _ROUNDS) -> dict:
-    import time as _time
-    import jax
-    for fn in phases.values():          # warmup/compile round
-        jax.block_until_ready(jax.tree.leaves(fn()))
-    acc = {k: [] for k in phases}
-    for _ in range(rounds):
-        for k, fn in phases.items():
-            t0 = _time.perf_counter()
-            jax.block_until_ready(jax.tree.leaves(fn()))
-            acc[k].append(_time.perf_counter() - t0)
-    return {k: float(np.median(v)) for k, v in acc.items()}
+def _scenarios(quick: bool, only):
+    if only is not None:
+        return [s for s in SCENARIOS if s[0] in only]
+    return SCENARIOS[:2] if quick else SCENARIOS
+
+
+def wallclock(n: int = 4096, quick: bool = False, only=None,
+              rounds: int = 3) -> dict:
+    """End-to-end dbscan wall clock per scenario: the Pallas tree engine
+    vs the reference traversal engine, measured through the obs layer —
+    each timed call lands in a local metrics registry's ``bench_seconds``
+    histogram (DESIGN.md §12) and the reported time is its p50.  Engines
+    are interleaved round-robin so host drift cannot masquerade as an
+    engine regression; the ratio (not either absolute time) is what
+    ``run.py --check`` gates."""
+    from repro.core import dispatch
+    from repro.obs import metrics as obs_metrics
+    engines = (("reference", "fdbscan"), ("pallas", "pallas-tree"))
+    prev = obs_metrics.active()
+    reg = obs_metrics.install(obs_metrics.Registry())
+    try:
+        out = {}
+        for dset, eps, minpts_full in _scenarios(quick, only):
+            minpts = _scaled_minpts(minpts_full, n)
+            pts = pointclouds.load(dset, n)
+            for _, algo in engines:     # warmup/compile round, unmeasured
+                dispatch.dbscan(pts, eps, minpts, algorithm=algo)
+            for _ in range(rounds):     # interleaved measured rounds
+                for eng, algo in engines:
+                    time_fn(dispatch.dbscan, pts, eps, minpts,
+                            algorithm=algo, warmup=0, repeat=1,
+                            label=f"dbscan/{dset}/{eng}")
+            t = {eng: reg.get("bench_seconds",
+                              label=f"dbscan/{dset}/{eng}").quantile(0.5)
+                 for eng, _ in engines}
+            out[dset] = {
+                "t_dbscan_reference_us": t["reference"] * 1e6,
+                "t_dbscan_pallas_us": t["pallas"] * 1e6,
+                "wall_ratio_pallas_over_ref":
+                    t["pallas"] / max(t["reference"], 1e-9),
+            }
+    finally:
+        if prev is not None:
+            obs_metrics.install(prev)
+        else:
+            obs_metrics.uninstall()
+    return out
 
 
 def _setup(dset: str, n: int, eps: float, minpts: int):
@@ -131,11 +169,7 @@ def counters(n: int = 4096, quick: bool = False, only=None) -> dict:
     dataset names) overrides the quick/full scenario selection so the gate
     re-measures exactly what the committed trajectory file covers."""
     records = {}
-    if only is not None:
-        scenarios = [s for s in SCENARIOS if s[0] in only]
-    else:
-        scenarios = SCENARIOS[:2] if quick else SCENARIOS
-    for dset, eps, minpts_full in scenarios:
+    for dset, eps, minpts_full in _scenarios(quick, only):
         minpts = _scaled_minpts(minpts_full, n)
         segs, tree, core, labels0, vals0, fused_init, _, sweeps, stats = \
             _setup(dset, n, eps, minpts)
@@ -198,7 +232,7 @@ def run(n: int = 4096, quick: bool = False, json_out: str | None = None):
             "border": lambda: fdbscan._assign_borders(tree, segs, eps,
                                                       core, labels_fix),
         }
-        t = _measure_rounds(phases)
+        t = measure_rounds(phases, rounds=_ROUNDS)
         t_full, t_pre, t_sweep1 = t["full"], t["pre"], t["sweep1"]
         t_fused, t_main, t_border = t["fused"], t["main"], t["border"]
 
@@ -245,6 +279,13 @@ def run(n: int = 4096, quick: bool = False, json_out: str | None = None):
         emit(f"phase_cost/{dset}/total-clustering", t_cluster * 1e6,
              f"ratio_vs_nd={ratio:.2f};sweeps={n_sweeps};"
              f"traversals={n_sweeps + 1}")
+    # end-to-end wall clock, pallas vs reference, through the obs layer
+    for dset, w in wallclock(n=n, quick=quick).items():
+        records[dset].update(w)
+        emit(f"phase_cost/{dset}/dbscan-wall-pallas",
+             w["t_dbscan_pallas_us"],
+             f"ref={w['t_dbscan_reference_us']:.1f}us;"
+             f"ratio={w['wall_ratio_pallas_over_ref']:.2f}")
     if json_out:
         with open(json_out, "w") as f:
             json.dump(records, f, indent=2)

@@ -29,9 +29,10 @@ from __future__ import annotations
 
 import argparse
 import json
-import time
 
 import numpy as np
+
+from .common import time_fn, time_once
 
 EPS, MINPTS = 0.02, 10          # taxi regime, same as bench_distributed
 REQUIRED_SPEEDUP = 5.0
@@ -43,16 +44,6 @@ MIXED = {
                              # cascade counters actually exercise the LSM
     "delete_every": 3, "delete_frac": 0.05,
 }
-
-
-def _median_time(fn, repeat=3):
-    times = []
-    out = None
-    for _ in range(repeat):
-        t0 = time.perf_counter()
-        out = fn()
-        times.append(time.perf_counter() - t0)
-    return float(np.median(times)), out
 
 
 def insert_vs_full(n: int = 32768, quick: bool = False) -> dict:
@@ -76,13 +67,13 @@ def insert_vs_full(n: int = 32768, quick: bool = False) -> dict:
     # bootstrap), timing only the insert itself --------------------------
     def one_insert():
         hh = dispatch.stream_handle(initial, EPS, MINPTS)
-        t0 = time.perf_counter()
-        hh.insert(batch)
-        return time.perf_counter() - t0
+        dt, _ = time_once(hh.insert, batch, label="stream/insert")
+        return dt
     insert_s = float(np.median([one_insert() for _ in range(3)]))
 
     # ---- query latency over the live tiered handle ---------------------
-    query_s, _ = _median_time(lambda: h.query(batch), repeat=5)
+    query_s, _ = time_fn(h.query, batch, warmup=0, repeat=5,
+                         label="stream/query")
 
     # ---- full-recluster baseline on the union --------------------------
     dispatch.clear_cache()
@@ -91,7 +82,8 @@ def insert_vs_full(n: int = 32768, quick: bool = False) -> dict:
     def one_full():
         dispatch.clear_cache()                        # honest index rebuild
         return dispatch.dbscan(union, EPS, MINPTS)
-    full_s, ref = _median_time(one_full, repeat=3)
+    full_s, ref = time_fn(one_full, warmup=0, repeat=3,
+                          label="stream/full_recluster")
 
     # ---- equivalence spot check ----------------------------------------
     check_component_identical(snap_stream.labels, snap_stream.core_mask,
@@ -129,29 +121,25 @@ def mixed_workload(cfg=MIXED, validate: bool = True) -> dict:
     rng = np.random.default_rng(cfg["seed"])
     n0 = n // 2
 
-    t0 = time.perf_counter()
-    h = StreamingDBSCAN(pts[:n0], EPS, MINPTS, window=W,
-                        buffer_max=cfg["buffer_max"])
-    boot_s = time.perf_counter() - t0
+    boot_s, h = time_once(StreamingDBSCAN, pts[:n0], EPS, MINPTS, window=W,
+                          buffer_max=cfg["buffer_max"],
+                          label="stream/mixed_bootstrap")
 
     insert_times, delete_times = [], []
     step = 0
     for lo in range(n0, n, B):
-        t0 = time.perf_counter()
-        h.insert(pts[lo:lo + B])
-        insert_times.append(time.perf_counter() - t0)
+        dt, _ = time_once(h.insert, pts[lo:lo + B],
+                          label="stream/mixed_insert")
+        insert_times.append(dt)
         step += 1
         if step % cfg["delete_every"] == 0:
             alive = h.active_gids
             k = max(1, int(len(alive) * cfg["delete_frac"]))
             gids = np.sort(rng.choice(alive, size=k, replace=False))
-            t0 = time.perf_counter()
-            h.delete(gids)
-            delete_times.append(time.perf_counter() - t0)
+            dt, _ = time_once(h.delete, gids, label="stream/mixed_delete")
+            delete_times.append(dt)
 
-    t0 = time.perf_counter()
-    snap = h.snapshot()
-    snap_s = time.perf_counter() - t0
+    snap_s, snap = time_once(h.snapshot, label="stream/mixed_snapshot")
 
     if validate:
         surv = pts[h.active_gids]

@@ -1,4 +1,13 @@
-"""Shared benchmark utilities: timing, CSV emission, algorithm registry."""
+"""Shared benchmark utilities: timing, CSV emission, algorithm registry.
+
+All timing helpers are observability-aware (DESIGN.md §12): pass
+``label=`` and every measured duration is also recorded into the active
+``repro.obs`` metrics registry (histogram ``bench_seconds{label=}``) —
+with no registry installed the recording is a no-op, so standalone
+benchmark runs are unaffected.  This is the single timing path every
+bench_*.py script shares; hand-rolled ``perf_counter`` pairs belong here,
+not in the scripts.
+"""
 from __future__ import annotations
 
 import time
@@ -6,19 +15,66 @@ import time
 import jax
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
 
-def time_fn(fn, *args, warmup: int = 1, repeat: int = 3, **kw):
-    """Median wall time (s) of fn(*args) with block_until_ready."""
+
+def _sync(r):
+    jax.block_until_ready(jax.tree.leaves(r))
+    return r
+
+
+def time_fn(fn, *args, warmup: int = 1, repeat: int = 3,
+            label: str | None = None, **kw):
+    """Median wall time (s) of fn(*args) with block_until_ready.
+
+    ``warmup`` compile/warm calls are unmeasured; each of the ``repeat``
+    measured samples is recorded into the active obs registry under
+    ``bench_seconds{label=}`` when ``label`` is given.
+    """
     for _ in range(warmup):
-        r = fn(*args, **kw)
-        jax.block_until_ready(jax.tree.leaves(r))
+        r = _sync(fn(*args, **kw))
     times = []
     for _ in range(repeat):
         t0 = time.perf_counter()
-        r = fn(*args, **kw)
-        jax.block_until_ready(jax.tree.leaves(r))
-        times.append(time.perf_counter() - t0)
+        r = _sync(fn(*args, **kw))
+        dt = time.perf_counter() - t0
+        times.append(dt)
+        if label is not None:
+            obs_metrics.observe("bench_seconds", dt, label=label)
     return float(np.median(times)), r
+
+
+def time_once(fn, *args, label: str | None = None, **kw):
+    """One timed call — (seconds, result) with block_until_ready; no
+    warmup (cold-vs-warm comparisons time the first call deliberately)."""
+    t0 = time.perf_counter()
+    r = _sync(fn(*args, **kw))
+    dt = time.perf_counter() - t0
+    if label is not None:
+        obs_metrics.observe("bench_seconds", dt, label=label)
+    return dt, r
+
+
+def measure_rounds(phases: dict, rounds: int = 5,
+                   label_prefix: str | None = None) -> dict:
+    """Interleaved phase timing: one call of every phase per round,
+    medians across rounds.  Host speed drifts on shared machines; a
+    per-phase timing block lets the drift land unevenly and corrupt the
+    phase *ratios*, so every round cycles through all phases once (with
+    one unmeasured warmup/compile round first)."""
+    for fn in phases.values():          # warmup/compile round
+        _sync(fn())
+    acc = {k: [] for k in phases}
+    for _ in range(rounds):
+        for k, fn in phases.items():
+            t0 = time.perf_counter()
+            _sync(fn())
+            dt = time.perf_counter() - t0
+            acc[k].append(dt)
+            if label_prefix is not None:
+                obs_metrics.observe("bench_seconds", dt,
+                                    label=f"{label_prefix}/{k}")
+    return {k: float(np.median(v)) for k, v in acc.items()}
 
 
 def algorithms(include_gdbscan=True, include_tiled=True, include_auto=False):

@@ -7,8 +7,13 @@
     evaluations, streaming repair/compaction work on the mixed
     insert/delete/window trace) and fail if any regresses more than
     ``CHECK_THRESHOLD``x
-    against the committed ``BENCH_*.json`` trajectory files. Wall-clock
-    numbers are never gated (CI machines drift); counters cannot.
+    against the committed ``BENCH_*.json`` trajectory files. Absolute
+    wall-clock numbers are never gated (CI machines drift); counters
+    cannot. The one wall-clock quantity that IS gated is the
+    pallas-vs-reference end-to-end *ratio* from ``BENCH_traversal.json``:
+    both engines are re-measured interleaved on the same machine through
+    the obs layer (bench_phase_cost.wallclock), so the ratio-of-ratios is
+    drift-free even though each absolute time is not.
 
 Output: ``name,us_per_call,derived`` CSV lines.
 """
@@ -24,8 +29,12 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 CHECK_THRESHOLD = 1.5
 
 
-def _check_ratio(failures: list, name: str, got: float, committed: float):
-    ratio = got / max(committed, 1)
+def _check_ratio(failures: list, name: str, got: float, committed: float,
+                 floor: float = 1.0):
+    """``floor`` guards the divide: 1.0 for integer work counters (a
+    committed 0 means "got must stay ~0"), a tiny epsilon for float
+    ratios where flooring at 1 would silently mask regressions below 1."""
+    ratio = got / max(committed, floor)
     status = "FAIL" if ratio > CHECK_THRESHOLD else "ok"
     print(f"check,{name},{committed},{got},{ratio:.3f},{status}")
     if ratio > CHECK_THRESHOLD:
@@ -73,6 +82,20 @@ def check() -> None:
             _check_ratio(failures, f"traversal/{dset}/sweep_iters_total",
                          sum(rec["sweep_iters_per_sweep"]),
                          sum(ref["sweep_iters_per_sweep"]))
+        # pallas-vs-reference wall clock, gated as a ratio-of-ratios:
+        # re-measure both engines interleaved (obs-layer histograms) and
+        # compare the measured ratio against the committed one
+        wall_dsets = {d for d in committed
+                      if "wall_ratio_pallas_over_ref" in committed[d]
+                      and d in got}
+        if wall_dsets:
+            wall = bench_phase_cost.wallclock(n=n, only=wall_dsets)
+            for dset in sorted(wall_dsets):
+                _check_ratio(failures,
+                             f"traversal/{dset}/wall_ratio_pallas_over_ref",
+                             wall[dset]["wall_ratio_pallas_over_ref"],
+                             committed[dset]["wall_ratio_pallas_over_ref"],
+                             floor=1e-9)
     else:
         print("check,traversal,-,-,-,skipped (no BENCH_traversal.json)")
 

@@ -68,6 +68,7 @@ def _method_entries(cls, names, prefix: str) -> list[str]:
 
 def generate() -> str:
     import repro
+    from repro import obs
     from repro.core import traversal
     from repro.core import neighbors
     from repro.kernels import traverse as pallas_traverse
@@ -114,6 +115,27 @@ def generate() -> str:
                         neighbors.radius_visit))
     parts.append(_entry("repro.neighbors.KNNResult", neighbors.KNNResult,
                         kind="class"))
+
+    parts.append("## Observability (`repro.obs`)\n")
+    parts.append(_doc(obs) + "\n")
+    parts.append(_entry("obs.instrumented", obs.instrumented))
+    parts.append(_entry("obs.metrics.Registry", obs.metrics.Registry,
+                        kind="class"))
+    parts.extend(_method_entries(
+        obs.metrics.Registry,
+        ["counter", "gauge", "histogram", "get", "snapshot", "write_json"],
+        "Registry"))
+    parts.append(_entry("obs.metrics.Histogram", obs.metrics.Histogram,
+                        kind="class"))
+    for fn in (obs.metrics.install, obs.metrics.uninstall,
+               obs.metrics.active, obs.metrics.inc, obs.metrics.set_gauge,
+               obs.metrics.observe, obs.metrics.validate_snapshot):
+        parts.append(_entry(f"obs.metrics.{fn.__name__}", fn))
+    parts.append(_entry("obs.trace.Tracer", obs.trace.Tracer, kind="class"))
+    for fn in (obs.trace.span, obs.trace.watch, obs.trace.install,
+               obs.trace.uninstall, obs.trace.active,
+               obs.trace.profiler_session, obs.trace.validate_chrome_trace):
+        parts.append(_entry(f"obs.trace.{fn.__name__}", fn))
 
     parts.append("## Predicates (`repro.core.traversal`)\n")
     parts.append(

@@ -45,6 +45,9 @@ from typing import Any, NamedTuple
 import numpy as np
 import jax.numpy as jnp
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
 from . import fdbscan, grid, lbvh
 from .validate import check_points
 
@@ -177,8 +180,12 @@ def _fdbscan_plan(points, pkey: str, stats: dict) -> Plan:
     base_key = (pkey, "fdbscan-index")
     cached = _cache_get(base_key)
     if cached is None:
-        segs = grid.build_segments_fdbscan(points)
-        cached = _cache_put(base_key, (segs, _tree_of(segs)))
+        with obs_trace.span("build", index="fdbscan") as sp:
+            segs = grid.build_segments_fdbscan(points)
+            tree = _tree_of(segs)
+            sp.watch(segs, tree)
+        obs_metrics.inc("dispatch_index_builds_total", index="fdbscan")
+        cached = _cache_put(base_key, (segs, tree))
     segs, tree = cached
     return Plan("fdbscan", segs, tree, stats)
 
@@ -186,6 +193,12 @@ def _fdbscan_plan(points, pkey: str, stats: dict) -> Plan:
 def plan(points, eps: float, min_pts: int,
          algorithm: str = "auto", mesh=None, axis: str = "data") -> Plan:
     """Choose a backend and build (or fetch) its index.
+
+    Instrumented (DESIGN.md §12): with a collector installed, planning is
+    bracketed by a ``plan`` span (index builds get a nested ``build``
+    span) and reports plan/cache-hit counters per backend; with none
+    installed every instrumentation point is a no-op and the result is
+    bit-identical.
 
     The densebox grid build is reused as the density probe: its dense-point
     fraction decides densebox-vs-plain, and on a densebox decision the very
@@ -217,6 +230,17 @@ def plan(points, eps: float, min_pts: int,
             with a single-device algorithm; a sharded request whose mesh
             lacks ``axis``; or a stream request with d ∉ {2, 3}.
     """
+    with obs_trace.span("plan", algorithm=algorithm) as sp:
+        p = _plan_impl(points, eps, min_pts, algorithm, mesh, axis)
+        sp.watch(p.segs, p.tree)
+    obs_metrics.inc("dispatch_plans_total", backend=p.backend)
+    return p
+
+
+def _plan_impl(points, eps: float, min_pts: int, algorithm: str,
+               mesh, axis: str) -> Plan:
+    """The planning decision body; :func:`plan` wraps it in the span +
+    counter instrumentation."""
     if algorithm not in ALGORITHMS:
         raise ValueError(f"unknown algorithm {algorithm!r}")
     if eps < 0:
@@ -248,7 +272,9 @@ def plan(points, eps: float, min_pts: int,
     key = (pkey, float(eps), int(min_pts), algorithm)
     hit = _cache_get(key)
     if hit is not None:
+        obs_metrics.inc("dispatch_plan_cache_hits_total")
         return hit
+    obs_metrics.inc("dispatch_plan_cache_misses_total")
 
     stats: dict = {"n": n, "d": d}
     if algorithm == "stream":
@@ -281,7 +307,10 @@ def plan(points, eps: float, min_pts: int,
             _fdbscan_plan(points, pkey, stats), algorithm))
 
     # eps-grid build: density probe and (potentially) the index itself
-    segs = grid.build_segments_densebox(points, eps, min_pts)
+    with obs_trace.span("build", index="densebox") as sp:
+        segs = grid.build_segments_densebox(points, eps, min_pts)
+        sp.watch(segs)
+    obs_metrics.inc("dispatch_index_builds_total", index="densebox")
     dense_frac = float(np.asarray(segs.dense_pt).mean())
     stats.update(dense_fraction=dense_frac, n_segments=segs.n_segments)
     if algorithm == "fdbscan-densebox" or dense_frac >= DENSE_FRACTION_MIN:
@@ -343,6 +372,20 @@ def dbscan(points, eps: float, min_pts: int, *, algorithm: str = "auto",
             "device tree-sweep backends and would silently be ignored "
             "(drop the kwarg, or pick "
             "algorithm='fdbscan'/'fdbscan-densebox')")
+    with obs_trace.span("dbscan", backend=p.backend,
+                        n=points.shape[0]) as sp:
+        res = _execute(p, points, eps, min_pts, star=star,
+                       frontier=frontier, mesh=mesh, axis=axis)
+        sp.watch(res.labels, res.core_mask)
+    obs_metrics.inc("dbscan_runs_total", backend=p.backend)
+    obs_metrics.observe("dbscan_sweeps", res.n_sweeps, backend=p.backend)
+    return res
+
+
+def _execute(p: Plan, points, eps: float, min_pts: int, *, star: bool,
+             frontier: bool, mesh, axis: str) -> fdbscan.DBSCANResult:
+    """Run a resolved plan; :func:`dbscan` wraps it in the span +
+    counter instrumentation."""
     if p.backend == "sharded":
         from repro.distributed.ring_dbscan import tree_dbscan_sharded
         if star:

@@ -33,6 +33,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
 from . import grid, lbvh, traversal, unionfind
 from .validate import check_points
 
@@ -155,6 +158,24 @@ def _compact_ids(mask_np: np.ndarray) -> jax.Array:
     out = np.full(_pad_size(len(idx)), -1, np.int32)
     out[:len(idx)] = idx
     return jnp.asarray(out)
+
+
+def _engine_name(traverse_fn) -> str:
+    """Metric label for the walk's execution engine."""
+    return "reference" if traverse_fn is traversal.traverse else "pallas"
+
+
+def _record_trace(phase: str, engine: str, tr) -> None:
+    """Fold a traversal Trace's work counters into the active metrics
+    registry (DESIGN.md §12).  Reading the counters forces a device sync,
+    so this is gated on an installed registry — with none, the traversal
+    result is never touched and timing is unperturbed."""
+    if obs_metrics.active() is None:
+        return
+    obs_metrics.inc("traversal_evals_total", float(jnp.sum(tr.evals)),
+                    phase=phase, engine=engine)
+    obs_metrics.inc("traversal_iters_total", float(jnp.sum(tr.iters)),
+                    phase=phase, engine=engine)
 
 
 def _gather_minlabel(tree, segs, eps, labels, gather_mask, ids,
@@ -292,17 +313,21 @@ def _sweep_to_fixpoint(tree, segs, eps, core, labels0, *,
     sweeps = 0
     stats = {"frontier_per_sweep": [], "active_per_sweep": [],
              "iters_per_sweep": [], "evals_per_sweep": []}
+    engine = _engine_name(traverse_fn)
     while True:
-        tr = traverse_fn(
-            tree, segs,
-            traversal.intersects(traversal.sphere(eps), ids=ids),
-            traversal.MinLabelVisitor(labels, gather_mask,
-                                      mask_wide=gather_wide),
-            node_mask=node_mask, **(dual or {}))
-        dual = None               # only the first sweep may be split
-        gather_wide = None
-        new, changed, changed_flags = _post_sweep(tree, segs, labels, core,
-                                                  ids, tr.acc)
+        with obs_trace.span("sweep", i=sweeps + 1, engine=engine) as sp:
+            tr = traverse_fn(
+                tree, segs,
+                traversal.intersects(traversal.sphere(eps), ids=ids),
+                traversal.MinLabelVisitor(labels, gather_mask,
+                                          mask_wide=gather_wide),
+                node_mask=node_mask, **(dual or {}))
+            dual = None           # only the first sweep may be split
+            gather_wide = None
+            new, changed, changed_flags = _post_sweep(tree, segs, labels,
+                                                      core, ids, tr.acc)
+            sp.watch(new, changed)
+        _record_trace("sweep", engine, tr)
         sweeps += 1
         if collect_stats:
             stats["frontier_per_sweep"].append(int(jnp.sum(gather_mask)))
@@ -349,10 +374,11 @@ def _assign_borders(tree, segs, eps, core, core_labels,
     """
     ids = _compact_ids(np.asarray(~core))
     vals = jnp.where(core, core_labels, jnp.int32(INT_MAX))
-    gathered, _ = _gather_minlabel(tree, segs, eps, vals, core, ids,
-                                   node_mask=_frontier_node_mask(tree, segs,
-                                                                 core),
-                                   traverse_fn=traverse_fn)
+    gathered, tr = _gather_minlabel(tree, segs, eps, vals, core, ids,
+                                    node_mask=_frontier_node_mask(tree, segs,
+                                                                  core),
+                                    traverse_fn=traverse_fn)
+    _record_trace("border", _engine_name(traverse_fn), tr)
     labels = jnp.where(core, core_labels, gathered)
     return jnp.where(labels == INT_MAX, jnp.int32(-1), labels)
 
@@ -409,8 +435,12 @@ def cluster_from_index(segs: grid.Segments, tree, eps: float, min_pts: int,
 
     # Fused first pass: neighbor count + hooked labels in ONE traversal
     # (the seed spent two: a count pass and the first min-label sweep).
-    core, labels0, vals0, absorbed, first = _fused_first_pass(
-        tree, segs, eps, min_pts, traverse_fn=traverse_fn)
+    engine = _engine_name(traverse_fn)
+    with obs_trace.span("traverse", phase="first_pass", engine=engine) as sp:
+        core, labels0, vals0, absorbed, first = _fused_first_pass(
+            tree, segs, eps, min_pts, traverse_fn=traverse_fn)
+        sp.watch(core, labels0)
+    _record_trace("first_pass", engine, first)
     core_labels, loop_sweeps, sweep_stats = _sweep_to_fixpoint(
         tree, segs, eps, core, labels0, frontier=frontier,
         collect_stats=with_stats, fused_init=(vals0, absorbed),
@@ -421,12 +451,17 @@ def cluster_from_index(segs: grid.Segments, tree, eps: float, min_pts: int,
     if star:
         labels_sorted = jnp.where(core, core_labels, jnp.int32(-1))
     else:
-        labels_sorted = _assign_borders(tree, segs, eps, core, core_labels,
-                                        traverse_fn=traverse_fn)
+        with obs_trace.span("border", engine=engine) as sp:
+            labels_sorted = _assign_borders(tree, segs, eps, core,
+                                            core_labels,
+                                            traverse_fn=traverse_fn)
+            sp.watch(labels_sorted)
         n_traversals += 1
 
-    labels, n_clusters = _finalize(labels_sorted, segs.order, n)
-    core_mask = jnp.zeros(n, bool).at[segs.order].set(core)
+    with obs_trace.span("finalize") as sp:
+        labels, n_clusters = _finalize(labels_sorted, segs.order, n)
+        core_mask = jnp.zeros(n, bool).at[segs.order].set(core)
+        sp.watch(labels, core_mask)
     res = DBSCANResult(labels=labels, core_mask=core_mask,
                        n_clusters=n_clusters, n_sweeps=n_sweeps,
                        n_traversals=n_traversals, backend=backend)

@@ -335,6 +335,16 @@ def traverse(tree: Tree, segs: Segments, predicates, callback, carry=None,
     mask = getattr(callback, "mask", None)
     mask_wide = callback.mask_wide if dual_gather else None
 
+    # Launch accounting (DESIGN.md §12): only outside jit tracing — the
+    # pallas walk may also run nested inside a jitted first pass, where a
+    # host-side counter bump would fire at trace time, not per run.
+    from repro.obs import metrics as obs_metrics
+    if (obs_metrics.active() is not None
+            and not isinstance(segs.pts, jax.core.Tracer)):
+        obs_metrics.inc("pallas_kernel_launches_total", kind=kind)
+        obs_metrics.inc("pallas_kernel_lanes_total",
+                        float(q_arr.shape[0]), kind=kind)
+
     acc, hits, evals, iters = _run(
         cfg, int(lane_tile), bool(interpret),
         q_arr, query_ids, self_arr, dense_arr, rank_arr, wide_lanes,

@@ -2,6 +2,10 @@
 
   PYTHONPATH=src python -m repro.launch.cluster --data hacc_like -n 20000 \
       --eps 0.03 --minpts 5 --algorithm fdbscan-densebox
+
+``--trace``/``--metrics-json`` record the run's phase spans (plan/build/
+traverse/sweep/border, DESIGN.md §12) and metrics snapshot — the batch
+analogue of the serving loop's observability artifacts.
 """
 from __future__ import annotations
 
@@ -9,6 +13,9 @@ import argparse
 import time
 
 import numpy as np
+
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 
 def main(argv=None):
@@ -24,8 +31,28 @@ def main(argv=None):
     ap.add_argument("--star", action="store_true", help="DBSCAN* variant")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", help="write labels .npy")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="write the metrics registry snapshot here at exit")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record phase spans; write Chrome trace JSON here")
     args = ap.parse_args(argv)
 
+    prev_reg, prev_tr = obs_metrics.active(), obs_trace.active()
+    reg = tracer = None
+    if args.metrics_json:
+        reg = obs_metrics.install(obs_metrics.Registry())
+    if args.trace:
+        tracer = obs_trace.install(sync=True)
+    try:
+        _run(args, reg, tracer)
+    finally:
+        obs_metrics.install(prev_reg) if prev_reg is not None \
+            else obs_metrics.uninstall()
+        obs_trace.install(prev_tr) if prev_tr is not None \
+            else obs_trace.uninstall()
+
+
+def _run(args, reg, tracer):
     from repro.data import pointclouds
     pts = pointclouds.load(args.data, args.n, seed=args.seed)
     print(f"[cluster] {args.data}: n={len(pts)} d={pts.shape[1]} "
@@ -58,6 +85,13 @@ def main(argv=None):
     if args.out:
         np.save(args.out, labels)
         print(f"[cluster] labels -> {args.out}")
+    if reg is not None and args.metrics_json:
+        obs_metrics.validate_snapshot(reg.write_json(args.metrics_json))
+        print(f"[cluster] metrics snapshot -> {args.metrics_json}")
+    if tracer is not None and args.trace:
+        doc = tracer.export(args.trace)
+        print(f"[cluster] Chrome trace ({len(doc['traceEvents'])} events) "
+              f"-> {args.trace}")
 
 
 if __name__ == "__main__":

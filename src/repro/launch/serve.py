@@ -1,4 +1,4 @@
-"""Streaming DBSCAN serving loop (DESIGN.md §7, durability §10).
+"""Streaming DBSCAN serving loop (DESIGN.md §7, durability §10, obs §12).
 
 The serving path the ROADMAP's north star actually needs: a long-lived
 ``StreamingDBSCAN`` handle absorbing a mixed stream of *insert* and
@@ -28,6 +28,19 @@ crash and keeps serving where the stream left off:
   # kill -9 it mid-run, then:
   PYTHONPATH=src python -m repro.launch.serve ... --restore
 
+Observability (DESIGN.md §12): the loop always runs against a local
+metrics registry — request latencies go into *bounded-memory* quantile
+histograms (``serve_insert_seconds`` / ``serve_query_seconds`` /
+``serve_snapshot_seconds``; the sketch size is bounded by the latency
+range, never by the request count, so a long-lived server stays
+memory-flat), and every handle counter (merges, compactions, repair
+sweeps, WAL fsyncs) reports into the same registry.  ``--metrics-json``
+writes the schema-stable snapshot at exit, ``--trace`` additionally
+records phase spans and writes a Chrome trace (open in Perfetto /
+``chrome://tracing``; pass ``--trace-sync`` to block on device values at
+span close so spans measure compute, not dispatch), and
+``--stats-every K`` prints registry-derived latency lines during the run.
+
 The loop is defensive the way a serving process must be: an exhausted
 insert pool degrades to query-only service (dropped insert requests are
 counted, not fatal), malformed request batches (NaN/Inf coordinates) are
@@ -42,9 +55,16 @@ import time
 
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
-def _pct(xs, p):
-    return float(np.percentile(np.asarray(xs), p)) if len(xs) else float("nan")
+
+def _q_ms(reg, name: str, q: float) -> float:
+    """Quantile (in ms) of a registry latency histogram; NaN when empty."""
+    h = reg.get(name)
+    if h is None or h.count == 0:
+        return float("nan")
+    return h.quantile(q) * 1e3
 
 
 def main(argv=None):
@@ -87,6 +107,18 @@ def main(argv=None):
     ap.add_argument("--poison-frac", type=float, default=0.0,
                     help="probability a request batch carries a NaN point "
                     "(exercises the validation gate; rejected + counted)")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="write the metrics registry snapshot "
+                    "(repro.obs schema) here at exit")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record phase spans and write a Chrome trace-event "
+                    "JSON here at exit (Perfetto / chrome://tracing)")
+    ap.add_argument("--trace-sync", action="store_true",
+                    help="block on watched device values at span close so "
+                    "spans measure compute, not dispatch (observer cost is "
+                    "marked in the trace); default: never block")
+    ap.add_argument("--stats-every", type=int, default=0, metavar="K",
+                    help="print registry-derived latency stats every K steps")
     args = ap.parse_args(argv)
 
     if args.restore and not (args.checkpoint or args.wal):
@@ -94,6 +126,26 @@ def main(argv=None):
     if args.checkpoint_every and not args.checkpoint:
         ap.error("--checkpoint-every needs --checkpoint")
 
+    # The serving loop always collects into its own registry (bounded
+    # histograms replace the old unbounded all-time latency lists); the
+    # tracer is only installed when a trace is requested.  Previous
+    # collectors are restored on the way out, so embedding callers (the
+    # tests) never see their instrumentation hijacked.
+    prev_reg, prev_tr = obs_metrics.active(), obs_trace.active()
+    reg = obs_metrics.install(obs_metrics.Registry())
+    tracer = None
+    if args.trace:
+        tracer = obs_trace.install(sync=args.trace_sync)
+    try:
+        return _serve(args, reg, tracer)
+    finally:
+        obs_metrics.install(prev_reg) if prev_reg is not None \
+            else obs_metrics.uninstall()
+        obs_trace.install(prev_tr) if prev_tr is not None \
+            else obs_trace.uninstall()
+
+
+def _serve(args, reg, tracer):
     from repro.core import dispatch
     from repro.data import pointclouds
     from repro.stream import StreamingDBSCAN
@@ -110,10 +162,11 @@ def main(argv=None):
         # watermark (DESIGN.md §10). The stream is deterministic (initial
         # prefix, then the pool in order), so the recovered watermark tells
         # us exactly where to resume draining the pool.
-        handle = StreamingDBSCAN.restore(
-            args.checkpoint, wal=args.wal, window=args.window,
-            checkpoint_every=args.checkpoint_every)
-        boot = handle.snapshot()
+        with obs_trace.span("serve.restore"):
+            handle = StreamingDBSCAN.restore(
+                args.checkpoint, wal=args.wal, window=args.window,
+                checkpoint_every=args.checkpoint_every)
+            boot = handle.snapshot()
         t_boot = time.perf_counter() - t0
         pool_off = min(max(handle.n_points - n0, 0), len(pool))
         print(f"[serve] restored n={handle.n_points} "
@@ -125,11 +178,12 @@ def main(argv=None):
         # plan cache's eps-independent index — later batch dbscan calls or
         # handles at other eps/min_pts over the same points reuse it. The
         # handle's own bootstrap clustering doubles as the t0 snapshot.
-        handle = dispatch.stream_handle(
-            initial, args.eps, args.min_pts, window=args.window,
-            wal=args.wal, checkpoint_path=args.checkpoint,
-            checkpoint_every=args.checkpoint_every)
-        boot = handle.snapshot()
+        with obs_trace.span("serve.bootstrap", n=n0):
+            handle = dispatch.stream_handle(
+                initial, args.eps, args.min_pts, window=args.window,
+                wal=args.wal, checkpoint_path=args.checkpoint,
+                checkpoint_every=args.checkpoint_every)
+            boot = handle.snapshot()
         t_boot = time.perf_counter() - t0
         pool_off = 0
         print(f"[serve] bootstrap n={n0} via backend={boot.backend!r}: "
@@ -150,25 +204,29 @@ def main(argv=None):
     # shape warmup (compile once, outside the latency measurements)
     handle.query(query_batch())
 
-    insert_times, query_times, snapshot_times = [], [], []
     n_ins = n_q = n_dropped = n_rejected = 0
     for step in range(args.steps):
         want_insert = rng.random() < args.insert_frac
         if want_insert and pool_off >= len(pool):
             # Insert stream ran dry: a real server keeps answering queries.
             n_dropped += 1
+            obs_metrics.inc("serve_dropped_total", kind="insert")
             want_insert = False
         if want_insert:
             take = poisoned(pool[pool_off:pool_off + B])
             t0 = time.perf_counter()
             try:
-                handle.insert(take)
+                with obs_trace.span("serve.request", kind="insert",
+                                    step=step):
+                    handle.insert(take)
             except ValueError as e:
                 n_rejected += 1
+                obs_metrics.inc("serve_rejected_total", kind="insert")
                 print(f"[serve] step {step + 1}: insert rejected "
                       f"({str(e).splitlines()[0]})", file=sys.stderr)
             else:
-                insert_times.append(time.perf_counter() - t0)
+                obs_metrics.observe("serve_insert_seconds",
+                                    time.perf_counter() - t0)
                 n_ins += len(take)
             # rejected or not, that slice of the stream is consumed
             pool_off += len(pool[pool_off:pool_off + B])
@@ -176,21 +234,33 @@ def main(argv=None):
             qb = poisoned(query_batch())
             t0 = time.perf_counter()
             try:
-                handle.query(qb)
+                with obs_trace.span("serve.request", kind="query",
+                                    step=step):
+                    handle.query(qb)
             except ValueError as e:
                 n_rejected += 1
+                obs_metrics.inc("serve_rejected_total", kind="query")
                 print(f"[serve] step {step + 1}: query rejected "
                       f"({str(e).splitlines()[0]})", file=sys.stderr)
             else:
-                query_times.append(time.perf_counter() - t0)
+                obs_metrics.observe("serve_query_seconds",
+                                    time.perf_counter() - t0)
                 n_q += B
+        obs_metrics.set_gauge("serve_pool_remaining",
+                              float(len(pool) - pool_off))
         if args.snapshot_every and (step + 1) % args.snapshot_every == 0:
             t0 = time.perf_counter()
             snap = handle.snapshot()
-            snapshot_times.append(time.perf_counter() - t0)
+            dt = time.perf_counter() - t0
+            obs_metrics.observe("serve_snapshot_seconds", dt)
             print(f"[serve] step {step + 1}: n={handle.n_points} "
                   f"(delta {handle.n_delta}), {snap.n_clusters} clusters, "
-                  f"snapshot {snapshot_times[-1] * 1e3:.1f}ms")
+                  f"snapshot {dt * 1e3:.1f}ms")
+        if args.stats_every and (step + 1) % args.stats_every == 0:
+            print(f"[serve] step {step + 1}: "
+                  f"insert p50 {_q_ms(reg, 'serve_insert_seconds', .5):.1f}ms "
+                  f"query p50 {_q_ms(reg, 'serve_query_seconds', .5):.1f}ms "
+                  f"(active {handle.n_active}, tiers {handle.n_tiers})")
 
     if args.checkpoint:
         handle.checkpoint()          # final durable state before reporting
@@ -198,6 +268,8 @@ def main(argv=None):
     t0 = time.perf_counter()
     snap = handle.snapshot()
     t_snap = time.perf_counter() - t0
+    obs_metrics.observe("serve_snapshot_seconds", t_snap)
+    ins_h, q_h = reg.get("serve_insert_seconds"), reg.get("serve_query_seconds")
     stats = {
         "steps": args.steps, "batch": B,
         "n_points": handle.n_points, "n_inserted": n_ins, "n_queried": n_q,
@@ -207,13 +279,17 @@ def main(argv=None):
         "n_compactions": handle.n_compactions,
         "n_deletes": handle.n_deletes,
         "repair_sweeps": handle.n_repair_sweeps,
-        "insert_p50_ms": _pct(insert_times, 50) * 1e3,
-        "insert_p99_ms": _pct(insert_times, 99) * 1e3,
-        "insert_pts_per_s": (n_ins / sum(insert_times)
-                             if insert_times else float("nan")),
-        "query_p50_ms": _pct(query_times, 50) * 1e3,
-        "query_p99_ms": _pct(query_times, 99) * 1e3,
+        "insert_p50_ms": _q_ms(reg, "serve_insert_seconds", 0.50),
+        "insert_p99_ms": _q_ms(reg, "serve_insert_seconds", 0.99),
+        "insert_pts_per_s": (n_ins / ins_h.sum
+                             if ins_h is not None and ins_h.sum > 0
+                             else float("nan")),
+        "query_p50_ms": _q_ms(reg, "serve_query_seconds", 0.50),
+        "query_p99_ms": _q_ms(reg, "serve_query_seconds", 0.99),
         "snapshot_s": t_snap, "n_clusters": snap.n_clusters,
+        # memory-flatness witness: sketch buckets, not sample counts
+        "latency_sketch_buckets": ((ins_h.bucket_count() if ins_h else 0)
+                                   + (q_h.bucket_count() if q_h else 0)),
     }
     print(f"[serve] {args.dataset}: served {args.steps} micro-batches "
           f"(B={B}) -> {stats['n_active']} active pts "
@@ -227,6 +303,14 @@ def main(argv=None):
           f"query: p50 {stats['query_p50_ms']:.1f}ms "
           f"p99 {stats['query_p99_ms']:.1f}ms; "
           f"snapshot {t_snap:.2f}s")
+
+    if args.metrics_json:
+        obs_metrics.validate_snapshot(reg.write_json(args.metrics_json))
+        print(f"[serve] metrics snapshot -> {args.metrics_json}")
+    if tracer is not None and args.trace:
+        doc = tracer.export(args.trace)
+        print(f"[serve] Chrome trace ({len(doc['traceEvents'])} events) "
+              f"-> {args.trace}")
 
     if args.validate:
         from repro.core.validate import check_component_identical

@@ -1,0 +1,48 @@
+"""Unified observability layer (DESIGN.md §12): metrics + tracing + the
+``jax.profiler`` shim, zero dependencies, disabled by default.
+
+  * :mod:`repro.obs.metrics` — named counters, gauges, and bounded-memory
+    quantile histograms with labeled families and a stable JSON snapshot
+    schema (``metrics.SCHEMA``).
+  * :mod:`repro.obs.trace` — nestable phase spans with device-sync-aware
+    timing, exported as Chrome trace-event JSON (loads in Perfetto /
+    ``chrome://tracing``), plus a ``jax.profiler.TraceAnnotation`` shim.
+  * :func:`instrumented` — install both for a scoped block and restore
+    the previous collectors afterwards (what the tests and benchmarks
+    use).
+
+Until a collector is installed every instrumentation point in the
+library is a module-global load + ``None`` check — jitted code paths are
+untouched and results are bit-identical either way (the golden
+observer-effect tests pin this).
+
+    from repro.obs import metrics, trace
+    reg = metrics.install()
+    tr = trace.install(sync=True)
+    ... run dbscan / a streaming handle / the serving loop ...
+    reg.write_json("metrics.json")
+    tr.export("trace.json")          # open in chrome://tracing
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+from . import metrics, trace
+
+__all__ = ["metrics", "trace", "instrumented"]
+
+
+@contextmanager
+def instrumented(*, sync: bool = True, annotate: bool = True):
+    """Install a fresh registry + tracer for the enclosed block, yielding
+    ``(registry, tracer)``; the previously installed collectors (possibly
+    None) are restored on exit."""
+    prev_reg, prev_tr = metrics.active(), trace.active()
+    reg = metrics.install()
+    tr = trace.install(sync=sync, annotate=annotate)
+    try:
+        yield reg, tr
+    finally:
+        metrics.install(prev_reg) if prev_reg is not None \
+            else metrics.uninstall()
+        trace.install(prev_tr) if prev_tr is not None else trace.uninstall()

@@ -49,9 +49,13 @@ import io
 import json
 import os
 import struct
+import time
 import zlib
 
 import numpy as np
+
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 # ---------------------------------------------------------------------- #
 # fault injection                                                        #
@@ -193,6 +197,7 @@ def save_checkpoint(handle, path: str) -> dict:
         "n_repair_sweeps": int(handle.n_repair_sweeps),
         "checksum": _content_checksum(arrays),
     }
+    t0 = time.perf_counter()
     buf = io.BytesIO()
     np.savez(buf, manifest=np.frombuffer(
         json.dumps(manifest, sort_keys=True).encode(), np.uint8), **arrays)
@@ -211,6 +216,9 @@ def save_checkpoint(handle, path: str) -> dict:
     barrier("mid-checkpoint")            # tmp durable, rename not yet done
     os.replace(tmp, path)
     _fsync_dir(path)
+    obs_metrics.observe("checkpoint_write_seconds",
+                        time.perf_counter() - t0)
+    obs_metrics.inc("checkpoints_total")
     return manifest
 
 
@@ -442,7 +450,10 @@ class WriteAheadLog:
             os._exit(FAULT_EXIT_CODE)
         self._f.write(rec)
         self._f.flush()
+        t0 = time.perf_counter()
         os.fsync(self._f.fileno())
+        obs_metrics.observe("wal_fsync_seconds", time.perf_counter() - t0)
+        obs_metrics.inc("wal_appends_total")
 
     def append(self, batch: np.ndarray, start_gid: int) -> None:
         """Durably append one insert batch (fsync before returning)."""
@@ -592,6 +603,24 @@ def recover(checkpoint_path: str | None = None, wal_path: str | None = None,
         h = StreamingDBSCAN(None, eps, min_pts, **{
             k: v for k, v in handle_kwargs.items() if k in _HANDLE_KWARGS})
 
+    with obs_trace.span("stream.replay", n_ops=len(ops)):
+        _replay(h, ops, wal_path)
+    obs_metrics.inc("wal_replayed_ops_total", float(len(ops)))
+
+    # re-attach durability so the recovered handle keeps serving durably
+    if wal_path is not None:
+        h._wal = WriteAheadLog(wal_path, eps=h.eps, min_pts=h.min_pts)
+    if checkpoint_path is not None:
+        h._ckpt_path = checkpoint_path
+    for k, v in handle_kwargs.items():
+        if k == "checkpoint_every":
+            h._ckpt_every = int(v)
+    return h
+
+
+def _replay(h, ops, wal_path) -> None:
+    """Apply scanned WAL ops to a recovered handle in append order (the
+    body of :func:`recover`'s replay phase)."""
     for op in ops:
         kind, arg, data = op
         if kind == "insert":
@@ -628,13 +657,3 @@ def recover(checkpoint_path: str | None = None, wal_path: str | None = None,
                     "log's prefix is missing; refusing to replay a gapped "
                     "log")
             h.expire(arg)                # idempotent
-
-    # re-attach durability so the recovered handle keeps serving durably
-    if wal_path is not None:
-        h._wal = WriteAheadLog(wal_path, eps=h.eps, min_pts=h.min_pts)
-    if checkpoint_path is not None:
-        h._ckpt_path = checkpoint_path
-    for k, v in handle_kwargs.items():
-        if k == "checkpoint_every":
-            h._ckpt_every = int(v)
-    return h

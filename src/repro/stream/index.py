@@ -68,6 +68,8 @@ import jax.numpy as jnp
 from repro.core import fdbscan, grid, lbvh, morton, traversal, unionfind
 from repro.core.fdbscan import DBSCANResult
 from repro.core.validate import check_points
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.stream import durability
 
 INT_MAX = traversal.INT_MAX
@@ -306,6 +308,12 @@ class StreamingDBSCAN:
 
     def query(self, pts) -> QueryResult:
         """Cluster assignment for probe points; never mutates the index."""
+        with obs_trace.span("stream.query"):
+            res = self._query_impl(pts)
+        obs_metrics.inc("stream_queries_total")
+        return res
+
+    def _query_impl(self, pts) -> QueryResult:
         qpts = self._check_pts(pts, grow=False)
         k = len(qpts)
         if k == 0 or self.n_active == 0:
@@ -339,8 +347,16 @@ class StreamingDBSCAN:
         *acknowledgment* — the batch survives a crash at any barrier.
         Raises ValueError for empty batches and NaN/Inf coordinates
         (nothing is logged or applied for a rejected batch)."""
+        with obs_trace.span("stream.insert"):
+            res = self._insert_impl(pts)
+        obs_metrics.inc("stream_inserts_total")
+        self._obs_gauges()
+        return res
+
+    def _insert_impl(self, pts) -> "StreamingDBSCAN":
         batch = self._check_pts(pts, grow=True)
         b = len(batch)
+        obs_metrics.inc("stream_inserted_points_total", float(b))
         durability.barrier("pre-insert")    # crash: batch never durable
         if self._wal is not None:
             self._wal.append(batch, self.n_points)
@@ -415,13 +431,16 @@ class StreamingDBSCAN:
         gids = gids[~self._tombstone[gids]]
         if len(gids) == 0:
             return 0
-        durability.barrier("pre-delete")    # crash: delete never durable
-        if self._wal is not None:
-            self._wal.append_delete(gids, self.n_points,
-                                    d=self._pts.shape[1])
-            durability.barrier("wal-durable-delete")
-        self._apply_delete(gids)
+        with obs_trace.span("stream.delete", k=len(gids)):
+            durability.barrier("pre-delete")  # crash: delete never durable
+            if self._wal is not None:
+                self._wal.append_delete(gids, self.n_points,
+                                        d=self._pts.shape[1])
+                durability.barrier("wal-durable-delete")
+            self._apply_delete(gids)
         self.n_deletes += 1
+        obs_metrics.inc("stream_deletes_total", float(len(gids)))
+        self._obs_gauges()
         return len(gids)
 
     def expire(self, watermark: int) -> int:
@@ -440,12 +459,15 @@ class StreamingDBSCAN:
         gids = np.flatnonzero(~self._tombstone[:wm])
         if len(gids) == 0:
             return 0
-        durability.barrier("pre-delete")
-        if self._wal is not None:
-            self._wal.append_expire(wm, d=self._pts.shape[1])
-            durability.barrier("wal-durable-delete")
-        self._apply_delete(gids)
+        with obs_trace.span("stream.expire", k=len(gids)):
+            durability.barrier("pre-delete")
+            if self._wal is not None:
+                self._wal.append_expire(wm, d=self._pts.shape[1])
+                durability.barrier("wal-durable-delete")
+            self._apply_delete(gids)
         self.n_deletes += 1
+        obs_metrics.inc("stream_expired_points_total", float(len(gids)))
+        self._obs_gauges()
         return len(gids)
 
     def merge(self) -> "StreamingDBSCAN":
@@ -462,13 +484,18 @@ class StreamingDBSCAN:
             return self                 # already a single clean main tier
         if len(act) == 0 and not self._tiers and self._buffer is None:
             return self
-        new_main = (self._build_level(self._pts[act], act)
-                    if len(act) else None)
-        durability.barrier("mid-merge")     # crash with the merge in
-        self._tiers = [new_main] if new_main is not None else []
-        self._buffer = None                 # flight: all in-memory, the
-        self._buffer_gids = np.zeros(0, np.int64)   # durable state is
-        self.n_merges += 1                  # unaffected
+        with obs_trace.span("stream.merge", n_active=len(act)) as sp:
+            new_main = (self._build_level(self._pts[act], act)
+                        if len(act) else None)
+            durability.barrier("mid-merge")  # crash with the merge in
+            self._tiers = [new_main] if new_main is not None else []
+            self._buffer = None             # flight: all in-memory, the
+            self._buffer_gids = np.zeros(0, np.int64)   # durable state is
+            self.n_merges += 1              # unaffected
+            if new_main is not None:
+                sp.watch(new_main.segs, new_main.tree)
+        obs_metrics.inc("stream_merges_total")
+        self._obs_gauges()
         self._merges_since_ckpt += 1
         if (self._ckpt_path is not None and self._ckpt_every
                 and self._merges_since_ckpt >= self._ckpt_every):
@@ -481,9 +508,11 @@ class StreamingDBSCAN:
         same-size-class tier merges (classes grow ``growth``-fold from
         ``buffer_max``).  Like :meth:`merge` this is index-only and drops
         tombstoned rows — label-invariant on survivors."""
-        self._seal_buffer()
-        self._drop_dead_tiers()
-        self._cascade()
+        with obs_trace.span("stream.compact"):
+            self._seal_buffer()
+            self._drop_dead_tiers()
+            self._cascade()
+        self._obs_gauges()
         return self
 
     def snapshot(self, *, star: bool = False) -> DBSCANResult:
@@ -492,6 +521,12 @@ class StreamingDBSCAN:
         surviving points: exact core mask, exact noise set, identical
         core partition; border points take the min adjacent core
         representative. ``star=True`` is DBSCAN* (no border points)."""
+        with obs_trace.span("stream.snapshot", star=star) as sp:
+            res = self._snapshot_impl(star=star)
+            sp.watch(res.labels, res.core_mask)
+        return res
+
+    def _snapshot_impl(self, *, star: bool) -> DBSCANResult:
         act = np.flatnonzero(~self._tombstone)
         if len(act) == 0:
             return DBSCANResult(labels=jnp.zeros(0, jnp.int32),
@@ -547,7 +582,8 @@ class StreamingDBSCAN:
         if path is None:
             raise ValueError("no checkpoint path: pass one to checkpoint() "
                              "or build the handle with checkpoint_path=")
-        manifest = durability.save_checkpoint(self, path)
+        with obs_trace.span("stream.checkpoint", path=path):
+            manifest = durability.save_checkpoint(self, path)
         if (self._ckpt_path is not None
                 and os.path.realpath(path) == os.path.realpath(self._ckpt_path)):
             self._merges_since_ckpt = 0
@@ -712,6 +748,16 @@ class StreamingDBSCAN:
         self._counts, self._core, self._labels = counts, core, labels
         self._tiers = [_Level(segs, tree, order)]
 
+    def _obs_gauges(self) -> None:
+        """Mirror the handle's occupancy into the active registry
+        (DESIGN.md §12); a no-op when no collector is installed."""
+        if obs_metrics.active() is None:
+            return
+        obs_metrics.set_gauge("stream_active_points", float(self.n_active))
+        obs_metrics.set_gauge("stream_tombstoned_points",
+                              float(self.n_tombstoned))
+        obs_metrics.set_gauge("stream_tiers", float(self.n_tiers))
+
     def _levels(self):
         yield from self._tiers
         if self._buffer is not None:
@@ -742,6 +788,7 @@ class StreamingDBSCAN:
         if len(bg):
             self._tiers.append(self._build_level(self._pts[bg], bg))
             self.n_compactions += 1
+            obs_metrics.inc("stream_compactions_total", kind="seal")
 
     def _tier_class(self, live: int) -> int:
         """Geometric size class of a tier: smallest c with
@@ -768,6 +815,7 @@ class StreamingDBSCAN:
             self._tiers = self._tiers[:-2] + (      # durable state is
                 [new] if new is not None else [])   # unaffected
             self.n_compactions += 1
+            obs_metrics.inc("stream_compactions_total", kind="cascade")
 
     def _drop_dead_tiers(self) -> None:
         """Rewrite (or drop) tiers whose tombstone fraction reached
@@ -782,6 +830,7 @@ class StreamingDBSCAN:
                 continue
             durability.barrier("mid-compaction")
             self.n_compactions += 1
+            obs_metrics.inc("stream_compactions_total", kind="rewrite")
             live = g[~self._tombstone[g]]
             if len(live):
                 out.append(self._build_level(self._pts[live], live))
@@ -1004,25 +1053,27 @@ class StreamingDBSCAN:
         gather = core               # sweep 1 gathers over every core point
         labels = self._labels
         first = True
-        while True:
-            q = np.flatnonzero(q_mask)
-            if len(q) == 0:
-                break
-            acc = np.full(len(q), INT_MAX, np.int32)
-            for lvl in self._levels():
-                acc, _ = self._run(lvl, self._pts[q], labels, gather, acc,
-                                   mode="minlabel")
-            new = labels.copy()
-            new[q] = np.minimum(labels[q], acc)
-            new = unionfind.jump_to_fixpoint_np(new)
-            changed = new != labels
-            if first and seed_new:  # seed labels are new to the pool:
-                changed |= q_mask   # neighbors must gather them once
-            first = False
-            labels = new
-            self.n_repair_sweeps += 1
-            if not changed.any():
-                break
-            gather = changed & core
-            q_mask = core & fdbscan._near_changed(keys, d, changed)
+        with obs_trace.span("stream.repair", seed=int(q_mask.sum())):
+            while True:
+                q = np.flatnonzero(q_mask)
+                if len(q) == 0:
+                    break
+                acc = np.full(len(q), INT_MAX, np.int32)
+                for lvl in self._levels():
+                    acc, _ = self._run(lvl, self._pts[q], labels, gather,
+                                       acc, mode="minlabel")
+                new = labels.copy()
+                new[q] = np.minimum(labels[q], acc)
+                new = unionfind.jump_to_fixpoint_np(new)
+                changed = new != labels
+                if first and seed_new:  # seed labels are new to the pool:
+                    changed |= q_mask   # neighbors must gather them once
+                first = False
+                labels = new
+                self.n_repair_sweeps += 1
+                obs_metrics.inc("stream_repair_sweeps_total")
+                if not changed.any():
+                    break
+                gather = changed & core
+                q_mask = core & fdbscan._near_changed(keys, d, changed)
         self._labels = labels

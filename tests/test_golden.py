@@ -129,6 +129,58 @@ def test_engine_counts_bit_identical(dset):
     np.testing.assert_array_equal(counts, GOLDEN[f"{dset}/counts"])
 
 
+# --------------------------------------------------------------------- #
+# observer effect (DESIGN.md §12): instrumentation changes nothing      #
+# --------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("backend", ["fdbscan", "fdbscan-densebox",
+                                     "tiled", "pallas-tree"])
+def test_observer_effect_batch_bit_identical(backend):
+    # the same golden assertions as above, but with a live registry and
+    # a sync tracer installed: results must stay byte-identical, and the
+    # collectors must actually have seen the run (a silently-dead
+    # instrumentation path would also pass the equality half)
+    from repro import obs
+    dset, n, eps, mp = _case("portotaxi_like")
+    pts = pointclouds.load(dset, n)
+    with obs.instrumented(sync=True) as (reg, tr):
+        res = dbscan(pts, eps, mp, algorithm=backend)
+    golden = "fdbscan" if backend == "pallas-tree" else backend
+    _assert_result(dset, golden, res)
+    if backend in ("fdbscan", "fdbscan-densebox", "pallas-tree"):
+        assert res.n_sweeps == int(GOLDEN[f"{dset}/{golden}/n_sweeps"])
+    assert reg.get("dbscan_runs_total", backend=res.backend).value == 1
+    spans = {e["name"] for e in tr.events}
+    if backend != "tiled":      # tree backends expose the phase spans
+        assert {"plan", "dbscan", "traverse", "sweep"} <= spans
+    if backend == "pallas-tree":
+        fam = reg._families.get("pallas_kernel_launches_total")
+        assert fam is not None
+        assert sum(c.value for c in fam._children.values()) >= 1
+
+
+def test_observer_effect_stream_bit_identical():
+    from repro import obs
+    dset, n, eps, mp = _case("blobs")
+    pts = pointclouds.load(dset, n)
+    cut = n * 5 // 8
+    with obs.instrumented(sync=True) as (reg, tr):
+        h = stream_handle(pts[:cut], eps, mp)
+        h.insert(pts[cut:cut + (n - cut) // 2])
+        h.insert(pts[cut + (n - cut) // 2:])
+        h.merge()
+        res = h.snapshot()
+    np.testing.assert_array_equal(np.asarray(res.labels),
+                                  GOLDEN[f"{dset}/stream/labels"])
+    np.testing.assert_array_equal(np.asarray(res.core_mask),
+                                  GOLDEN[f"{dset}/stream/core"])
+    assert res.n_clusters == int(GOLDEN[f"{dset}/stream/n_clusters"])
+    assert reg.get("stream_inserts_total").value == 2
+    assert reg.get("stream_merges_total").value >= 1
+    assert {"stream.insert", "stream.merge", "stream.snapshot"} <= \
+        {e["name"] for e in tr.events}
+
+
 @pytest.mark.parametrize("dset", SHARDED)
 def test_sharded_backend_bit_identical(dset):
     # the eps-halo external-query path, under 8 forced host devices
