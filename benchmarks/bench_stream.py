@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import time
 
 import numpy as np
 
@@ -108,23 +109,17 @@ def insert_vs_full(n: int = 32768, quick: bool = False) -> dict:
     return rec
 
 
-def mixed_workload(cfg=MIXED, validate: bool = True) -> dict:
-    """The deterministic insert/delete/window trace; returns wall times
-    plus the exact dynamic-work counters the regression gate pins."""
-    from repro.core import dispatch
-    from repro.core.validate import check_component_identical
-    from repro.data import pointclouds
+def _mixed_trace(pts, cfg):
+    """One full run of the deterministic insert/delete/window trace;
+    returns (handle, bootstrap_s, insert_times, delete_times)."""
     from repro.stream import StreamingDBSCAN
 
     n, W, B = cfg["n"], cfg["window"], cfg["batch"]
-    pts = pointclouds.taxi_2d(n)
     rng = np.random.default_rng(cfg["seed"])
     n0 = n // 2
-
     boot_s, h = time_once(StreamingDBSCAN, pts[:n0], EPS, MINPTS, window=W,
                           buffer_max=cfg["buffer_max"],
                           label="stream/mixed_bootstrap")
-
     insert_times, delete_times = [], []
     step = 0
     for lo in range(n0, n, B):
@@ -138,6 +133,34 @@ def mixed_workload(cfg=MIXED, validate: bool = True) -> dict:
             gids = np.sort(rng.choice(alive, size=k, replace=False))
             dt, _ = time_once(h.delete, gids, label="stream/mixed_delete")
             delete_times.append(dt)
+    return h, boot_s, insert_times, delete_times
+
+
+def mixed_workload(cfg=MIXED, validate: bool = True) -> dict:
+    """The deterministic insert/delete/window trace; returns wall times
+    plus the exact dynamic-work counters the regression gate pins.
+
+    The trace runs **twice** with the same seed: the stream grows through
+    a fresh padded level shape every few batches, so a single cold pass
+    charges one jit compile to an unlucky subset of inserts (p50 in the
+    hundreds of ms — a compile artifact, not serving cost).  Pass 1 warms
+    every (shape, program) pair and is reported separately as
+    ``warmup_wall_s``; pass 2 replays the identical trace compile-free
+    and is what the latency fields measure.  The deterministic counters
+    are identical in both passes.
+    """
+    from repro.core import dispatch
+    from repro.core.validate import check_component_identical
+    from repro.data import pointclouds
+
+    n, W, B = cfg["n"], cfg["window"], cfg["batch"]
+    pts = pointclouds.taxi_2d(n)
+
+    t0 = time.perf_counter()
+    _mixed_trace(pts, cfg)                       # pass 1: compile warmup
+    warmup_s = time.perf_counter() - t0
+
+    h, boot_s, insert_times, delete_times = _mixed_trace(pts, cfg)
 
     snap_s, snap = time_once(h.snapshot, label="stream/mixed_snapshot")
 
@@ -152,8 +175,10 @@ def mixed_workload(cfg=MIXED, validate: bool = True) -> dict:
         "seed": cfg["seed"], "buffer_max": cfg["buffer_max"],
         "delete_every": cfg["delete_every"],
         "delete_frac": cfg["delete_frac"],
-        "bootstrap_wall_s": boot_s,
+        "warmup_wall_s": warmup_s,          # pass 1: compiles + first run
+        "bootstrap_wall_s": boot_s,         # everything below: steady state
         "insert_p50_ms": float(np.median(insert_times)) * 1e3,
+        "insert_p99_ms": float(np.quantile(insert_times, 0.99)) * 1e3,
         "delete_p50_ms": (float(np.median(delete_times)) * 1e3
                           if delete_times else float("nan")),
         "snapshot_wall_s": snap_s,

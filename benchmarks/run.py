@@ -157,6 +157,35 @@ def check() -> None:
     else:
         print("check,stream,-,-,-,skipped (no BENCH_stream.json)")
 
+    serve_path = os.path.join(REPO, "BENCH_serve.json")
+    if os.path.exists(serve_path):
+        with open(serve_path) as f:
+            committed = json.load(f)
+        from . import bench_serve
+        ref = committed["snapshot_vs_handle_check"]
+        if (ref["eps"], ref["minpts"], ref["n"]) != \
+                (bench_serve.EPS, bench_serve.MINPTS, bench_serve.CHECK_N):
+            failures.append(
+                "serve/snapshot_vs_handle_check: workload drifted "
+                f"(committed n={ref['n']} eps={ref['eps']}/minpts="
+                f"{ref['minpts']}) — regenerate BENCH_serve.json")
+        else:
+            # steady-state jit stability is exact: zero new programs, gated
+            # as an equality (committed 0 + threshold still pins got <= 1)
+            rec = bench_serve.recompile_steadystate()
+            _check_ratio(failures, "serve/recompiles/new_programs_steady",
+                         rec["new_programs_steady"],
+                         committed["recompiles"]["new_programs_steady"])
+            # snapshot-vs-handle speedup: both engines re-measured
+            # interleaved, gated as an inverted ratio-of-ratios (bigger
+            # speedup is better, so a drop shows up as ratio > threshold)
+            got = bench_serve.snapshot_vs_handle(n=ref["n"])
+            _check_ratio(failures, "serve/snapshot_vs_handle/speedup",
+                         1.0 / got["speedup"], 1.0 / ref["speedup"],
+                         floor=1e-9)
+    else:
+        print("check,serve,-,-,-,skipped (no BENCH_serve.json)")
+
     if failures:
         print("# REGRESSION GATE FAILED:", file=sys.stderr)
         for f_ in failures:
@@ -173,7 +202,8 @@ def main() -> None:
                          "against the committed BENCH_*.json files")
     ap.add_argument("--only", default=None,
                     help="comma list: minpts,eps,scaling,cosmo,memory,"
-                         "phase,kernels,dist_evals,distributed,stream")
+                         "phase,kernels,dist_evals,distributed,stream,"
+                         "serve")
     args = ap.parse_args()
     if args.check:
         check()
@@ -183,7 +213,8 @@ def main() -> None:
 
     from . import (bench_cosmo, bench_distance_evals, bench_distributed,
                    bench_eps, bench_kernels, bench_memory, bench_minpts,
-                   bench_phase_cost, bench_scaling, bench_stream)
+                   bench_phase_cost, bench_scaling, bench_serve,
+                   bench_stream)
     suites = {
         "minpts": lambda: bench_minpts.run(n=16384 if args.full else 2048,
                                            quick=quick),
@@ -214,6 +245,9 @@ def main() -> None:
         # for the >=5x wall-clock claim recorded in BENCH_stream.json
         "stream": lambda: bench_stream.run(n=32768 if args.full else 4096,
                                            quick=quick),
+        # the serving plane: snapshot-vs-handle speedup (>= 50x), open-loop
+        # multi-tenant aggregate throughput, and the zero-recompile witness
+        "serve": lambda: bench_serve.run(quick=quick),
     }
     print("name,us_per_call,derived")
     t0 = time.time()

@@ -73,6 +73,7 @@ def generate() -> str:
     from repro.core import neighbors
     from repro.kernels import traverse as pallas_traverse
     from repro.stream import StreamingDBSCAN, durability
+    from repro import serve
 
     parts = [HEADER]
 
@@ -105,6 +106,37 @@ def generate() -> str:
                         durability.CheckpointError, kind="class"))
     parts.append(_entry("durability.WALError", durability.WALError,
                         kind="class"))
+
+    parts.append("## Serving (`repro.serve`)\n")
+    parts.append(_doc(serve) + "\n")
+    parts.append(_entry("serve.Server", serve.Server, kind="class"))
+    parts.extend(_method_entries(
+        serve.Server,
+        ["restore", "submit_query", "query", "submit_insert", "insert",
+         "stats", "shutdown", "tenants"],
+        "Server"))
+    parts.append(_entry("serve.ServerConfig", serve.ServerConfig,
+                        kind="class"))
+    parts.append(_entry("serve.QueryReply", serve.QueryReply, kind="class"))
+    parts.append(_entry("serve.InsertReply", serve.InsertReply,
+                        kind="class"))
+    parts.append(_entry("serve.TenantSpec", serve.TenantSpec, kind="class"))
+    parts.append(_entry("serve.IndexSnapshot", serve.IndexSnapshot,
+                        kind="class"))
+    parts.extend(_method_entries(
+        serve.IndexSnapshot, ["build", "query", "stats"], "IndexSnapshot"))
+    parts.append(_entry("serve.freeze", serve.freeze))
+    parts.append(_entry("serve.SnapshotStore", serve.SnapshotStore,
+                        kind="class"))
+    parts.extend(_method_entries(
+        serve.SnapshotStore, ["current", "get", "publish", "version"],
+        "SnapshotStore"))
+    parts.append(_entry("serve.MicroBatcher", serve.MicroBatcher,
+                        kind="class"))
+    parts.append(_entry("serve.bucket_size", serve.bucket_size))
+    parts.append(_entry("serve.AdmissionController",
+                        serve.AdmissionController, kind="class"))
+    parts.append(_entry("serve.Overloaded", serve.Overloaded, kind="class"))
 
     parts.append("## Neighbor queries (`repro.neighbors`)\n")
     parts.append(_doc(neighbors) + "\n")

@@ -469,3 +469,32 @@ def stream_handle(points, eps: float, min_pts: int, *,
                            index=(p.segs, p.tree), window=window, wal=wal,
                            checkpoint_path=checkpoint_path,
                            checkpoint_every=checkpoint_every, **kwargs)
+
+
+def tenant_handles(points, tenants: dict) -> dict:
+    """Build one streaming handle per tenant over ONE shared index build.
+
+    ``tenants`` maps tenant name -> kwargs for :func:`stream_handle`
+    (``eps`` and ``min_pts`` required; durability/window/compaction
+    options per tenant).  The eps-independent part of the bootstrap —
+    the Morton sort + LBVH over ``points`` — is cached under the point
+    set's content hash, so N tenants cost one index build plus N
+    eps-dependent clusterings; ``dispatch_index_builds_total`` moves by
+    exactly one however many tenants share the point set.  This is the
+    serving plane's multi-tenant entry point
+    (:func:`repro.serve.tenants.build_views`).
+    """
+    if not tenants:
+        raise ValueError("tenant_handles needs at least one tenant")
+    points = jnp.asarray(points)
+    handles = {}
+    with obs_trace.span("plan.tenants", n_tenants=len(tenants)):
+        for name, kw in tenants.items():
+            kw = dict(kw)
+            try:
+                eps = kw.pop("eps")
+                min_pts = kw.pop("min_pts")
+            except KeyError as e:
+                raise ValueError(f"tenant {name!r}: missing {e} in spec")
+            handles[name] = stream_handle(points, eps, min_pts, **kw)
+    return handles

@@ -46,17 +46,68 @@ insert pool degrades to query-only service (dropped insert requests are
 counted, not fatal), malformed request batches (NaN/Inf coordinates) are
 rejected by the validation gate and counted instead of corrupting the
 index, and ``--validate`` failures exit non-zero with a readable error.
+
+Multi-tenant server mode (DESIGN.md §13): ``--tenants name:eps:min_pts[,
+...]`` swaps the bare handle for :class:`repro.serve.Server` — adaptive
+micro-batching, immutable versioned snapshots, per-tenant views over one
+shared index build, and admission control.  ``--durability-dir DIR``
+gives every tenant its own WAL + checkpoint files there, and
+``--restore`` recovers the whole server from them:
+
+  PYTHONPATH=src python -m repro.launch.serve --dataset blobs --n 8192 \
+      --tenants tight:0.02:10,coarse:0.05:5 --steps 40 \
+      --durability-dir /tmp/serve-state
+
+Graceful shutdown (both modes): SIGTERM or Ctrl-C finishes the request
+in flight, drains everything already admitted, writes a final durable
+checkpoint, prints the summary, and exits 0 — a supervisor's ``kill``
+is a clean restart, never data loss.
 """
 from __future__ import annotations
 
 import argparse
+import signal
 import sys
+import threading
 import time
 
 import numpy as np
 
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
+
+
+def _install_shutdown() -> threading.Event:
+    """Route SIGTERM/SIGINT into a drain flag (main thread only; worker
+    threads and embedded callers are unaffected)."""
+    ev = threading.Event()
+
+    def _handler(signum, frame):
+        if ev.is_set():              # second signal: operator insists
+            raise KeyboardInterrupt
+        ev.set()
+        print(f"[serve] caught {signal.Signals(signum).name}: draining, "
+              "will checkpoint and exit 0", file=sys.stderr)
+
+    try:
+        signal.signal(signal.SIGTERM, _handler)
+        signal.signal(signal.SIGINT, _handler)
+    except ValueError:               # not the main thread (embedded use)
+        pass
+    return ev
+
+
+def _parse_tenants(spec: str):
+    """``name:eps:min_pts[,name:eps:min_pts...]`` -> TenantSpec list."""
+    from repro.serve import TenantSpec
+    out = []
+    for part in spec.split(","):
+        bits = part.strip().split(":")
+        if len(bits) != 3:
+            raise ValueError(f"bad tenant spec {part!r}: want "
+                             "name:eps:min_pts")
+        out.append(TenantSpec(bits[0], float(bits[1]), int(bits[2])))
+    return out
 
 
 def _q_ms(reg, name: str, q: float) -> float:
@@ -119,12 +170,29 @@ def main(argv=None):
                     "marked in the trace); default: never block")
     ap.add_argument("--stats-every", type=int, default=0, metavar="K",
                     help="print registry-derived latency stats every K steps")
+    ap.add_argument("--tenants", default=None, metavar="SPECS",
+                    help="multi-tenant server mode: name:eps:min_pts[,...] "
+                    "— serve every view over one shared index via "
+                    "repro.serve.Server (ignores --eps/--min-pts)")
+    ap.add_argument("--durability-dir", default=None, metavar="DIR",
+                    help="server mode: per-tenant WAL + checkpoint files "
+                    "live here (<name>.wal / <name>.npz)")
+    ap.add_argument("--max-delay-ms", type=float, default=2.0,
+                    help="server mode: micro-batching deadline — the "
+                    "longest a query may wait for co-travelers")
     args = ap.parse_args(argv)
 
-    if args.restore and not (args.checkpoint or args.wal):
-        ap.error("--restore needs --checkpoint and/or --wal")
-    if args.checkpoint_every and not args.checkpoint:
-        ap.error("--checkpoint-every needs --checkpoint")
+    if args.tenants:
+        if args.wal or args.checkpoint:
+            ap.error("server mode persists per tenant: use "
+                     "--durability-dir, not --wal/--checkpoint")
+        if args.restore and not args.durability_dir:
+            ap.error("--restore in server mode needs --durability-dir")
+    else:
+        if args.restore and not (args.checkpoint or args.wal):
+            ap.error("--restore needs --checkpoint and/or --wal")
+        if args.checkpoint_every and not args.checkpoint:
+            ap.error("--checkpoint-every needs --checkpoint")
 
     # The serving loop always collects into its own registry (bounded
     # histograms replace the old unbounded all-time latency lists); the
@@ -137,6 +205,8 @@ def main(argv=None):
     if args.trace:
         tracer = obs_trace.install(sync=args.trace_sync)
     try:
+        if args.tenants:
+            return _serve_multi(args, reg, tracer)
         return _serve(args, reg, tracer)
     finally:
         obs_metrics.install(prev_reg) if prev_reg is not None \
@@ -204,8 +274,14 @@ def _serve(args, reg, tracer):
     # shape warmup (compile once, outside the latency measurements)
     handle.query(query_batch())
 
+    stop = _install_shutdown()
     n_ins = n_q = n_dropped = n_rejected = 0
     for step in range(args.steps):
+        if stop.is_set():
+            # graceful drain: stop taking new steps; the epilogue below
+            # still checkpoints and reports, and we exit 0
+            print(f"[serve] drained after {step} steps", file=sys.stderr)
+            break
         want_insert = rng.random() < args.insert_frac
         if want_insert and pool_off >= len(pool):
             # Insert stream ran dry: a real server keeps answering queries.
@@ -325,6 +401,109 @@ def _serve(args, reg, tracer):
                   f"points — {e}", file=sys.stderr)
             raise SystemExit(1)
         print("[serve] validation against batch dbscan ✓")
+    return stats
+
+
+def _serve_multi(args, reg, tracer):
+    """Multi-tenant server mode: drive a :class:`repro.serve.Server`.
+
+    Each step fires a burst of query requests (round-robin over tenants,
+    sized ``--batch`` split across 4 requests so the micro-batcher has
+    something to coalesce) and with probability ``--insert-frac`` one
+    insert batch.  SIGTERM/Ctrl-C drains admitted work, checkpoints every
+    tenant, and exits 0.
+    """
+    from repro.data import pointclouds
+    from repro.serve import Overloaded, Server, ServerConfig
+
+    specs = _parse_tenants(args.tenants)
+    pts = pointclouds.load(args.dataset, args.n, seed=args.seed)
+    n0 = max(2, int(args.n * args.warm_frac))
+    initial, pool = pts[:n0], pts[n0:]
+    rng = np.random.default_rng(args.seed)
+    B, d = args.batch, pts.shape[1]
+    cfg = ServerConfig(max_batch=max(B, 64),
+                       max_delay_s=args.max_delay_ms * 1e-3)
+
+    t0 = time.perf_counter()
+    if args.restore:
+        srv = Server.restore(specs, durability_dir=args.durability_dir,
+                             config=cfg, window=args.window,
+                             checkpoint_every=args.checkpoint_every)
+        pool_off = min(max(srv._views[0].handle.n_points - n0, 0), len(pool))
+        print(f"[serve] restored {len(specs)} tenants at watermark "
+              f"{srv._views[0].handle.n_points} in "
+              f"{time.perf_counter() - t0:.2f}s")
+    else:
+        srv = Server(initial, specs, config=cfg,
+                     durability_dir=args.durability_dir,
+                     window=args.window,
+                     checkpoint_every=args.checkpoint_every)
+        pool_off = 0
+        print(f"[serve] bootstrap n={n0}, {len(specs)} tenants over one "
+              f"shared index in {time.perf_counter() - t0:.2f}s")
+
+    def query_batch(k):
+        idx = rng.integers(0, len(pts), k)
+        eps0 = specs[0].eps
+        jitter = rng.normal(0.0, 0.2 * eps0, (k, d)).astype(np.float32)
+        return pts[idx] + jitter
+
+    stop = _install_shutdown()
+    n_q = n_ins = n_shed = 0
+    steps = 0
+    with srv:
+        for step in range(args.steps):
+            if stop.is_set():
+                print(f"[serve] drained after {step} steps",
+                      file=sys.stderr)
+                break
+            steps = step + 1
+            futs = []
+            per = max(B // 4, 1)
+            for j in range(4):
+                spec = specs[(step * 4 + j) % len(specs)]
+                try:
+                    futs.append(srv.submit_query(query_batch(per),
+                                                 tenant=spec.name))
+                except Overloaded:
+                    n_shed += 1
+            if rng.random() < args.insert_frac and pool_off < len(pool):
+                take = pool[pool_off:pool_off + per]
+                pool_off += len(take)
+                try:
+                    srv.insert(take, timeout=120)
+                    n_ins += len(take)
+                except Overloaded:
+                    n_shed += 1
+            for f in futs:
+                f.result(timeout=120)
+                n_q += per
+            if args.stats_every and steps % args.stats_every == 0:
+                st = srv.stats()
+                print(f"[serve] step {steps}: query p50 "
+                      f"{st['query_p50_s'] * 1e3:.1f}ms p99 "
+                      f"{st['query_p99_s'] * 1e3:.1f}ms, shed {st['shed']}")
+        stats = srv.stats()
+        # context exit: admission closes, planes drain, final per-tenant
+        # checkpoint through the durability path
+    stats.update(steps=steps, n_queried=n_q, n_inserted=n_ins,
+                 n_overloaded=n_shed)
+    vers = {t["name"]: t["version"] for t in stats["tenants"]}
+    print(f"[serve] served {steps} steps across {len(specs)} tenants: "
+          f"{n_q} probes, {n_ins} inserts, {n_shed} shed; "
+          f"versions {vers}")
+    print(f"[serve] query p50 {stats['query_p50_s'] * 1e3:.1f}ms "
+          f"p99 {stats['query_p99_s'] * 1e3:.1f}ms; "
+          f"insert p50 {stats['insert_p50_s'] * 1e3:.1f}ms")
+
+    if args.metrics_json:
+        obs_metrics.validate_snapshot(reg.write_json(args.metrics_json))
+        print(f"[serve] metrics snapshot -> {args.metrics_json}")
+    if tracer is not None and args.trace:
+        doc = tracer.export(args.trace)
+        print(f"[serve] Chrome trace ({len(doc['traceEvents'])} events) "
+              f"-> {args.trace}")
     return stats
 
 

@@ -1,0 +1,33 @@
+"""repro.serve — the serving subsystem (DESIGN.md §13).
+
+Turns the streaming index into a long-lived multi-tenant service:
+
+  * :mod:`repro.serve.batching` — continuous adaptive micro-batching on
+    the shared jit bucket ladder;
+  * :mod:`repro.serve.snapshot` — immutable versioned index snapshots
+    with atomic swap (queries never block behind writes);
+  * :mod:`repro.serve.tenants` — per-(eps, min_pts) views sharing one
+    cached index build;
+  * :mod:`repro.serve.admission` — bounded queues, typed load shedding,
+    latency SLO sketches;
+  * :mod:`repro.serve.server` — the :class:`Server` tying the planes
+    together, with graceful shutdown and crash recovery.
+
+``python -m repro.launch.serve`` is the CLI; ``benchmarks/bench_serve.py``
+measures the plane and commits ``BENCH_serve.json``.
+"""
+from repro.serve.admission import AdmissionController, Overloaded
+from repro.serve.batching import MicroBatcher, bucket_size
+from repro.serve.server import InsertReply, QueryReply, Server, ServerConfig
+from repro.serve.snapshot import (FrozenState, IndexSnapshot, SnapshotStore,
+                                  freeze)
+from repro.serve.tenants import TenantSpec, TenantView, build_views, \
+    restore_views
+
+__all__ = [
+    "Server", "ServerConfig", "QueryReply", "InsertReply",
+    "TenantSpec", "TenantView", "build_views", "restore_views",
+    "IndexSnapshot", "SnapshotStore", "FrozenState", "freeze",
+    "AdmissionController", "Overloaded",
+    "MicroBatcher", "bucket_size",
+]

@@ -1,0 +1,358 @@
+"""Immutable versioned index snapshots for the serving plane (DESIGN.md §13).
+
+The streaming handle's ``query`` walks the live tiered LBVH index —
+correct under mutation, but every probe pays a divergent tree walk and
+the walk shares its arrays with the writer.  The serving plane instead
+freezes the handle into an :class:`IndexSnapshot`: an immutable,
+eps-specialized *cell-summary grid* over exactly the active points, with
+precomputed per-cell aggregates chosen so that the vast majority of
+probes are answered from ~5^d cell summaries without touching a single
+resident point.
+
+Geometry (paper §3's eps-grid, specialized to read-only serving):
+
+  * cell width ``w = eps / sqrt(d)`` — the cell diagonal is exactly eps,
+    so every probe's eps-ball is covered by the 5^d block of cells at
+    offsets in [-2, 2]^d around its own cell;
+  * points are sorted by row-major cell key (contiguous runs along the
+    last axis), with per-unique-cell ``counts`` and ``core-min-label``
+    aggregates (non-core residents carry ``INT_MAX`` so the min is over
+    core points only — exactly the ``QueryResult.labels`` semantics);
+  * per probe, each candidate cell is classified against the eps-ball in
+    float64 box arithmetic with a conservative relative margin ``PAD``:
+    **inside** (``dmax^2 <= eps^2 (1-PAD)`` — every resident of the cell
+    is provably within eps under float32 rounding), **partial**
+    (``dmin^2 <= eps^2 (1+PAD)`` — may contribute), or skipped;
+  * a probe needs exact point tests only when the inside-cell count has
+    not yet saturated at ``min_pts`` while partial cells exist, or when
+    a partial cell could still lower the label minimum.  On the serving
+    workloads this flags ~5-10% of probes; the rest are answered from
+    summaries alone.  Flagged probes run an exact float32 pass over
+    their *partial* cells only (inside cells are already exactly
+    counted), gathered ragged so the work is proportional to the points
+    actually touched — on heavy-tailed data a padded gather would let
+    one dense cell inflate the whole chunk.
+
+The margins make the classification *conservative*, never wrong: any
+boundary-ambiguous cell is point-tested with the same float32 distance
+arithmetic the traversal engine uses, so snapshot answers are
+bit-identical to ``StreamingDBSCAN.query`` on the frozen state (the
+equivalence tests pin this on every dataset/eps the suite runs).
+
+:class:`SnapshotStore` holds the *published* snapshot behind an atomic
+reference swap: readers grab the current snapshot with one attribute
+load (no lock on the read path) and keep using it for a whole batch even
+if the writer publishes ten newer versions meanwhile — queries are never
+blocked behind inserts, merges, or compactions, and a failed rebuild
+simply never publishes (the old version keeps serving).
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from typing import NamedTuple
+
+import numpy as np
+
+from repro.core.validate import check_points
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.stream import durability
+from repro.stream.index import QueryResult
+
+INT_MAX = np.int64(2**31 - 1)
+
+# Relative classification margin: boundary-ambiguous cells (within
+# eps^2 * PAD of the threshold) are demoted to exact point tests, so
+# float32 rounding in the reference distance arithmetic can never
+# disagree with a float64 box classification.
+PAD = 1e-5
+
+# Candidate-cell offset range per axis: w = eps/sqrt(d) keeps the
+# eps-ball inside [-2, 2]^d for d in (2, 3).
+_RANGE = 2
+
+# Exact-pass probes are processed in chunks, bounding the ragged gather's
+# peak memory (sum of partial-cell populations per chunk).
+_EXACT_CHUNK = 256
+
+
+class FrozenState(NamedTuple):
+    """What :meth:`repro.stream.StreamingDBSCAN.freeze_view` exports: the
+    active points with their serving values, plus the stream position."""
+    pts: np.ndarray        # (n_active, d) float32, insertion order
+    vals: np.ndarray       # (n_active,) int64: core -> component-min gid
+                           # label; non-core -> INT_MAX
+    watermark: int         # stream n_points at freeze time
+    n_tombstoned: int
+
+
+class IndexSnapshot:
+    """An immutable, eps-specialized read-only view of the index.
+
+    Built by :func:`freeze` (or :meth:`build`); never mutated afterwards
+    — the serving plane swaps whole snapshots, it does not edit them.
+    """
+
+    def __init__(self, pts: np.ndarray, vals: np.ndarray, eps: float,
+                 min_pts: int, *, version: int = 0, watermark: int = 0):
+        if eps <= 0:
+            raise ValueError(f"snapshot needs eps > 0; got {eps}")
+        if min_pts < 1:
+            raise ValueError(f"min_pts must be >= 1; got {min_pts}")
+        pts = np.ascontiguousarray(pts, np.float32)
+        vals = np.ascontiguousarray(vals, np.int64)
+        if pts.ndim != 2 or pts.shape[1] not in (2, 3):
+            raise ValueError(f"snapshot needs (n, 2|3) points; got "
+                             f"{pts.shape}")
+        if len(vals) != len(pts):
+            raise ValueError(f"vals/pts length mismatch: {len(vals)} vs "
+                             f"{len(pts)}")
+        self.eps = float(eps)
+        self.min_pts = int(min_pts)
+        self.version = int(version)
+        self.watermark = int(watermark)
+        self.n_points = len(pts)
+        self.d = int(pts.shape[1])
+        self._eps2 = np.float32(np.float32(eps) ** 2)
+        if self.n_points == 0:
+            return
+        d = self.d
+        self._w = float(eps) / np.sqrt(d)
+        self._lo = pts.min(0).astype(np.float64) - 3.0 * float(eps)
+        cell = np.floor((pts.astype(np.float64) - self._lo)
+                        / self._w).astype(np.int64)
+        # per-axis cell-space extents (+5 slack so every resident's
+        # [-2, 2]^d neighborhood stays strictly in range)
+        self._nc = cell.max(0) + 5
+        key = cell[:, 0]
+        for i in range(1, d):
+            key = key * self._nc[i] + cell[:, i]
+        order = np.argsort(key, kind="stable")
+        self._keys = key[order]
+        self._pts = np.ascontiguousarray(pts[order], np.float32)
+        self._vals = np.ascontiguousarray(vals[order], np.int64)
+        self._uk, self._starts, self._cnts = np.unique(
+            self._keys, return_index=True, return_counts=True)
+        self._cmin = np.minimum.reduceat(self._vals, self._starts)
+        # candidate offsets, pruned by the worst-case (corner) box
+        # distance — an offset whose nearest box face exceeds eps for
+        # every in-cell probe position can never contribute
+        w2 = self._w * self._w
+        offs = []
+        for o in itertools.product(range(-_RANGE, _RANGE + 1), repeat=d):
+            near2 = sum(max(abs(oi) - 1, 0) ** 2 for oi in o) * w2
+            if near2 <= float(self._eps2) * (1 + PAD):
+                offs.append(o)
+        self._offs = np.array(offs, np.int64)               # (K, d)
+
+    # ------------------------------------------------------------------ #
+
+    @classmethod
+    def build(cls, state: FrozenState, eps: float, min_pts: int, *,
+              version: int = 0) -> "IndexSnapshot":
+        """Build a snapshot from a handle's :class:`FrozenState`."""
+        return cls(state.pts, state.vals, eps, min_pts, version=version,
+                   watermark=state.watermark)
+
+    def stats(self) -> dict:
+        """Size/occupancy facts for logs and the bench record."""
+        return {
+            "version": self.version, "n_points": self.n_points,
+            "watermark": self.watermark, "d": self.d,
+            "eps": self.eps, "min_pts": self.min_pts,
+            "n_cells": int(len(self._uk)) if self.n_points else 0,
+            "n_offsets": int(len(self._offs)) if self.n_points else 0,
+        }
+
+    # ------------------------------------------------------------------ #
+    # query                                                              #
+    # ------------------------------------------------------------------ #
+
+    def query(self, pts) -> QueryResult:
+        """Cluster assignment for probe points against this frozen view.
+
+        Same contract (and bit-identical results on the frozen state) as
+        :meth:`repro.stream.StreamingDBSCAN.query`: ``labels`` is the
+        component representative of the minimum adjacent core point (-1
+        when none within eps), ``counts`` the eps-neighbor count among
+        active residents saturated at ``min_pts``, ``would_be_core``
+        whether the probe would be core if inserted now.
+        """
+        qb = check_points(pts, name="probe points", dims=(2, 3),
+                          allow_empty=True)
+        qb = np.ascontiguousarray(qb, np.float32)
+        k = len(qb)
+        if self.n_points and qb.shape[1] != self.d:
+            raise ValueError(f"dimensionality mismatch: snapshot is "
+                             f"{self.d}-d, got {qb.shape[1]}-d")
+        if k == 0 or self.n_points == 0:
+            return QueryResult(np.full(k, -1, np.int32),
+                               np.zeros(k, np.int32),
+                               np.ones(k, bool) if self.min_pts <= 1
+                               else np.zeros(k, bool))
+        labels, counts = self._query_arrays(qb)
+        obs_metrics.inc("serve_snapshot_queries_total")
+        return QueryResult(
+            labels=np.where(labels == INT_MAX, -1, labels).astype(np.int32),
+            counts=counts,
+            would_be_core=counts + 1 >= self.min_pts)
+
+    def _query_arrays(self, qb: np.ndarray):
+        B, d = qb.shape
+        q64 = qb.astype(np.float64)
+        w, mp = self._w, self.min_pts
+        qcf = np.floor((q64 - self._lo) / w)
+        # clamp far-out probes into a bounded cell range: anything past
+        # the slack band is provably > eps from every resident, and the
+        # clamp keeps the in-cell offsets (and box distances) finite and
+        # the key arithmetic overflow-free
+        qc = np.clip(qcf, -3.0, self._nc.astype(np.float64) + 3.0) \
+            .astype(np.int64)
+        u = q64 - (qc * w + self._lo)                   # (B, d)
+        eps2_hi = float(self._eps2) * (1 + PAD)
+        eps2_lo = float(self._eps2) * (1 - PAD)
+
+        offs = self._offs                               # (K, d)
+        K = len(offs)
+        dmin2 = np.zeros((B, K))
+        dmax2 = np.zeros((B, K))
+        ck = None
+        inrange = np.ones((B, K), bool)
+        for i in range(d):
+            oi = offs[:, i][None, :]                    # (1, K)
+            ui = u[:, i][:, None]                       # (B, 1)
+            near = np.maximum(np.maximum(oi * w - ui, ui - (oi + 1) * w),
+                              0.0)
+            far = np.maximum(np.abs(ui - oi * w), np.abs(ui - (oi + 1) * w))
+            dmin2 += near * near
+            dmax2 += far * far
+            ci = qc[:, i][:, None] + oi
+            inrange &= (ci >= 0) & (ci < self._nc[i])
+            ck = ci if ck is None else ck * self._nc[i] + ci
+
+        idx = np.searchsorted(self._uk, ck.ravel()).reshape(B, K)
+        idx = np.minimum(idx, len(self._uk) - 1)
+        present = inrange & (self._uk[idx] == ck)
+        ins = present & (dmax2 <= eps2_lo)
+        par = present & ~ins & (dmin2 <= eps2_hi)
+        cn = self._cnts[idx]
+        cm = self._cmin[idx]
+        inside_cnt = np.where(ins, cn, 0).sum(1)
+        inside_min = np.where(ins, cm, INT_MAX).min(1)
+        partial_min = np.where(par, cm, INT_MAX).min(1)
+        # summaries are exact unless a partial cell could still push the
+        # count past saturation or lower the label minimum
+        need = (((inside_cnt < mp) & par.any(1))
+                | (partial_min < inside_min))
+        counts = np.minimum(inside_cnt, mp).astype(np.int32)
+        labels = inside_min
+        flagged = np.flatnonzero(need)
+        obs_metrics.inc("serve_snapshot_exact_probes_total",
+                        float(len(flagged)))
+        for lo in range(0, len(flagged), _EXACT_CHUNK):
+            f = flagged[lo:lo + _EXACT_CHUNK]
+            fc, fl = self._exact(qb[f], par[f], idx[f],
+                                 inside_cnt[f], inside_min[f])
+            counts[f] = fc
+            labels[f] = fl
+        return labels, counts
+
+    def _exact(self, qb: np.ndarray, par: np.ndarray, idx: np.ndarray,
+               inside_cnt: np.ndarray, inside_min: np.ndarray):
+        """Exact float32 point tests for flagged probes, over their
+        *partial* cells only.
+
+        Inside cells are already exactly accounted (every resident of a
+        cell whose far corner is within eps is a hit), and skipped cells
+        provably contribute nothing — only partial cells need per-point
+        distance tests.  Their residents are gathered **ragged**
+        (``np.repeat`` over per-cell spans, work proportional to the
+        points actually touched) rather than padded to the longest span:
+        on heavy-tailed data one dense cell otherwise pads the whole
+        chunk to its length."""
+        bi, ki = np.nonzero(par)
+        cells = idx[bi, ki]
+        lens = self._cnts[cells]
+        tot = int(lens.sum())
+        cnt = inside_cnt.copy()
+        mn = inside_min.copy()
+        if tot:
+            probe = np.repeat(bi, lens)
+            off = np.arange(tot) - np.repeat(np.cumsum(lens) - lens, lens)
+            pos = np.repeat(self._starts[cells], lens) + off
+            diff = qb[probe] - self._pts[pos]
+            d2 = (diff * diff).sum(-1)                  # float32, as the
+            hit = d2 <= self._eps2                      # traversal engine
+            cnt += np.bincount(probe[hit], minlength=len(qb))
+            np.minimum.at(mn, probe[hit], self._vals[pos[hit]])
+        return np.minimum(cnt, self.min_pts).astype(np.int32), mn
+
+
+def freeze(handle, *, version: int = 0) -> IndexSnapshot:
+    """Freeze a live :class:`repro.stream.StreamingDBSCAN` handle into an
+    immutable :class:`IndexSnapshot` at its (eps, min_pts)."""
+    with obs_trace.span("serve.freeze", version=version):
+        state = handle.freeze_view()
+        snap = IndexSnapshot.build(state, handle.eps, handle.min_pts,
+                                   version=version)
+    return snap
+
+
+class SnapshotStore:
+    """The published-snapshot cell: one atomic reference, swapped whole.
+
+    Readers call :meth:`current` — a single attribute load, never a lock
+    — and use the returned snapshot for as long as they like; it is
+    immutable, so a concurrent publish can't corrupt an in-flight batch.
+    Writers build the next snapshot *off-path* and :meth:`publish` it;
+    the ``mid-publish`` durability barrier sits between build and swap so
+    the fault harness can prove a crash there leaves the old version
+    serving after recovery.  ``keep`` > 1 retains a short version history
+    (``get``) for the linearizability tests.
+    """
+
+    def __init__(self, snapshot: IndexSnapshot | None = None, *,
+                 keep: int = 1):
+        self._lock = threading.Lock()
+        self._keep = max(1, int(keep))
+        self._history: dict[int, IndexSnapshot] = {}
+        self._current: IndexSnapshot | None = None
+        if snapshot is not None:
+            self.publish(snapshot)
+
+    def current(self) -> IndexSnapshot | None:
+        """The currently published snapshot (lock-free read)."""
+        return self._current
+
+    def get(self, version: int) -> IndexSnapshot | None:
+        """A retained historical version (None once evicted)."""
+        with self._lock:
+            return self._history.get(version)
+
+    @property
+    def version(self) -> int:
+        """Version of the current snapshot; -1 before the first publish."""
+        snap = self._current
+        return snap.version if snap is not None else -1
+
+    def publish(self, snapshot: IndexSnapshot) -> IndexSnapshot:
+        """Atomically swap ``snapshot`` in as the serving version.
+
+        Versions must be monotonic — a stale writer (e.g. a recovered
+        process racing an old one) cannot roll the serving view back.
+        """
+        cur = self._current
+        if cur is not None and snapshot.version <= cur.version:
+            raise ValueError(
+                f"snapshot versions must be monotonic: have v{cur.version}, "
+                f"got v{snapshot.version}")
+        durability.barrier("mid-publish")   # crash here: the old (fully
+        with self._lock:                    # durable) version keeps serving
+            self._current = snapshot
+            self._history[snapshot.version] = snapshot
+            while len(self._history) > self._keep:
+                del self._history[min(self._history)]
+        # metrics: TenantView.publish owns the serve_snapshot_* series —
+        # it knows the tenant label; a bare store stays silent
+        return snapshot

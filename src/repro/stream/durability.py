@@ -67,7 +67,8 @@ FAULT_EXIT_CODE = 137
 # Named crash points the streaming code guards with barrier() calls.
 FAULT_POINTS = ("pre-insert", "wal-durable", "post-insert", "mid-merge",
                 "mid-checkpoint", "mid-wal-append",
-                "pre-delete", "wal-durable-delete", "mid-compaction")
+                "pre-delete", "wal-durable-delete", "mid-compaction",
+                "mid-publish")
 
 _fault_point: str | None = None
 _fault_countdown: int = 0

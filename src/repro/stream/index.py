@@ -96,6 +96,20 @@ _TOMB_MAX_FRAC = 0.5
 # box tests cheap; unmasked count mode is never run against a padded level.
 _SENTINEL_EPS = 3.0
 
+# Program signatures the traversal path has launched, process-wide (the
+# jit cache is process-wide too).  Because both probe batches and level
+# builds pad to fdbscan._pad_size's bucket ladder, this set — and with it
+# ``stream_query_recompiles_total`` — must go flat at steady state; a
+# growing counter is the alarm that some caller leaked an unpadded shape
+# into the traversal engine.
+_seen_programs: set = set()
+
+
+def _note_program(sig: tuple) -> None:
+    if sig not in _seen_programs:
+        _seen_programs.add(sig)
+        obs_metrics.inc("stream_query_recompiles_total")
+
 
 class _Level(NamedTuple):
     """One level of the tiered index (main tier, delta tier, or buffer)."""
@@ -305,6 +319,34 @@ class StreamingDBSCAN:
     def active_gids(self) -> np.ndarray:
         """Global insert ids of the active points, ascending."""
         return np.flatnonzero(~self._tombstone)
+
+    def freeze_view(self):
+        """Export the active state for an immutable serving snapshot.
+
+        Returns a ``repro.serve.snapshot.FrozenState``: the active points
+        (copies — later inserts cannot mutate a published snapshot) with
+        their serving values (core rows carry their component-min label,
+        non-core rows ``INT_MAX``), plus the stream watermark.  Pure
+        read; never touches the tiers or the jit cache.
+        """
+        from repro.serve.snapshot import FrozenState
+        alive = ~self._tombstone
+        vals = np.where(self._core, self._labels.astype(np.int64),
+                        np.int64(INT_MAX))
+        return FrozenState(pts=self._pts[alive].copy(),
+                           vals=vals[alive].copy(),
+                           watermark=self.n_points,
+                           n_tombstoned=int(self._n_tomb))
+
+    def stream_slice(self, lo: int, hi: int) -> np.ndarray:
+        """Rows ``[lo, hi)`` of the raw insert stream (tombstoned rows
+        included — the stream is the replication log, not the active
+        set).  Used to top up a lagging replica after crash recovery."""
+        lo, hi = int(lo), int(hi)
+        if not 0 <= lo <= hi <= self.n_points:
+            raise ValueError(f"stream slice [{lo}, {hi}) out of range "
+                             f"[0, {self.n_points})")
+        return self._pts[lo:hi].copy()
 
     def query(self, pts) -> QueryResult:
         """Cluster assignment for probe points; never mutates the index."""
@@ -991,6 +1033,9 @@ class StreamingDBSCAN:
             acc = np.minimum(init.astype(np.int64), vv.min(1))
             return acc.astype(np.int32), ok.sum(1).astype(np.int64)
         pad = fdbscan._pad_size(k)
+        # every distinct (mode, level shape, probe bucket, cap) tuple is
+        # one compiled traversal program; see _note_program
+        _note_program((mode, qpts.shape[1], pad, len(lvl.gids), cap))
         ids = np.full(pad, -1, np.int32)
         ids[:k] = 0
         qp = np.zeros((pad, qpts.shape[1]), np.float32)

@@ -1,0 +1,480 @@
+"""Serving-subsystem tests (DESIGN.md §13).
+
+Four layers, mirroring ``src/repro/serve``:
+
+  * snapshot exactness — ``IndexSnapshot.query`` must be bit-identical to
+    ``StreamingDBSCAN.query`` on the frozen state, on every dataset /
+    dimensionality / eps the suite runs, including far out-of-range
+    probes and exact duplicates of residents (the conservative cell
+    margins demote every boundary-ambiguous cell to exact point tests);
+  * micro-batching — the passive deadline-or-full batcher is driven with
+    explicit ``now`` values, so flush reasons, request atomicity, and
+    the adaptive target are all deterministic;
+  * admission — typed ``Overloaded`` with the right budget/reason, and
+    release symmetry;
+  * the server — multi-tenant end-to-end: one shared index build, per
+    tenant answers bit-identical to that tenant's own handle, insert
+    acknowledgement implies visibility, graceful shutdown, and the
+    query plane staying live (and version-monotonic) under concurrent
+    writes.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import dispatch
+from repro.core.fdbscan import _pad_size
+from repro.data import pointclouds
+from repro.obs import metrics as obs_metrics
+from repro.serve import (AdmissionController, IndexSnapshot, MicroBatcher,
+                         Overloaded, Server, ServerConfig, SnapshotStore,
+                         TenantSpec, bucket_size, freeze)
+from repro.serve.batching import Request
+from repro.serve.tenants import build_views, check_specs
+
+EPS, MINPTS = 0.05, 6
+
+
+def _handle(pts, eps=EPS, min_pts=MINPTS, **kw):
+    return dispatch.stream_handle(pts, eps, min_pts, **kw)
+
+
+def _probe_mix(pts, k, seed, eps=EPS):
+    """Jittered resident samples + exact duplicates + far out-of-range."""
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, len(pts), k)
+    jit = rng.normal(0.0, 0.5 * eps, (k, pts.shape[1])).astype(np.float32)
+    probes = pts[idx] + jit
+    probes[: k // 4] = pts[rng.integers(0, len(pts), k // 4)]  # exact dups
+    far = np.full((4, pts.shape[1]), 1e6, np.float32)
+    far[1] *= -1.0
+    far[2, 0] = -1e6
+    far[3] = np.nextafter(np.float32(pts.max()), np.float32(np.inf)) + 50.0
+    return np.ascontiguousarray(np.concatenate([probes, far]), np.float32)
+
+
+def _assert_same(ref, got, ctx=""):
+    for f in ("labels", "counts", "would_be_core"):
+        np.testing.assert_array_equal(getattr(ref, f), getattr(got, f),
+                                      err_msg=f"{ctx}: {f} diverged")
+
+
+# ---------------------------------------------------------------------- #
+# snapshot exactness                                                     #
+# ---------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("dataset,eps,min_pts", [
+    ("portotaxi_like", 0.02, 10),
+    ("blobs", 0.05, 6),
+    ("hacc_like", 0.05, 8),         # 3-d: 125-cell neighborhood path
+])
+def test_snapshot_bitidentical_to_handle(dataset, eps, min_pts):
+    pts = pointclouds.load(dataset, 1500, seed=3)
+    h = _handle(pts, eps, min_pts)
+    snap = freeze(h, version=1)
+    probes = _probe_mix(pts, 400, seed=5, eps=eps)
+    _assert_same(h.query(probes), snap.query(probes), f"{dataset} frozen")
+    assert snap.version == 1
+    assert snap.watermark == h.n_points
+
+    # mutate the handle: the old snapshot must keep answering for the old
+    # state while a re-freeze matches the new one
+    more = pointclouds.load(dataset, 1700, seed=3)[1500:]
+    old = snap.query(probes)
+    h.insert(more)
+    _assert_same(old, snap.query(probes), f"{dataset} immutable")
+    _assert_same(h.query(probes), freeze(h, version=2).query(probes),
+                 f"{dataset} refrozen")
+
+
+def test_snapshot_empty_and_edge_cases():
+    empty = IndexSnapshot(np.zeros((0, 2), np.float32),
+                          np.zeros(0, np.int64), EPS, MINPTS)
+    res = empty.query(np.zeros((3, 2), np.float32))
+    assert np.all(res.labels == -1) and np.all(res.counts == 0)
+    assert not res.would_be_core.any()
+
+    # min_pts == 1: an inserted probe is always its own core point
+    lone = IndexSnapshot(np.zeros((0, 2), np.float32),
+                         np.zeros(0, np.int64), EPS, 1)
+    assert lone.query(np.zeros((2, 2), np.float32)).would_be_core.all()
+
+    pts = pointclouds.load("blobs", 300, seed=0)
+    snap = freeze(_handle(pts))
+    res = snap.query(np.zeros((0, 2), np.float32))      # empty probe batch
+    assert res.labels.shape == (0,)
+
+    with pytest.raises(ValueError, match="eps"):
+        IndexSnapshot(pts, np.zeros(len(pts), np.int64), 0.0, MINPTS)
+    with pytest.raises(ValueError, match="min_pts"):
+        IndexSnapshot(pts, np.zeros(len(pts), np.int64), EPS, 0)
+    with pytest.raises(ValueError, match="mismatch"):
+        IndexSnapshot(pts, np.zeros(7, np.int64), EPS, MINPTS)
+    with pytest.raises(ValueError, match="dimensionality"):
+        snap.query(np.zeros((4, 3), np.float32))
+    with pytest.raises(ValueError, match="finite"):
+        snap.query(np.full((4, 2), np.nan, np.float32))
+
+
+def test_snapshot_store_versioning():
+    pts = pointclouds.load("blobs", 200, seed=1)
+    h = _handle(pts)
+    store = SnapshotStore(keep=3)
+    assert store.version == -1 and store.current() is None
+    for v in (0, 1, 2, 3):
+        store.publish(freeze(h, version=v))
+    assert store.version == 3
+    assert store.current().version == 3
+    assert store.get(0) is None                 # evicted (keep=3)
+    assert store.get(1).version == 1
+    with pytest.raises(ValueError, match="monotonic"):
+        store.publish(freeze(h, version=3))     # stale writer
+    assert store.version == 3                   # rejected publish: no swap
+
+
+# ---------------------------------------------------------------------- #
+# micro-batching                                                         #
+# ---------------------------------------------------------------------- #
+
+def _req(k, now, d=2):
+    return Request(np.zeros((k, d), np.float32), None, now)
+
+
+def test_batcher_full_and_deadline_flush():
+    b = MicroBatcher(max_batch=8, max_delay_s=0.01, adaptive=False)
+    assert b.ready(now=0.0) is None             # nothing pending
+    assert not b.add(_req(3, now=0.0))
+    assert b.next_deadline(0.0) == pytest.approx(0.01)
+    assert b.ready(now=0.001) is None           # neither full nor due
+    assert b.add(_req(3, now=0.002)) is False
+    assert b.add(_req(3, now=0.003)) is True    # 9 >= 8: full
+    fl = b.ready(now=0.004)
+    assert fl.reason == "full"
+    # whole requests only, capped at max_batch: 3 + 3 fit, 9 would not
+    assert len(fl.requests) == 2 and len(fl.pts) == 6
+    assert b.pending_points == 3
+    assert b.ready(now=0.005) is None
+    fl = b.ready(now=0.0031 + 0.01)             # oldest remaining is due
+    assert fl.reason == "deadline" and len(fl.pts) == 3
+    assert b.pending_points == 0
+
+
+def test_batcher_drain_and_atomicity():
+    b = MicroBatcher(max_batch=4, max_delay_s=10.0, adaptive=False)
+    for i in range(3):
+        b.add(_req(3, now=float(i)))
+    flushes = list(b.drain(now=100.0))
+    # 3-pt requests against max_batch=4: one whole request per flush,
+    # never split
+    assert [len(f.pts) for f in flushes] == [3, 3, 3]
+    assert all(f.reason in ("full", "deadline", "drain") for f in flushes)
+    assert b.pending_points == 0
+
+
+def test_batcher_adaptive_target_tracks_rate():
+    b = MicroBatcher(max_batch=4096, max_delay_s=0.002, adaptive=True)
+    assert b.target_points() == 64              # cold: the floor
+    now = 0.0
+    for _ in range(50):                         # ~1e6 pts/s arrival rate
+        b.add(_req(256, now))
+        now += 256e-6
+        b.ready(now)                            # keep the queue small
+    hot = b.target_points()
+    assert hot > 64                             # grew toward max_batch
+    for _ in range(50):                         # rate collapses
+        b.add(_req(1, now))
+        now += 1.0
+        b.ready(now, drain=True)
+    assert b.target_points() == 64              # back at the floor
+    assert b.target_points() <= b.max_batch
+
+
+def test_bucket_ladder_is_the_jit_ladder():
+    for k in (1, 63, 64, 65, 100, 129, 256, 1000, 4097):
+        assert bucket_size(k) == _pad_size(k)
+        assert bucket_size(k) >= k
+    # padded probe sizes inside one bucket share one compiled shape
+    assert bucket_size(130) == bucket_size(bucket_size(130))
+
+
+# ---------------------------------------------------------------------- #
+# admission control                                                      #
+# ---------------------------------------------------------------------- #
+
+def test_admission_budgets_and_release():
+    a = AdmissionController(max_pending_requests=2, max_pending_points=100,
+                            max_pending_inserts=1, retry_after_s=0.25)
+    a.admit_query(40)
+    a.admit_query(40)
+    with pytest.raises(Overloaded) as ei:
+        a.admit_query(1)
+    assert (ei.value.kind, ei.value.reason) == ("query", "requests")
+    assert ei.value.depth == 2 and ei.value.limit == 2
+    assert ei.value.retry_after_s == 0.25
+    a.release_query(40)
+    with pytest.raises(Overloaded) as ei:
+        a.admit_query(80)                       # 40 + 80 > 100
+    assert ei.value.reason == "points"
+    a.admit_query(50)
+
+    a.admit_insert()
+    with pytest.raises(Overloaded) as ei:
+        a.admit_insert()
+    assert (ei.value.kind, ei.value.reason) == ("insert", "inserts")
+    a.release_insert()
+    a.admit_insert()
+
+    st = a.stats()
+    assert st["shed"] == {"query": 2, "insert": 1}
+    assert st["pending_requests"] == 2 and st["pending_inserts"] == 1
+
+    a.close()
+    for call in (lambda: a.admit_query(1), a.admit_insert):
+        with pytest.raises(Overloaded) as ei:
+            call()
+        assert ei.value.reason == "shutdown"
+
+
+def test_admission_slo_quantiles_need_no_collector():
+    assert obs_metrics.active() is None         # the point of the test
+    a = AdmissionController()
+    for ms in (1, 2, 3, 50):
+        a.observe("query", ms * 1e-3, tenant="t0")
+    st = a.stats(tenants=("t0",))
+    assert 0 < st["query_p50_s"] < st["query_p99_s"]
+    assert st["completed"]["query"] == 4
+    assert np.isnan(st["insert_p50_s"])         # nothing observed
+
+
+# ---------------------------------------------------------------------- #
+# tenants                                                                #
+# ---------------------------------------------------------------------- #
+
+def test_check_specs_validation():
+    ok = check_specs([("a", 0.1, 5), TenantSpec("b", 0.2, 3)])
+    assert [s.name for s in ok] == ["a", "b"]
+    for bad, msg in [
+        ([], "at least one"),
+        ([("a/b", 0.1, 5)], "must match"),
+        ([("a", 0.1, 5), ("a", 0.2, 3)], "duplicate"),
+        ([("a", 0.0, 5)], "eps"),
+        ([("a", 0.1, 0)], "min_pts"),
+    ]:
+        with pytest.raises(ValueError, match=msg):
+            check_specs(bad)
+
+
+def test_tenants_share_one_index_build():
+    pts = pointclouds.load("blobs", 600, seed=2)
+    prev = obs_metrics.active()
+    reg = obs_metrics.install(obs_metrics.Registry())
+    try:
+        dispatch.clear_cache()
+        views = build_views(pts, [("tight", 0.03, 8), ("loose", 0.08, 4)])
+        c = reg.get("dispatch_index_builds_total", index="fdbscan")
+        assert c is not None and c.value == 1.0     # N tenants, one build
+    finally:
+        obs_metrics.install(prev) if prev is not None \
+            else obs_metrics.uninstall()
+    probes = _probe_mix(pts, 200, seed=9)
+    for v in views:
+        # each tenant's snapshot answers for its OWN (eps, min_pts)
+        _assert_same(v.handle.query(probes), v.store.current().query(probes),
+                     v.name)
+    tight, loose = views
+    # monotonicity across views: anything clustered at (eps=0.03, mp=8)
+    # is clustered at (eps=0.08, mp=4) — neighbors only grow with eps and
+    # the core threshold only drops (counts themselves saturate at each
+    # tenant's own min_pts, so they are not comparable across tenants)
+    t_lab = tight.store.current().query(probes).labels
+    l_lab = loose.store.current().query(probes).labels
+    assert np.all((t_lab == -1) | (l_lab != -1))
+
+
+# ---------------------------------------------------------------------- #
+# server end-to-end                                                      #
+# ---------------------------------------------------------------------- #
+
+SPECS = [("tight", 0.03, 8), ("loose", 0.08, 4)]
+FAST_CFG = ServerConfig(max_batch=512, max_delay_s=0.001)
+
+
+@pytest.fixture(scope="module")
+def served():
+    pts = pointclouds.load("blobs", 500, seed=4)
+    srv = Server(pts[:400], SPECS, config=FAST_CFG)
+    yield srv, pts
+    srv.shutdown()
+
+
+def test_server_query_matches_tenant_handles(served):
+    srv, pts = served
+    probes = _probe_mix(pts[:400], 150, seed=11)
+    for v in srv._views:
+        reply = srv.query(probes, tenant=v.name, timeout=60)
+        _assert_same(v.handle.query(probes), reply, v.name)
+        assert reply.tenant == v.name
+        assert reply.version == v.store.version
+
+
+def test_server_insert_ack_implies_visibility(served):
+    srv, pts = served
+    before = {v.name: v.store.version for v in srv._views}
+    rep = srv.insert(pts[400:450], timeout=60)
+    assert rep.watermark == 450
+    for v in srv._views:
+        assert rep.versions[v.name] > before[v.name]
+    # acknowledged -> the very next query answers from the new state
+    probes = _probe_mix(pts, 100, seed=13)
+    for v in srv._views:
+        _assert_same(v.handle.query(probes),
+                     srv.query(probes, tenant=v.name, timeout=60), v.name)
+
+
+def test_server_rejects_malformed_requests(served):
+    srv, pts = served
+    with pytest.raises(ValueError, match="unknown tenant"):
+        srv.submit_query(pts[:4], tenant="nope")
+    with pytest.raises(ValueError, match="pass tenant="):
+        srv.submit_query(pts[:4])               # ambiguous: two tenants
+    with pytest.raises(ValueError, match="finite"):
+        srv.submit_query(np.full((4, 2), np.inf, np.float32),
+                         tenant="tight")
+    with pytest.raises(ValueError, match="max_batch"):
+        srv.submit_query(np.zeros((FAST_CFG.max_batch + 1, 2), np.float32),
+                         tenant="tight")
+    with pytest.raises(ValueError, match="dimensionality"):
+        srv.submit_query(np.zeros((4, 3), np.float32), tenant="tight")
+    with pytest.raises(ValueError):
+        srv.submit_insert(np.zeros((0, 2), np.float32))     # empty insert
+    # a failed submit consumed no budget
+    st = srv.stats()
+    assert st["pending_requests"] == 0 and st["pending_inserts"] == 0
+
+
+def test_server_empty_query_completes_inline(served):
+    srv, _ = served
+    rep = srv.query(np.zeros((0, 2), np.float32), tenant="tight",
+                    timeout=5)
+    assert rep.labels.shape == (0,) and rep.tenant == "tight"
+
+
+def test_server_single_tenant_needs_no_name():
+    pts = pointclouds.load("blobs", 300, seed=6)
+    with Server(pts, [("only", EPS, MINPTS)], config=FAST_CFG) as srv:
+        rep = srv.query(pts[:16], timeout=60)
+        assert rep.tenant == "only"
+        st = srv.stats()
+        assert [t["name"] for t in st["tenants"]] == ["only"]
+        assert st["tenants"][0]["version"] == 0
+    assert srv.stats()["stopped"]
+
+
+def test_server_queries_survive_concurrent_writes(served):
+    """The acceptance property: the query plane never blocks behind the
+    writer, answers stay exact for *some* published version, and the
+    versions any single client observes never go backwards."""
+    srv, pts = served
+    probes = _probe_mix(pts, 64, seed=17)
+    refs = {}                                   # version -> per-tenant ref
+
+    def snapshot_refs():
+        for v in srv._views:
+            snap = v.store.current()
+            refs.setdefault((v.name, snap.version), snap.query(probes))
+
+    snapshot_refs()
+    stop = threading.Event()
+    errors: list = []
+
+    def writer():
+        rng = np.random.default_rng(23)
+        try:
+            while not stop.is_set():
+                batch = pts[rng.integers(0, len(pts), 20)] \
+                    + rng.normal(0, 0.01, (20, 2)).astype(np.float32)
+                srv.insert(batch.astype(np.float32), timeout=60)
+                snapshot_refs()
+        except Exception as e:                  # pragma: no cover
+            errors.append(e)
+
+    t = threading.Thread(target=writer)
+    t.start()
+    try:
+        last = {v.name: -1 for v in srv._views}
+        deadline = time.monotonic() + 3.0
+        n_done = 0
+        while time.monotonic() < deadline:
+            for v in srv._views:
+                rep = srv.query(probes, tenant=v.name, timeout=60)
+                assert rep.version >= last[v.name], "version went backwards"
+                last[v.name] = rep.version
+                ref = refs.get((v.name, rep.version))
+                if ref is not None:             # raced publishes may skip
+                    _assert_same(ref, rep, f"{v.name}@v{rep.version}")
+                n_done += 1
+    finally:
+        stop.set()
+        t.join(30)
+    assert not errors, errors
+    assert n_done > 10                          # the loop actually served
+
+
+def test_server_shutdown_drains_and_sheds():
+    pts = pointclouds.load("blobs", 300, seed=7)
+    srv = Server(pts, [("t", EPS, MINPTS)], config=FAST_CFG)
+    fut = srv.submit_query(pts[:32], tenant="t")
+    srv.shutdown()
+    rep = fut.result(timeout=10)                # admitted work drained
+    assert rep.tenant == "t"
+    with pytest.raises(Overloaded) as ei:       # new work shed, typed
+        srv.submit_query(pts[:4], tenant="t")
+    assert ei.value.reason == "shutdown"
+    with pytest.raises(Overloaded):
+        srv.submit_insert(pts[:4])
+    srv.shutdown()                              # idempotent
+
+
+def test_server_shutdown_without_drain_fails_pending():
+    pts = pointclouds.load("blobs", 300, seed=8)
+    srv = Server(pts, [("t", EPS, MINPTS)],
+                 config=ServerConfig(max_batch=512, max_delay_s=5.0))
+    fut = srv.submit_query(pts[:8], tenant="t")     # parked on deadline
+    srv.shutdown(drain=False)
+    with pytest.raises(RuntimeError, match="without drain"):
+        fut.result(timeout=10)
+    assert srv.stats()["pending_requests"] == 0     # budget released
+
+
+# ---------------------------------------------------------------------- #
+# jit-cache stability (the recompile witness)                            #
+# ---------------------------------------------------------------------- #
+
+def test_stream_query_recompiles_flat_at_steady_state():
+    """Padded probe batches keep the jit cache warm: after one query per
+    bucket, any probe count inside the bucket compiles nothing new."""
+    pts = pointclouds.load("blobs", 600, seed=9)
+    prev = obs_metrics.active()
+    reg = obs_metrics.install(obs_metrics.Registry())
+    try:
+        h = _handle(pts)
+        probes = _probe_mix(pts, 256, seed=19)
+        h.query(probes[:bucket_size(65)])       # warm this bucket
+
+        def recompiles():
+            c = reg.get("stream_query_recompiles_total")
+            return c.value if c is not None else 0.0
+
+        c0 = recompiles()
+        assert c0 >= 1.0                        # the warm call was counted
+        for k in (65, 70, 90, bucket_size(65)):
+            assert bucket_size(k) == bucket_size(65)
+            h.query(probes[:k])
+        assert recompiles() == c0               # same bucket: zero new
+        h.query(probes[:256])                   # a NEW bucket does count
+        assert recompiles() > c0
+    finally:
+        obs_metrics.install(prev) if prev is not None \
+            else obs_metrics.uninstall()

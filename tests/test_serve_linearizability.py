@@ -1,0 +1,151 @@
+"""Linearizability of the snapshot publish/read path (DESIGN.md §13).
+
+The serving contract: every query executes against exactly one
+*published* snapshot version — never a torn intermediate — and the
+version sequence any single client observes is monotonic.  Two attack
+angles:
+
+  * **randomized interleaving** — reader threads hammer
+    ``SnapshotStore.current`` while a writer publishes a known sequence
+    of versions; every answer must be bit-identical to the reference
+    computed for the version the reader saw *before* it was published,
+    and per-reader versions never go backwards;
+  * **kill mid-publish** — a subprocess arms the ``mid-publish``
+    durability barrier (between snapshot build and the atomic swap) and
+    dies there with ``os._exit(137)``.  The WAL-durable insert that
+    triggered the publish must survive recovery; the never-swapped
+    snapshot must leave no trace.
+"""
+import os
+import subprocess
+import sys
+import tempfile
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import dispatch
+from repro.data import pointclouds
+from repro.serve import Server, SnapshotStore, freeze
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+EPS, MINPTS = 0.05, 6
+CRASH_EXIT = 137
+
+
+def test_interleaved_readers_always_see_a_published_version():
+    pts = pointclouds.load("blobs", 500, seed=30)
+    h = dispatch.stream_handle(pts[:200], EPS, MINPTS)
+    store = SnapshotStore(keep=32)
+    probes = np.ascontiguousarray(pts[::7][:64], np.float32)
+
+    refs = {}                       # version -> reference QueryResult,
+                                    # filled BEFORE the version publishes
+    snap0 = freeze(h, version=0)
+    refs[0] = snap0.query(probes)
+    store.publish(snap0)
+
+    stop = threading.Event()
+    errors: list = []
+    observed = [0, 0]
+
+    def reader(slot):
+        last = -1
+        try:
+            while not stop.is_set():
+                snap = store.current()
+                v = snap.version
+                assert v >= last, f"reader saw v{v} after v{last}"
+                last = v
+                res = snap.query(probes)
+                ref = refs[v]       # publish ordering guarantees presence
+                for f in ("labels", "counts", "would_be_core"):
+                    np.testing.assert_array_equal(
+                        getattr(ref, f), getattr(res, f),
+                        err_msg=f"v{v}: {f} diverged under interleaving")
+                observed[slot] += 1
+        except Exception as e:      # pragma: no cover — failure path
+            errors.append(e)
+
+    threads = [threading.Thread(target=reader, args=(i,)) for i in (0, 1)]
+    for t in threads:
+        t.start()
+    try:
+        for v in range(1, 10):      # writer: publish a known sequence
+            h.insert(pts[200 + 30 * (v - 1):200 + 30 * v])
+            snap = freeze(h, version=v)
+            refs[v] = snap.query(probes)
+            store.publish(snap)
+    finally:
+        stop.set()
+        for t in threads:
+            t.join(60)
+    assert not errors, errors
+    assert store.version == 9
+    assert min(observed) > 0        # both readers actually raced the writer
+    # the retained history is exactly the published snapshots
+    for v in range(10):
+        kept = store.get(v)
+        assert kept is not None and kept.version == v
+
+
+_CHILD = r"""
+import sys, time
+import numpy as np
+from repro.data import pointclouds
+from repro.serve import Server
+from repro.stream import durability
+
+workdir = sys.argv[1]
+pts = pointclouds.load("blobs", 300, seed=40)
+srv = Server(pts[:200], [("t", 0.05, 6)], durability_dir=workdir,
+             checkpoint_every=1)
+durability.arm_fault("mid-publish", at=1)   # armed AFTER the bootstrap
+fut = srv.submit_insert(pts[200:260])       # publish dies at the barrier
+time.sleep(60)                              # the writer thread kills us
+sys.exit(1)                                 # survived: the test fails
+"""
+
+
+@pytest.mark.fault
+def test_kill_mid_publish_recovers_old_view_plus_durable_insert(tmp_path):
+    """Crash between snapshot build and swap: the insert is already
+    WAL-durable (the handle logged it before the freeze), the new
+    snapshot never published.  Recovery must serve the full durable
+    stream — acknowledged-durable data survives, the torn publish
+    leaves nothing behind."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    cache = os.path.join(tempfile.gettempdir(), "repro-faults-jit-cache")
+    env.setdefault("JAX_COMPILATION_CACHE_DIR", cache)
+    env.setdefault("JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS", "0")
+    env.setdefault("JAX_PERSISTENT_CACHE_MIN_ENTRY_SIZE_BYTES", "0")
+    proc = subprocess.run([sys.executable, "-c", _CHILD, str(tmp_path)],
+                          cwd=REPO, env=env, timeout=600,
+                          capture_output=True, text=True)
+    assert proc.returncode == CRASH_EXIT, (
+        f"child did not die at the mid-publish barrier:\n"
+        f"rc={proc.returncode}\nstdout={proc.stdout}\nstderr={proc.stderr}")
+
+    pts = pointclouds.load("blobs", 300, seed=40)
+    srv = Server.restore([("t", 0.05, 6)], durability_dir=str(tmp_path),
+                         checkpoint_every=1)
+    try:
+        view = srv._views[0]
+        # the insert hit the WAL before the publish barrier: recovered
+        # state is the whole 260-point stream, not just the bootstrap
+        assert view.handle.n_points == 260
+        assert view.store.version == 0      # fresh publish, old counter
+        probes = np.ascontiguousarray(pts[::5][:64], np.float32)
+        ref_h = dispatch.stream_handle(pts[:200], EPS, MINPTS)
+        ref_h.insert(pts[200:260])
+        ref = ref_h.query(probes)
+        got = srv.query(probes, timeout=120)
+        for f in ("labels", "counts", "would_be_core"):
+            np.testing.assert_array_equal(
+                getattr(ref, f), getattr(got, f),
+                err_msg=f"post-recovery {f} diverged")
+    finally:
+        srv.shutdown(final_checkpoint=False)
