@@ -71,6 +71,7 @@ def generate() -> str:
     from repro import obs
     from repro.core import traversal
     from repro.core import neighbors
+    from repro.core import tune
     from repro.kernels import traverse as pallas_traverse
     from repro.stream import StreamingDBSCAN, durability
     from repro import serve
@@ -206,6 +207,20 @@ def generate() -> str:
                         kind="class"))
     parts.append(_entry("traversal.AccHits", traversal.AccHits,
                         kind="class"))
+    parts.append(_entry("traversal.lane_sort_key", traversal.lane_sort_key))
+
+    parts.append("## Autotuning (`repro.core.tune`)\n")
+    parts.append(_doc(tune) + "\n")
+    parts.append(_entry("tune.PhaseConfig", tune.PhaseConfig, kind="class"))
+    parts.append(_entry("tune.TunedConfig", tune.TunedConfig, kind="class"))
+    parts.append(_entry("tune.TuneState", tune.TuneState, kind="class"))
+    parts.extend(_method_entries(
+        tune.TuneState, ["phase", "rank_for", "calibrate", "describe"],
+        "TuneState"))
+    for fn in (tune.mode, tune.engine_fn, tune.lane_tiles_within_budget,
+               tune.stats_key, tune.heuristic, tune.search,
+               tune.config_for):
+        parts.append(_entry(f"tune.{fn.__name__}", fn))
 
     return "\n".join(parts).rstrip() + "\n"
 

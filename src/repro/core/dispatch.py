@@ -48,7 +48,7 @@ import jax.numpy as jnp
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 
-from . import fdbscan, grid, lbvh
+from . import fdbscan, grid, lbvh, tune
 from .validate import check_points
 
 # Below this size the n^2 tile sweep is cheaper than divergent traversal
@@ -95,7 +95,8 @@ def _index_vmem_bytes(p: "Plan") -> int | None:
     return 4 * (n * d + n + 3 * m + 2 * n_nodes * d + 4 * n_nodes)
 
 
-def _maybe_pallas(p: "Plan", algorithm: str) -> "Plan":
+def _maybe_pallas(p: "Plan", algorithm: str, eps: float,
+                  min_pts: int) -> "Plan":
     """Upgrade an auto tree decision to the Pallas kernel engine on TPU.
     The kernel runs the same index with the same visitor callbacks
     (always fusible for the DBSCAN epilogues), so the upgrade changes
@@ -109,7 +110,39 @@ def _maybe_pallas(p: "Plan", algorithm: str) -> "Plan":
     stats = dict(p.stats)
     stats["reason"] = (stats.get("reason", "") +
                        "; accelerator: pallas traversal kernel")
-    return p._replace(backend="pallas-tree", stats=stats)
+    return _attach_tune(p._replace(backend="pallas-tree", stats=stats),
+                        eps, min_pts)
+
+
+def _attach_tune(p: "Plan", eps: float, min_pts: int) -> "Plan":
+    """Resolve a pallas-tree plan's tuner state (core.tune; DESIGN.md §9).
+
+    The decision rides in the plan LRU alongside the eps-independent
+    index, so repeat runs reuse it (including the depth-rank calibration
+    the first run performs). ``REPRO_TUNE=search`` configs are
+    additionally cached under the bucketed :func:`core.tune.stats_key`,
+    sharing one measured search across equal-shaped plans.
+    """
+    if p.backend != "pallas-tree" or p.tree is None:
+        return p
+    m = tune.mode()
+    if m == "search":
+        skey = ("tune-config", tune.stats_key(p.segs, eps, min_pts))
+        hit = _cache_get(skey)
+        if hit is None:
+            with obs_trace.span("tune.search"):
+                hit = _cache_put(
+                    skey, tune.search(p.segs, p.tree, eps, min_pts))
+            obs_metrics.inc("tune_searches_total")
+        cfg, info = hit
+        state = tune.TuneState(cfg)
+        state.info = dict(info)
+    else:
+        state = tune.TuneState(tune.config_for(p.segs, p.tree, eps,
+                                               min_pts, m))
+    stats = dict(p.stats)
+    stats["tuned_config"] = state.describe()
+    return p._replace(tune=state, stats=stats)
 
 
 class Plan(NamedTuple):
@@ -120,12 +153,18 @@ class Plan(NamedTuple):
     segs / tree: the segment index and its LBVH (None for the index-free
         tiled/sharded backends, and tree is None below two segments).
     stats: occupancy/size stats behind the choice; ``stats["reason"]``
-        states why this backend won.
+        states why this backend won; pallas-tree plans also record
+        ``stats["tuned_config"]``.
+    tune: the plan's ``core.tune.TuneState`` (pallas-tree only) — the
+        per-phase engine/lane-tile/unroll/reorder decision plus the
+        lazily-calibrated walk-depth oracle. Cached with the plan, so
+        repeat runs reuse both the index *and* the calibration.
     """
     backend: str
     segs: grid.Segments | None
     tree: lbvh.Tree | None
     stats: dict
+    tune: Any = None
 
 
 def _mesh_ndev(mesh, axis: str) -> int:
@@ -296,15 +335,15 @@ def _plan_impl(points, eps: float, min_pts: int, algorithm: str,
         # the Pallas traversal kernel over the plain (eps-independent,
         # cached) fdbscan index — the explicit form of the auto upgrade
         stats["reason"] = "explicit: Pallas traversal kernel"
-        return _cache_put(key,
-                          _fdbscan_plan(points, pkey, stats)._replace(
-                              backend="pallas-tree"))
+        return _cache_put(key, _attach_tune(
+            _fdbscan_plan(points, pkey, stats)._replace(
+                backend="pallas-tree"), eps, min_pts))
 
     if algorithm == "fdbscan" or d not in (2, 3):
         stats["reason"] = ("explicit" if algorithm == "fdbscan"
                            else "no eps-grid for this dimensionality")
         return _cache_put(key, _maybe_pallas(
-            _fdbscan_plan(points, pkey, stats), algorithm))
+            _fdbscan_plan(points, pkey, stats), algorithm, eps, min_pts))
 
     # eps-grid build: density probe and (potentially) the index itself
     with obs_trace.span("build", index="densebox") as sp:
@@ -318,10 +357,10 @@ def _plan_impl(points, eps: float, min_pts: int, algorithm: str,
                            else f"dense_fraction >= {DENSE_FRACTION_MIN}")
         return _cache_put(key, _maybe_pallas(
             Plan("fdbscan-densebox", segs, _tree_of(segs), stats),
-            algorithm))
+            algorithm, eps, min_pts))
     stats["reason"] = f"dense_fraction < {DENSE_FRACTION_MIN}: plain tree"
     return _cache_put(key, _maybe_pallas(
-        _fdbscan_plan(points, pkey, stats), algorithm))
+        _fdbscan_plan(points, pkey, stats), algorithm, eps, min_pts))
 
 
 def dbscan(points, eps: float, min_pts: int, *, algorithm: str = "auto",
@@ -407,9 +446,19 @@ def _execute(p: Plan, points, eps: float, min_pts: int, *, star: bool,
         # interpret=True is the CPU-test emulation path)
         return ops.dbscan_tiled(points, eps, min_pts, star=star,
                                 interpret=jax.default_backend() != "tpu")
+    if p.tune is not None:
+        # Record the decision in the metrics snapshot (DESIGN.md §12):
+        # an info-style gauge whose labels carry the per-phase choice.
+        desc = p.tune.describe()
+        for ph in ("first_pass", "sweep", "border"):
+            c = desc[ph]
+            obs_metrics.set_gauge(
+                "tuned_config_info", 1.0, phase=ph, engine=c["engine"],
+                lane_tile=str(c["lane_tile"]), unroll=str(c["unroll"]),
+                reorder=c["reorder"], source=desc["source"])
     return fdbscan.cluster_from_index(p.segs, p.tree, eps, min_pts,
                                       star=star, frontier=frontier,
-                                      backend=p.backend)
+                                      backend=p.backend, tune=p.tune)
 
 
 def stream_handle(points, eps: float, min_pts: int, *,

@@ -94,7 +94,7 @@ def _preprocess(tree, segs, eps, min_pts: int):
 
 
 @partial(jax.jit, static_argnames=("traverse_fn",))
-def _fused_first_pass_jit(tree, segs, eps, min_pts,
+def _fused_first_pass_jit(tree, segs, eps, min_pts, depth_rank=None,
                           traverse_fn=traversal.traverse):
     n = segs.n_points
     idx = jnp.arange(n, dtype=jnp.int32)
@@ -107,7 +107,8 @@ def _fused_first_pass_jit(tree, segs, eps, min_pts,
     # short-circuit for saturated lanes — the fused early exit).
     tr = traversal.fused_count_minlabel(tree, segs, eps, vals0,
                                         cap=min_pts - 1,
-                                        traverse_fn=traverse_fn)
+                                        traverse_fn=traverse_fn,
+                                        depth_rank=depth_rank)
     core = segs.dense_pt | (tr.hits >= min_pts - 1)
     # Validate the candidate: vals0 maps loose points to themselves and
     # dense points to a dense (hence core) member, so core[cand] holds iff
@@ -127,15 +128,18 @@ def _fused_first_pass_jit(tree, segs, eps, min_pts,
 
 
 def _fused_first_pass(tree, segs, eps, min_pts: int,
-                      traverse_fn=traversal.traverse):
+                      traverse_fn=traversal.traverse, depth_rank=None):
     """(core, labels0, vals0, absorbed, trace) from a single traversal.
 
     ``traverse_fn`` selects the walk's execution engine — default the
-    vmapped reference engine; the ``pallas-tree`` backend passes
-    ``repro.kernels.traverse.traverse`` (bit-identical results).
+    vmapped reference engine; the ``pallas-tree`` backend passes a
+    ``repro.kernels.traverse.traverse`` configuration (bit-identical
+    results). ``depth_rank`` is the kernel's optional lane-scheduling
+    oracle (``core.tune``); it never changes results.
     """
     return _fused_first_pass_jit(tree, segs, eps,
                                  jnp.asarray(min_pts, jnp.int32),
+                                 depth_rank,
                                  traverse_fn=traverse_fn)
 
 
@@ -179,12 +183,14 @@ def _record_trace(phase: str, engine: str, tr) -> None:
 
 
 def _gather_minlabel(tree, segs, eps, labels, gather_mask, ids,
-                     node_mask=None, traverse_fn=traversal.traverse):
+                     node_mask=None, traverse_fn=traversal.traverse,
+                     depth_rank=None):
     """One (possibly compacted/pruned) min-label sweep, full-width output."""
+    kw = {} if depth_rank is None else {"depth_rank": depth_rank}
     tr = traverse_fn(tree, segs,
                      traversal.intersects(traversal.sphere(eps), ids=ids),
                      traversal.MinLabelVisitor(labels, gather_mask),
-                     node_mask=node_mask)
+                     node_mask=node_mask, **kw)
     n = segs.n_points
     safe = jnp.where(ids >= 0, ids, jnp.int32(n))  # padding -> dropped
     gathered = jnp.full(n, INT_MAX, jnp.int32).at[safe].set(
@@ -251,7 +257,8 @@ def _near_changed(keys: np.ndarray, d: int, changed_np: np.ndarray
 
 def _sweep_to_fixpoint(tree, segs, eps, core, labels0, *,
                        frontier: bool = True, collect_stats: bool = False,
-                       fused_init=None, traverse_fn=traversal.traverse):
+                       fused_init=None, traverse_fn=traversal.traverse,
+                       tune=None):
     """Hook+jump sweeps until the core-core components stabilize.
 
     Frontier restriction (DESIGN.md §4): labels only ever decrease and the
@@ -313,15 +320,27 @@ def _sweep_to_fixpoint(tree, segs, eps, core, labels0, *,
     sweeps = 0
     stats = {"frontier_per_sweep": [], "active_per_sweep": [],
              "iters_per_sweep": [], "evals_per_sweep": []}
-    engine = _engine_name(traverse_fn)
     while True:
+        # Per-sweep engine resolution (core.tune): the compacted lane
+        # count shrinks as the frontier drains, and small batches run the
+        # reference engine. The padded id length is a host-known shape,
+        # so no device sync is added.
+        sweep_fn, rank_kw = traverse_fn, {}
+        if tune is not None:
+            from . import tune as tune_mod
+            cfg = tune.phase("sweep", n_lanes=int(ids.shape[0]))
+            sweep_fn = tune_mod.engine_fn(cfg)
+            rank = tune.rank_for(cfg)
+            if rank is not None:
+                rank_kw = {"depth_rank": rank}
+        engine = _engine_name(sweep_fn)
         with obs_trace.span("sweep", i=sweeps + 1, engine=engine) as sp:
-            tr = traverse_fn(
+            tr = sweep_fn(
                 tree, segs,
                 traversal.intersects(traversal.sphere(eps), ids=ids),
                 traversal.MinLabelVisitor(labels, gather_mask,
                                           mask_wide=gather_wide),
-                node_mask=node_mask, **(dual or {}))
+                node_mask=node_mask, **(dual or {}), **rank_kw)
             dual = None           # only the first sweep may be split
             gather_wide = None
             new, changed, changed_flags = _post_sweep(tree, segs, labels,
@@ -366,18 +385,26 @@ def _main_phase(tree, segs, eps, core, *, frontier: bool = True):
 
 
 def _assign_borders(tree, segs, eps, core, core_labels,
-                    traverse_fn=traversal.traverse):
+                    traverse_fn=traversal.traverse, tune=None):
     """Borders take the min adjacent core root; isolated non-core -> noise.
 
     Traverses a compacted non-core query set (usually a small minority),
     pruning subtrees that hold no core point (nothing to gather there).
     """
     ids = _compact_ids(np.asarray(~core))
+    depth_rank = None
+    if tune is not None:
+        from . import tune as tune_mod
+        cfg = tune.phase("border", n_lanes=int(ids.shape[0]),
+                         n=int(segs.n_points))
+        traverse_fn = tune_mod.engine_fn(cfg)
+        depth_rank = tune.rank_for(cfg)
     vals = jnp.where(core, core_labels, jnp.int32(INT_MAX))
     gathered, tr = _gather_minlabel(tree, segs, eps, vals, core, ids,
                                     node_mask=_frontier_node_mask(tree, segs,
                                                                   core),
-                                    traverse_fn=traverse_fn)
+                                    traverse_fn=traverse_fn,
+                                    depth_rank=depth_rank)
     _record_trace("border", _engine_name(traverse_fn), tr)
     labels = jnp.where(core, core_labels, gathered)
     return jnp.where(labels == INT_MAX, jnp.int32(-1), labels)
@@ -399,7 +426,8 @@ def _finalize(labels_sorted, order, n):
 
 def cluster_from_index(segs: grid.Segments, tree, eps: float, min_pts: int,
                        *, star: bool = False, frontier: bool = True,
-                       backend: str = "", with_stats: bool = False):
+                       backend: str = "", with_stats: bool = False,
+                       tune=None):
     """Run the clustering phases over a prebuilt (segments, tree) index.
 
     ``tree`` may be None when ``segs.n_segments == 1`` (single dense cell).
@@ -408,7 +436,11 @@ def cluster_from_index(segs: grid.Segments, tree, eps: float, min_pts: int,
     ``backend="pallas-tree"`` runs every traversal through the Pallas
     kernel engine (``repro.kernels.traverse``; DESIGN.md §9) — labels,
     core masks, and sweep counts are bit-identical to the reference
-    engine, only the walk's lowering changes.
+    engine, only the walk's lowering changes. ``tune`` is an optional
+    ``core.tune.TuneState`` selecting per-phase engine/lane-tile/unroll/
+    reordering (the dispatcher attaches the plan's state; ``None`` with
+    the pallas backend derives one from the ``REPRO_TUNE`` mode); tuning
+    changes the schedule only, never the results.
     """
     n = segs.n_points
     stats: dict = {}
@@ -416,7 +448,13 @@ def cluster_from_index(segs: grid.Segments, tree, eps: float, min_pts: int,
     traverse_fn = traversal.traverse
     if backend == "pallas-tree":
         from repro.kernels import traverse as pallas_traverse
+        from . import tune as tune_mod
         traverse_fn = pallas_traverse.traverse
+        if tune is None and tree is not None:
+            tune = tune_mod.TuneState(
+                tune_mod.config_for(segs, tree, eps, min_pts))
+    else:
+        tune = None
     if n == 1:
         noise = min_pts > 1
         res = DBSCANResult(labels=jnp.array([-1 if noise else 0], jnp.int32),
@@ -435,16 +473,27 @@ def cluster_from_index(segs: grid.Segments, tree, eps: float, min_pts: int,
 
     # Fused first pass: neighbor count + hooked labels in ONE traversal
     # (the seed spent two: a count pass and the first min-label sweep).
-    engine = _engine_name(traverse_fn)
+    fp_fn, fp_rank = traverse_fn, None
+    if tune is not None:
+        fp_cfg = tune.phase("first_pass")
+        fp_fn = tune_mod.engine_fn(fp_cfg)
+        fp_rank = tune.rank_for(fp_cfg)
+    engine = _engine_name(fp_fn)
     with obs_trace.span("traverse", phase="first_pass", engine=engine) as sp:
         core, labels0, vals0, absorbed, first = _fused_first_pass(
-            tree, segs, eps, min_pts, traverse_fn=traverse_fn)
+            tree, segs, eps, min_pts, traverse_fn=fp_fn,
+            depth_rank=fp_rank)
         sp.watch(core, labels0)
     _record_trace("first_pass", engine, first)
+    if tune is not None:
+        # The pass's per-query loop-trip counts are the depth oracle for
+        # every later reorder="depth" traversal over this plan (free: the
+        # kernel returns iters anyway).
+        tune.calibrate(first.iters)
     core_labels, loop_sweeps, sweep_stats = _sweep_to_fixpoint(
         tree, segs, eps, core, labels0, frontier=frontier,
         collect_stats=with_stats, fused_init=(vals0, absorbed),
-        traverse_fn=traverse_fn)
+        traverse_fn=traverse_fn, tune=tune)
     n_sweeps = 1 + loop_sweeps          # the fused pass is sweep #1
     n_traversals = n_sweeps
 
@@ -454,7 +503,8 @@ def cluster_from_index(segs: grid.Segments, tree, eps: float, min_pts: int,
         with obs_trace.span("border", engine=engine) as sp:
             labels_sorted = _assign_borders(tree, segs, eps, core,
                                             core_labels,
-                                            traverse_fn=traverse_fn)
+                                            traverse_fn=traverse_fn,
+                                            tune=tune)
             sp.watch(labels_sorted)
         n_traversals += 1
 

@@ -69,6 +69,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from . import morton
 from .lbvh import Tree, box_dist2 as _box_dist2
 from .grid import Segments
 
@@ -517,6 +518,50 @@ def lane_arrays(segs: Segments, predicates, use_range_mask: bool = False):
             is_nearest)
 
 
+def lane_sort_key(reorder: str, query_ids, q_arr, external: bool,
+                  depth_rank=None):
+    """Per-lane sort key for divergence-aware lane reordering.
+
+    The lane-tiled Pallas kernel retires a tile only when its *slowest*
+    lane finishes, so wall clock is the sum of per-tile max walk depths.
+    Sorting lanes so that similar-depth walks share a tile minimizes that
+    sum without changing any per-lane result (the kernel applies the
+    inverse permutation on exit — DESIGN.md §9). Policies:
+
+      * ``"none"``   — no key (identity; today's launch order).
+      * ``"morton"`` — the query points' Morton codes: lanes in a tile
+        walk spatially-correlated subtrees (the ArborX pre-sort). The
+        only option for external/halo batches, whose queries are not
+        tree-resident.
+      * ``"depth"``  — descending ``depth_rank[query_id]``, where
+        ``depth_rank`` is the measured per-query loop-trip count of a
+        prior pass over the same index (``Trace.iters`` of the fused
+        first pass). Groups equal-depth walks directly instead of using
+        locality as a proxy. Falls back to Morton for external batches
+        and to identity when no rank is available (resident lanes are
+        already Morton-ordered: ``segs.pts`` is Z-order sorted and
+        compacted id vectors are ascending).
+
+    Returns the key array, or ``None`` when reordering is the identity.
+    Dead lanes (``query_ids < 0``) get the maximum key so they pack into
+    all-dead tiles that retire immediately.
+    """
+    if reorder in (None, "none"):
+        return None
+    if reorder not in ("morton", "depth"):
+        raise ValueError(
+            f"reorder must be 'none', 'morton' or 'depth'; got {reorder!r}")
+    live = query_ids >= 0
+    if reorder == "depth" and not external:
+        if depth_rank is None:
+            return None
+        safe = jnp.maximum(query_ids, jnp.int32(0))
+        depth = depth_rank[safe].astype(jnp.int32)
+        return jnp.where(live, -depth, jnp.int32(INT_MAX))
+    codes = morton.morton_encode(q_arr)
+    return jnp.where(live, codes, jnp.uint32(0xFFFFFFFF))
+
+
 def make_step(tree: Tree, segs: Segments, callback, *, q, ctx: QueryCtx,
               lane_wide, r2, is_nearest: bool,
               node_mask=None, node_mask_wide=None,
@@ -750,7 +795,7 @@ def minlabel_sweep(tree: Tree, segs: Segments, eps: float, labels: jax.Array,
 def fused_count_minlabel(tree: Tree, segs: Segments, eps: float,
                          point_vals: jax.Array, point_mask=None,
                          query_ids=None, cap: int | jax.Array = INT_MAX,
-                         traverse_fn=None) -> Trace:
+                         traverse_fn=None, depth_rank=None) -> Trace:
     """The fused first pass (DESIGN.md §4): one walk, two answers.
 
     Returns the full ``Trace``: ``acc`` is the min gathered value over all
@@ -766,8 +811,13 @@ def fused_count_minlabel(tree: Tree, segs: Segments, eps: float,
         point_mask = jnp.ones(segs.n_points, bool)
     if traverse_fn is None:   # the one place the engine default resolves
         traverse_fn = traverse
+    # depth_rank is a kernel-only lane-scheduling hint (the reference
+    # engine has no lane tiles to pack); forwarded only when present so
+    # reference traverse_fn signatures stay unchanged.
+    kw = {} if depth_rank is None else {"depth_rank": depth_rank}
     return traverse_fn(tree, segs, intersects(sphere(eps), ids=query_ids),
-                       CountMinLabelVisitor(point_vals, point_mask, cap=cap))
+                       CountMinLabelVisitor(point_vals, point_mask, cap=cap),
+                       **kw)
 
 
 def border_gather(tree: Tree, segs: Segments, eps: float, root_labels,

@@ -49,7 +49,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
-from repro.core import traversal
+from repro.core import morton, traversal
 from repro.core.grid import Segments
 from repro.core.lbvh import Tree
 from .pairwise import SMEM, CompilerParams
@@ -80,6 +80,7 @@ class _Cfg(NamedTuple):
     has_node_mask: bool
     dual_nodes: bool        # node_mask_wide present
     dual_gather: bool       # MinLabelVisitor.mask_wide present
+    reorder: bool = False   # lane permutation by sort key (DESIGN.md §9)
 
 
 def fusible(predicates, callback) -> bool:
@@ -189,12 +190,24 @@ def _walk_kernel(*refs, cfg: _Cfg):
 @functools.partial(jax.jit,
                    static_argnames=("cfg", "lane_tile", "interpret"))
 def _run(cfg: _Cfg, lane_tile: int, interpret: bool,
-         q, qid, self_id, dense, rank, wide, acc0, hits0,
+         q, qid, self_id, dense, rank, wide, acc0, hits0, sort_key,
          pts, seg_start, seg_end, dense_seg, left, miss, range_r,
          box_lo, box_hi, node_mask, node_mask_wide, vals, mask, mask_wide,
          r2, cap):
     """Pad the lane axis, assemble block specs, and launch the kernel."""
     L = qid.shape[0]
+    if cfg.reorder:
+        # Permute lanes by sort_key so each tile walks correlated
+        # subtrees; dead lanes carry the max key, packing them into
+        # all-dead tiles that retire immediately. argsort is stable, so
+        # equal keys keep lane order; the inverse permutation below makes
+        # every per-lane output bit-identical to the unpermuted launch
+        # (per-lane state never crosses lanes — DESIGN.md §9).
+        perm = jnp.argsort(sort_key)
+        inv = jnp.argsort(perm)
+        q, qid, self_id, dense, rank, wide, acc0, hits0 = (
+            x[perm] for x in (q, qid, self_id, dense, rank, wide,
+                              acc0, hits0))
     Lp = -(-L // lane_tile) * lane_tile
     d = pts.shape[1]
 
@@ -259,14 +272,18 @@ def _run(cfg: _Cfg, lane_tile: int, interpret: bool,
         compiler_params=CompilerParams(dimension_semantics=("parallel",)),
         interpret=interpret,
     )(*operands)
-    return acc[:L], hits[:L], evals[:L], iters[:L]
+    outs = (acc[:L], hits[:L], evals[:L], iters[:L])
+    if cfg.reorder:
+        outs = tuple(x[inv] for x in outs)
+    return outs
 
 
 def traverse(tree: Tree, segs: Segments, predicates, callback, carry=None,
              node_mask=None, node_mask_wide=None, wide_lanes=None,
              use_range_mask: bool = False, unroll: int | None = None,
              lane_tile: int = LANE_TILE,
-             interpret: bool | None = None) -> traversal.Trace:
+             interpret: bool | None = None, reorder: str = "none",
+             depth_rank=None) -> traversal.Trace:
     """Drop-in Pallas replacement for :func:`repro.core.traversal.traverse`.
 
     Runs the rope-based BVH walk as a lane-tiled Pallas kernel when the
@@ -292,6 +309,20 @@ def traverse(tree: Tree, segs: Segments, predicates, callback, carry=None,
         lane_tile: queries per kernel block (default :data:`LANE_TILE`).
         interpret: force Pallas interpret mode; default auto — compiled
             on TPU, interpreted elsewhere (the CPU CI path).
+        reorder: lane-permutation policy — ``"none"`` (default, today's
+            launch order), ``"morton"`` (sort lanes by the query points'
+            Morton code so a tile walks correlated subtrees), or
+            ``"depth"`` (sort by descending ``depth_rank``, the measured
+            per-query walk depth from a prior pass — the strongest
+            divergence remedy; falls back to Morton for external batches
+            and to identity when no rank is available). Results are
+            bit-identical for every policy: per-lane walk state never
+            crosses lanes, and the inverse permutation is applied to all
+            per-lane outputs on exit (see :func:`repro.core.traversal.\
+lane_sort_key` and DESIGN.md §9).
+        depth_rank: optional ``(n_points,)`` int32 of per-query walk
+            depth (e.g. ``Trace.iters`` from the fused first pass),
+            indexed by sorted point id; used only by ``reorder="depth"``.
 
     Returns:
         A :class:`~repro.core.traversal.Trace` whose ``carry`` is an
@@ -324,11 +355,14 @@ def traverse(tree: Tree, segs: Segments, predicates, callback, carry=None,
             traversal.CountMinLabelVisitor: "countminlabel"}[type(callback)]
     dual_gather = (kind == "minlabel"
                    and callback.mask_wide is not None)
+    sort_key = traversal.lane_sort_key(reorder, query_ids, q_arr, external,
+                                       depth_rank)
     cfg = _Cfg(kind=kind, unroll=int(unroll),
                use_range_mask=bool(use_range_mask),
                has_node_mask=node_mask is not None,
                dual_nodes=node_mask_wide is not None,
-               dual_gather=dual_gather)
+               dual_gather=dual_gather,
+               reorder=sort_key is not None)
 
     cap = getattr(callback, "cap", INT_MAX)
     vals = getattr(callback, "vals", None)
@@ -348,7 +382,7 @@ def traverse(tree: Tree, segs: Segments, predicates, callback, carry=None,
     acc, hits, evals, iters = _run(
         cfg, int(lane_tile), bool(interpret),
         q_arr, query_ids, self_arr, dense_arr, rank_arr, wide_lanes,
-        carry.acc, carry.hits,
+        carry.acc, carry.hits, sort_key,
         segs.pts, segs.seg_start, segs.seg_end, segs.dense_seg,
         tree.left, tree.miss, tree.range_r if cfg.use_range_mask else None,
         tree.box_lo, tree.box_hi, node_mask, node_mask_wide,

@@ -1,0 +1,232 @@
+"""Divergence-aware lane reordering (DESIGN.md §9): the permutation
+contract, pinned bit-for-bit.
+
+The Pallas kernel may permute lanes before the walk — Morton order so a
+tile visits correlated subtrees, or measured-depth order from a prior
+pass — and must apply the inverse permutation to every per-lane output
+on exit. The contract under test: *any* query permutation composed with
+*any* reorder policy is bit-identical to the unpermuted reference
+engine, for every batch shape the pipeline produces (resident full
+batches, frontier-compacted id batches with dead-lane padding,
+external/halo point batches) and every fusible visitor. The end-to-end
+half pins the tuned pipeline (heuristic mode: reorder on, calibrated
+depth oracle on the second run) against the golden fixtures.
+"""
+import os
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import dispatch, grid, lbvh, traversal
+from repro.data import pointclouds
+from repro.kernels import traverse as kt
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+GOLDEN = np.load(os.path.join(HERE, "golden", "golden.npz"))
+
+# (eps, min_pts) per scenario dataset; small n — the kernel runs in
+# interpret mode on CPU and every test below walks the tree many times
+SCENARIOS = {
+    "ngsim_like": (0.02, 5),
+    "portotaxi_like": (0.04, 5),
+    "road3d_like": (0.03, 5),
+    "hacc_like": (0.08, 5),
+    "blobs": (0.08, 8),
+}
+N = 300
+
+# must match tests/golden/make_golden.py (same as test_golden.SCENARIOS)
+GOLDEN_SCENARIOS = [
+    ("ngsim_like", 800, 0.01, 5),
+    ("portotaxi_like", 800, 0.02, 5),
+    ("road3d_like", 800, 0.01, 5),
+    ("hacc_like", 800, 0.05, 5),
+    ("blobs", 800, 0.05, 8),
+]
+
+VISITORS = ["count", "minlabel", "countminlabel"]
+BATCHES = ["resident", "compacted", "external"]
+POLICIES = ["morton", "depth"]
+
+
+@pytest.fixture(scope="module", params=sorted(SCENARIOS))
+def case(request):
+    dset = request.param
+    eps, mp = SCENARIOS[dset]
+    pts = jnp.asarray(pointclouds.load(dset, N))
+    segs = grid.build_segments_fdbscan(pts)
+    tree = lbvh.build_tree(segs.codes, segs.prim_lo, segs.prim_hi)
+    # depth oracle exactly as the tuner calibrates it: per-query loop
+    # trips of a full pass over the same index, indexed by sorted id
+    rank = traversal.traverse(
+        tree, segs, traversal.intersects(traversal.sphere(eps)),
+        traversal.CountVisitor(cap=traversal.INT_MAX)).iters
+    return segs, tree, eps, mp, rank
+
+
+def _visitor(name, segs, mp):
+    n = segs.n_points
+    vals = jnp.arange(n, dtype=jnp.int32)
+    mask = jnp.asarray(np.arange(n) % 2 == 0)
+    if name == "count":
+        return traversal.CountVisitor(cap=mp)
+    if name == "minlabel":
+        return traversal.MinLabelVisitor(vals, mask)
+    return traversal.CountMinLabelVisitor(vals, mask, cap=mp - 1)
+
+
+def _batch(name, segs, tree, eps):
+    """(predicate, extra-kwargs) for one batch shape."""
+    rng = np.random.default_rng(3)
+    if name == "resident":
+        return traversal.intersects(traversal.sphere(eps)), {}
+    if name == "compacted":
+        # frontier shape: compacted ids with -1 dead-lane padding plus a
+        # descent-pruning node mask (the sweep's frontier restriction)
+        n = segs.n_points
+        ids = np.full(192, -1, np.int32)
+        ids[:160] = rng.choice(n, 160, replace=False)
+        nm = lbvh.propagate_leaf_flags(
+            tree, jnp.asarray(np.arange(segs.n_segments) % 3 != 0))
+        return (traversal.intersects(traversal.sphere(eps),
+                                     ids=jnp.asarray(ids)),
+                {"node_mask": nm})
+    # external/halo: queries not resident in the tree (stream/sharded)
+    d = segs.pts.shape[1]
+    qpts = jnp.asarray(rng.uniform(0, 1, (117, d)).astype(np.float32))
+    return traversal.intersects(traversal.sphere(2 * eps), pts=qpts), {}
+
+
+def _assert_equal(ref, pal, iters_too=False):
+    np.testing.assert_array_equal(np.asarray(ref.acc), np.asarray(pal.acc))
+    np.testing.assert_array_equal(np.asarray(ref.hits), np.asarray(pal.hits))
+    np.testing.assert_array_equal(np.asarray(ref.evals),
+                                  np.asarray(pal.evals))
+    if iters_too:
+        np.testing.assert_array_equal(np.asarray(ref.iters),
+                                      np.asarray(pal.iters))
+
+
+@pytest.mark.parametrize("visitor", VISITORS)
+@pytest.mark.parametrize("batch", BATCHES)
+def test_reorder_bit_identical(case, batch, visitor):
+    # every policy vs the reference engine (acc/hits/evals exact) AND vs
+    # the unreordered kernel with per-lane iters exact: reordering only
+    # changes the schedule, never any lane-intrinsic output
+    segs, tree, eps, mp, rank = case
+    pred, kw = _batch(batch, segs, tree, eps)
+    cb = _visitor(visitor, segs, mp)
+    ref = traversal.traverse(tree, segs, pred, cb, **kw)
+    base = kt.traverse(tree, segs, pred, cb, reorder="none", **kw)
+    _assert_equal(ref, base)
+    for policy in POLICIES:
+        pal = kt.traverse(tree, segs, pred, cb, reorder=policy,
+                          depth_rank=rank, **kw)
+        _assert_equal(ref, pal)
+        _assert_equal(base, pal, iters_too=True)
+
+
+def test_depth_without_rank_is_identity_for_resident(case):
+    # uncalibrated depth reorder (first run of a plan): resident batches
+    # fall back to identity, external batches to Morton — both exact
+    segs, tree, eps, mp, rank = case
+    cb = traversal.CountVisitor(cap=mp)
+    for batch in ("resident", "external"):
+        pred, kw = _batch(batch, segs, tree, eps)
+        ref = traversal.traverse(tree, segs, pred, cb, **kw)
+        pal = kt.traverse(tree, segs, pred, cb, reorder="depth",
+                          depth_rank=None, **kw)
+        _assert_equal(ref, pal)
+
+
+@pytest.mark.parametrize("policy", ["none"] + POLICIES)
+def test_query_permutation_composes(case, policy):
+    # permuting the lane batch commutes with the reorder: lane i of the
+    # output always belongs to query i of the (permuted) batch
+    segs, tree, eps, mp, rank = case
+    n = segs.n_points
+    rng = np.random.default_rng(11)
+    live = rng.choice(n, 160, replace=False).astype(np.int32)
+    cb = traversal.MinLabelVisitor(jnp.arange(n, dtype=jnp.int32),
+                                   jnp.asarray(np.arange(n) % 2 == 0))
+    ref = traversal.traverse(
+        tree, segs,
+        traversal.intersects(traversal.sphere(eps), ids=jnp.asarray(live)),
+        cb)
+    for trial in range(2):
+        perm = rng.permutation(live.shape[0])
+        pal = kt.traverse(
+            tree, segs,
+            traversal.intersects(traversal.sphere(eps),
+                                 ids=jnp.asarray(live[perm])),
+            cb, reorder=policy, depth_rank=rank)
+        np.testing.assert_array_equal(np.asarray(pal.acc),
+                                      np.asarray(ref.acc)[perm])
+        np.testing.assert_array_equal(np.asarray(pal.hits),
+                                      np.asarray(ref.hits)[perm])
+        np.testing.assert_array_equal(np.asarray(pal.evals),
+                                      np.asarray(ref.evals)[perm])
+
+
+def test_external_permutation_composes(case):
+    # same composition law for external/halo batches (Morton key path)
+    segs, tree, eps, mp, rank = case
+    d = segs.pts.shape[1]
+    rng = np.random.default_rng(5)
+    qpts = rng.uniform(0, 1, (117, d)).astype(np.float32)
+    cb = traversal.CountVisitor(cap=traversal.INT_MAX)
+    ref = kt.traverse(tree, segs,
+                      traversal.intersects(traversal.sphere(2 * eps),
+                                           pts=jnp.asarray(qpts)),
+                      cb, reorder="none")
+    perm = rng.permutation(qpts.shape[0])
+    pal = kt.traverse(tree, segs,
+                      traversal.intersects(traversal.sphere(2 * eps),
+                                           pts=jnp.asarray(qpts[perm])),
+                      cb, reorder="morton")
+    np.testing.assert_array_equal(np.asarray(pal.acc),
+                                  np.asarray(ref.acc)[perm])
+    np.testing.assert_array_equal(np.asarray(pal.hits),
+                                  np.asarray(ref.hits)[perm])
+
+
+def test_bad_policy_rejected(case):
+    segs, tree, eps, mp, _ = case
+    with pytest.raises(ValueError, match="reorder"):
+        kt.traverse(tree, segs,
+                    traversal.intersects(traversal.sphere(eps)),
+                    traversal.CountVisitor(cap=mp), reorder="zorder")
+
+
+# --------------------------------------------------------------------- #
+# end-to-end: the tuned pipeline (reorder on) vs the golden fixtures    #
+# --------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("dset", [c[0] for c in GOLDEN_SCENARIOS])
+def test_e2e_tuned_reorder_golden(dset, monkeypatch):
+    # heuristic mode turns reordering on (depth, Morton fallback) and the
+    # small-frontier reference fallback; run the same plan twice so both
+    # the uncalibrated first run and the calibrated second run (depth
+    # oracle live) are pinned against the goldens
+    monkeypatch.setenv("REPRO_TUNE", "heuristic")
+    dset, n, eps, mp = next(c for c in GOLDEN_SCENARIOS if c[0] == dset)
+    pts = pointclouds.load(dset, n)
+    dispatch.clear_cache()
+    try:
+        p = dispatch.plan(pts, eps, mp, algorithm="pallas-tree")
+        assert p.tune is not None
+        assert p.tune.config.source == "heuristic"
+        assert p.stats["tuned_config"]["source"] == "heuristic"
+        for run in range(2):
+            res = dispatch.dbscan(pts, eps, mp, query_plan=p)
+            np.testing.assert_array_equal(np.asarray(res.labels),
+                                          GOLDEN[f"{dset}/fdbscan/labels"])
+            np.testing.assert_array_equal(np.asarray(res.core_mask),
+                                          GOLDEN[f"{dset}/fdbscan/core"])
+            assert res.n_clusters == int(
+                GOLDEN[f"{dset}/fdbscan/n_clusters"])
+            assert res.n_sweeps == int(GOLDEN[f"{dset}/fdbscan/n_sweeps"])
+        assert p.tune.depth_rank is not None    # calibration happened
+    finally:
+        dispatch.clear_cache()

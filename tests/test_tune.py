@@ -1,0 +1,213 @@
+"""Autotuner conformance (repro.core.tune, DESIGN.md §9).
+
+Tuning changes only the *schedule* — engine choice, lane tile, unroll,
+lane order — so every point of the config space must be bit-identical.
+The grid test sweeps the full (LANE_TILE, K) candidate grid through the
+end-to-end pipeline against the golden fixtures; the pin tests check
+that ``REPRO_TUNE=off`` reproduces today's (128, 4) kernel behavior
+*exactly* (down to jit-cache function identity); the unit tests cover
+mode parsing, the stats-bucketed search cache key, and the per-phase
+engine fallbacks.
+"""
+import os
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import dispatch, fdbscan, grid, lbvh, traversal
+from repro.core import tune as tune_mod
+from repro.data import pointclouds
+from repro.kernels import traverse as kt
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+GOLDEN = np.load(os.path.join(HERE, "golden", "golden.npz"))
+
+# the portotaxi golden scenario (tests/golden/make_golden.py)
+DSET, N, EPS, MINPTS = "portotaxi_like", 800, 0.02, 5
+
+
+@pytest.fixture(scope="module")
+def index():
+    pts = jnp.asarray(pointclouds.load(DSET, N))
+    segs = grid.build_segments_fdbscan(pts)
+    tree = lbvh.build_tree(segs.codes, segs.prim_lo, segs.prim_hi)
+    return segs, tree
+
+
+def _forced(lane_tile, unroll):
+    """A TuneState running every phase at one (lane_tile, unroll)."""
+    fp = tune_mod.PhaseConfig("pallas", lane_tile, unroll, "morton")
+    sw = tune_mod.PhaseConfig("pallas", lane_tile, unroll, "depth")
+    bd = tune_mod.PhaseConfig("pallas", lane_tile, unroll, "none")
+    return tune_mod.TuneState(tune_mod.TunedConfig(
+        first_pass=fp, sweep=sw, border=bd,
+        min_lanes=0, border_min_frac=0.0, source="grid"))
+
+
+@pytest.mark.parametrize("unroll", tune_mod.TUNE_UNROLLS)
+@pytest.mark.parametrize("lane_tile", tune_mod.TUNE_LANE_TILES)
+def test_config_grid_bit_identical(index, lane_tile, unroll):
+    # the full candidate grid, end to end: labels, core mask, cluster and
+    # sweep counts byte-equal to the goldens at every (LANE_TILE, K) —
+    # with reordering on (morton first pass, calibrated depth sweeps)
+    segs, tree = index
+    res = fdbscan.cluster_from_index(segs, tree, EPS, MINPTS,
+                                     backend="pallas-tree",
+                                     tune=_forced(lane_tile, unroll))
+    np.testing.assert_array_equal(np.asarray(res.labels),
+                                  GOLDEN[f"{DSET}/fdbscan/labels"])
+    np.testing.assert_array_equal(np.asarray(res.core_mask),
+                                  GOLDEN[f"{DSET}/fdbscan/core"])
+    assert res.n_clusters == int(GOLDEN[f"{DSET}/fdbscan/n_clusters"])
+    assert res.n_sweeps == int(GOLDEN[f"{DSET}/fdbscan/n_sweeps"])
+
+
+@pytest.mark.parametrize("lane_tile", tune_mod.TUNE_LANE_TILES)
+def test_config_grid_counts_bit_identical(index, lane_tile):
+    # kernel-level half: exact uncapped neighbor counts at every lane
+    # tile (unroll sweeps ride the e2e grid test above)
+    segs, tree = index
+    pred = traversal.intersects(traversal.sphere(EPS))
+    cb = traversal.CountVisitor(cap=traversal.INT_MAX)
+    tr = kt.traverse(tree, segs, pred, cb, lane_tile=lane_tile,
+                     reorder="morton")
+    counts = np.zeros(N, np.int64)
+    counts[np.asarray(segs.order)] = np.asarray(tr.acc)
+    np.testing.assert_array_equal(counts, GOLDEN[f"{DSET}/counts"])
+
+
+# --------------------------------------------------------------------- #
+# REPRO_TUNE=off: the deterministic pin                                 #
+# --------------------------------------------------------------------- #
+
+def test_off_pin_is_todays_kernel_identity():
+    # the pinned default config must resolve to the *same function
+    # object* as the bare kernel entry — same jit static-arg identity,
+    # same compile cache entries as before the tuner existed
+    assert tune_mod.PINNED.first_pass == tune_mod.PhaseConfig(
+        "pallas", 128, 4, "none")
+    assert tune_mod.engine_fn(tune_mod.PhaseConfig()) is kt.traverse
+    assert tune_mod.engine_fn(
+        tune_mod.PhaseConfig("reference")) is traversal.traverse
+
+
+def test_off_pin_e2e_golden(monkeypatch):
+    monkeypatch.setenv("REPRO_TUNE", "off")
+    pts = pointclouds.load(DSET, N)
+    dispatch.clear_cache()
+    try:
+        p = dispatch.plan(pts, EPS, MINPTS, algorithm="pallas-tree")
+        assert p.tune is not None
+        assert p.tune.config == tune_mod.PINNED
+        assert p.stats["tuned_config"]["source"] == "pinned"
+        res = dispatch.dbscan(pts, EPS, MINPTS, query_plan=p)
+        np.testing.assert_array_equal(np.asarray(res.labels),
+                                      GOLDEN[f"{DSET}/fdbscan/labels"])
+        np.testing.assert_array_equal(np.asarray(res.core_mask),
+                                      GOLDEN[f"{DSET}/fdbscan/core"])
+        assert res.n_sweeps == int(GOLDEN[f"{DSET}/fdbscan/n_sweeps"])
+        # pinned mode never calibrates: no oracle, no reordering, ever
+        assert p.tune.depth_rank is None
+    finally:
+        dispatch.clear_cache()
+
+
+def test_mode_parsing(monkeypatch):
+    for raw, want in [("off", "off"), ("0", "off"), ("none", "off"),
+                      ("pinned", "off"), ("OFF", "off"),
+                      ("search", "search"), ("heuristic", "heuristic"),
+                      ("banana", "heuristic")]:
+        monkeypatch.setenv("REPRO_TUNE", raw)
+        assert tune_mod.mode() == want
+    monkeypatch.delenv("REPRO_TUNE", raising=False)
+    assert tune_mod.mode() == "heuristic"
+
+
+# --------------------------------------------------------------------- #
+# unit: stats key, budget cap, per-phase fallbacks                      #
+# --------------------------------------------------------------------- #
+
+def test_stats_key_buckets(index):
+    segs, _ = index
+    k1 = tune_mod.stats_key(segs, EPS, MINPTS)
+    assert k1 == tune_mod.stats_key(segs, EPS, MINPTS)
+    assert all(isinstance(v, int) for v in k1)
+    assert k1 != tune_mod.stats_key(segs, EPS, MINPTS + 1)
+    small = jnp.asarray(pointclouds.load(DSET, 100))
+    segs_small = grid.build_segments_fdbscan(small)
+    assert tune_mod.stats_key(segs_small, EPS, MINPTS) != k1
+
+
+def test_lane_tiles_within_budget():
+    assert tune_mod.lane_tiles_within_budget(0) == tune_mod.TUNE_LANE_TILES
+    # an index filling the whole budget still yields one candidate
+    assert tune_mod.lane_tiles_within_budget(
+        tune_mod.VMEM_BUDGET_BYTES * 2) == tune_mod.TUNE_LANE_TILES[:1]
+
+
+def test_phase_fallbacks():
+    st = tune_mod.TuneState(tune_mod.TunedConfig(
+        first_pass=tune_mod.PhaseConfig("pallas", 256, 1, "depth"),
+        sweep=tune_mod.PhaseConfig("pallas", 256, 1, "depth"),
+        border=tune_mod.PhaseConfig("auto", 256, 1, "none"),
+        min_lanes=256, border_min_frac=0.9, source="heuristic"))
+    # small compacted frontiers drop to the reference engine
+    assert st.phase("sweep", n_lanes=64).engine == "reference"
+    assert st.phase("sweep", n_lanes=512).engine == "pallas"
+    # auto border: kernel only when most lanes are live
+    assert st.phase("border", n_lanes=100, n=1000).engine == "reference"
+    assert st.phase("border", n_lanes=950, n=1000).engine == "pallas"
+    # the depth oracle is handed out only to depth-reordering kernels
+    assert st.rank_for(st.phase("sweep", n_lanes=512)) is None
+    st.calibrate(jnp.arange(4))
+    assert st.rank_for(st.phase("sweep", n_lanes=512)) is not None
+    assert st.rank_for(st.phase("border", n_lanes=950, n=1000)) is None
+    d = st.describe()
+    assert d["source"] == "heuristic" and d["calibrated"]
+    assert d["sweep"]["lane_tile"] == 256
+
+
+def test_pinned_never_calibrates():
+    st = tune_mod.TuneState(tune_mod.PINNED)
+    st.calibrate(jnp.arange(4))
+    assert st.depth_rank is None
+
+
+# --------------------------------------------------------------------- #
+# measured search: smoke + stats-key cache                              #
+# --------------------------------------------------------------------- #
+
+def test_search_mode_cached_and_bit_identical(monkeypatch):
+    monkeypatch.setenv("REPRO_TUNE", "search")
+    calls = []
+    orig = tune_mod.search
+
+    def counting_search(*a, **kw):
+        calls.append(1)
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(tune_mod, "search", counting_search)
+    pts = pointclouds.load("blobs", 300)
+    dispatch.clear_cache()
+    try:
+        ref = dispatch.dbscan(pts, 0.05, 8, algorithm="fdbscan")
+        p = dispatch.plan(pts, 0.05, 8, algorithm="pallas-tree")
+        assert p.tune.config.source == "search"
+        assert "timings" in p.tune.info and "mean_hits" in p.tune.info
+        assert len(calls) == 1
+        res = dispatch.dbscan(pts, 0.05, 8, query_plan=p)
+        np.testing.assert_array_equal(np.asarray(res.labels),
+                                      np.asarray(ref.labels))
+        np.testing.assert_array_equal(np.asarray(res.core_mask),
+                                      np.asarray(ref.core_mask))
+        assert (res.n_clusters, res.n_sweeps) == (ref.n_clusters,
+                                                  ref.n_sweeps)
+        # a permuted copy of the same point set has identical index
+        # stats: the plan is new, but the search result is reused
+        p2 = dispatch.plan(pts[::-1].copy(), 0.05, 8,
+                           algorithm="pallas-tree")
+        assert p2.tune.config == p.tune.config
+        assert len(calls) == 1
+    finally:
+        dispatch.clear_cache()
